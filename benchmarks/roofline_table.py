@@ -1,0 +1,72 @@
+"""Assemble the §Roofline table from the dry-run result JSONs
+(results/dryrun/*.json). Read-only: run `python -m repro.launch.dryrun`
+first (this is enforced with a helpful message)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+COLS = ("arch", "shape", "mesh", "dom", "comp_ms", "mem_ms", "coll_ms",
+        "frac", "useful", "GiB/dev")
+
+
+def load(mesh: str = "single") -> List[Dict]:
+    rows = []
+    for p in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        rec = json.loads(p.read_text())
+        if rec["status"] != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "status": rec["status"],
+                         "reason": rec.get("reason", rec.get("error", ""))})
+            continue
+        r = rec["roofline"]
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "status": "ok",
+            "dom": r["dominant"].replace("_s", ""),
+            "comp_ms": r["compute_s"] * 1e3,
+            "mem_ms": r["memory_s"] * 1e3,
+            "coll_ms": r["collective_s"] * 1e3,
+            "frac": r["roofline_fraction"],
+            "useful": r["useful_ratio"],
+            "GiB/dev": rec["memory"]["peak_gib_per_device"],
+        })
+    return rows
+
+
+def render(rows: List[Dict]) -> str:
+    out = [f"{'arch':<19}{'shape':<13}{'dom':<8}{'comp_ms':>9}{'mem_ms':>9}"
+           f"{'coll_ms':>9}{'frac':>7}{'useful':>8}{'GiB/dev':>9}"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"{r['arch']:<19}{r['shape']:<13}"
+                       f"-- {r['status']}: {r.get('reason','')[:60]}")
+            continue
+        out.append(
+            f"{r['arch']:<19}{r['shape']:<13}{r['dom']:<8}"
+            f"{r['comp_ms']:>9.2f}{r['mem_ms']:>9.2f}{r['coll_ms']:>9.2f}"
+            f"{r['frac']:>7.3f}{r['useful']:>8.2f}{r['GiB/dev']:>9.2f}")
+    return "\n".join(out)
+
+
+def run(verbose: bool = True) -> List[Dict]:
+    if not RESULTS.exists() or not list(RESULTS.glob("*.json")):
+        print("roofline_table: no dry-run results found; run\n"
+              "  PYTHONPATH=src python -m repro.launch.dryrun\nfirst.")
+        return []
+    rows = load("single")
+    if verbose:
+        print("roofline (single-pod 16x16, per §Roofline):")
+        print(render(rows))
+    return rows
+
+
+def main() -> List[Dict]:
+    return run()
+
+
+if __name__ == "__main__":
+    main()

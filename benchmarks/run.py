@@ -1,0 +1,36 @@
+"""Benchmark harness: one module per paper artifact + the roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig4 fig5  # subset
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+BENCHES = ("fig3", "fig4", "fig5", "roofline")
+
+
+def main() -> None:
+    want = sys.argv[1:] or list(BENCHES)
+    for name in want:
+        print(f"\n{'=' * 72}\n== benchmarks.{name}\n{'=' * 72}", flush=True)
+        t0 = time.time()
+        if name == "fig3":
+            from benchmarks import fig3_tree_vs_star as m
+        elif name == "fig4":
+            from benchmarks import fig4_optimal_h as m
+        elif name == "fig5":
+            from benchmarks import fig5_delay_convergence as m
+        elif name == "roofline":
+            from benchmarks import roofline_table as m
+        else:
+            raise SystemExit(f"unknown benchmark {name!r}; "
+                             f"choose from {BENCHES}")
+        m.main()
+        print(f"[{name}: {time.time() - t0:.1f}s]", flush=True)
+
+
+if __name__ == "__main__":
+    main()

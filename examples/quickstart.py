@@ -1,0 +1,47 @@
+"""Quickstart: the paper's algorithm in 40 lines.
+
+Solves ridge regression with distributed dual coordinate ascent on a
+2-level tree network (root -> 2 sub-centers -> 4 workers), prints the
+duality gap per round, and compares against the closed-form optimum.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.dual import LOSSES, dual_value, ridge_dual_optimum
+from repro.core.tree import two_level
+from repro.core.treedual import tree_dual_solve
+from repro.data.synthetic import gaussian_regression
+
+
+def main():
+    X, y = gaussian_regression(m=512, d=64)
+    lam = 0.05
+    loss = LOSSES["squared"]
+
+    # the network: 2 sub-centers, 2 leaf workers each, 128 points/worker
+    tree = two_level(
+        n_groups=2, workers_per_group=2, m_per_worker=128,
+        root_rounds=10, group_rounds=2, local_steps=256,
+        t_lp=1e-5, root_delay=0.5e-1, group_delay=1e-4,
+    )
+    res = tree_dual_solve(tree, X, y, loss=loss, lam=lam,
+                          key=jax.random.PRNGKey(0))
+
+    print("round  sim-time(s)   duality-gap")
+    for h in res.history:
+        print(f"{h['round']:>5}  {h['time']:>11.4f}   {h['gap']:.3e}")
+
+    # certificate: compare with the exact dual optimum
+    a_star = ridge_dual_optimum(X, y, lam)
+    d_star = float(dual_value(a_star, X, y, loss, lam))
+    d_ours = float(dual_value(res.alpha, X, y, loss, lam))
+    print(f"\nD(alpha*) = {d_star:.6f}")
+    print(f"D(ours)   = {d_ours:.6f}  (suboptimality {d_star - d_ours:.2e})")
+    w_err = float(jnp.linalg.norm(res.w - (X.T @ a_star) / (lam * X.shape[0])))
+    print(f"||w - w*|| = {w_err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

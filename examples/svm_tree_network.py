@@ -1,0 +1,52 @@
+"""SVM (smoothed hinge) trained with TreeDualMethod over three topologies,
+showing the paper's headline effect: when the root links are slow, deeper
+trees that localize communication converge faster in wall-clock terms.
+
+    PYTHONPATH=src python examples/svm_tree_network.py
+"""
+import jax
+
+from repro.core.dual import LOSSES, duality_gap
+from repro.core.tree import star, two_level
+from repro.core.treedual import tree_dual_solve
+from repro.data.synthetic import gaussian_classification
+
+LAM = 0.02
+T_LP = 1e-5
+SLOW = 1e5 * T_LP   # root-link delay (paper Fig. 3 regime)
+
+
+def main():
+    X, y = gaussian_classification(m=1024, d=64)
+    loss = LOSSES["smooth_hinge_1"]
+    key = jax.random.PRNGKey(1)
+
+    topologies = {
+        "star-8 (CoCoA)": star(
+            8, 128, outer_rounds=12, local_steps=384,
+            t_lp=T_LP, t_delay=SLOW),
+        "tree 2x4": two_level(
+            2, 4, 128, root_rounds=6, group_rounds=2, local_steps=384,
+            t_lp=T_LP, root_delay=SLOW, group_delay=1e-4),
+        "tree 4x2": two_level(
+            4, 2, 128, root_rounds=6, group_rounds=2, local_steps=384,
+            t_lp=T_LP, root_delay=SLOW, group_delay=1e-4),
+    }
+
+    print(f"{'topology':<16}{'sim-time(s)':>12}{'final gap':>14}"
+          f"{'gap @ t=13s':>14}")
+    for name, tree in topologies.items():
+        res = tree_dual_solve(tree, X, y, loss=loss, lam=LAM, key=key)
+        # gap at a common wall-clock budget
+        import numpy as np
+        t_common = 13.0
+        i = max(int(np.searchsorted(res.times, t_common, "right")) - 1, 0)
+        print(f"{name:<16}{res.times[-1]:>12.2f}{res.gaps[-1]:>14.3e}"
+              f"{res.gaps[i]:>14.3e}")
+
+    print("\n(deeper trees pay the slow root hop fewer times per unit of "
+          "local progress)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.configs.base import ModelConfig  # noqa: F401
+from repro.configs.registry import ARCHS, get_config, get_smoke_config  # noqa: F401
+from repro.configs.shapes import SHAPES, ShapeSpec  # noqa: F401

@@ -1,0 +1,9 @@
+# The paper's primary contribution: tree-network distributed dual coordinate
+# ascent (TreeDualMethod), its convergence-rate recursion (Theorem 2), the
+# communication-delay model with the optimal local-iteration count H
+# (eq. (12)), and the TreeSync hierarchical synchronization schedule that
+# applies the same machinery to large-model data-parallel training.
+from repro.core import convergence, delay, dual, local_sdca, tree, treedual  # noqa: F401
+from repro.core.dual import LOSSES, duality_gap, dual_value, primal_value  # noqa: F401
+from repro.core.tree import TreeNode, star, two_level  # noqa: F401
+from repro.core.treedual import cocoa_star_solve, tree_dual_solve  # noqa: F401

@@ -1,0 +1,166 @@
+"""Gradient/delta compression for the slow cross-pod hop (beyond-paper).
+
+Two schemes, both with error feedback (the residual of the compression is
+added back into the next message, so the compression error does not
+accumulate -- Seide et al. 2014 / Stich et al. 2018):
+
+  * int8 per-tensor blockwise quantization (32x1 blocks, absmax scaling):
+    4x fewer bytes than f32 over the wire.
+  * top-k magnitude sparsification: send the k largest-|.| entries.
+
+Both are pure jax (no host callbacks) so they live inside the jitted
+TreeSync step; the dry-run sees the reduced collective bytes directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+BLOCK = 32
+
+
+# ---------------------------------------------------------------------------
+# int8 blockwise
+# ---------------------------------------------------------------------------
+def quantize_int8(x: Array, keep_leading: int = 0) -> Tuple[Array, Array]:
+    """x (float) -> (int8 codes, f32 block scales). Blocks along the last
+    dim. ``keep_leading`` preserves that many leading dims un-flattened --
+    essential under GSPMD when dim 0 is a mesh-sharded replica dim (mixing
+    it into blocks forces a full cross-replica reshard)."""
+    lead = x.shape[:keep_leading]
+    flat = x.astype(jnp.float32).reshape(lead + (-1,))
+    pad = (-flat.shape[-1]) % BLOCK
+    flat = jnp.pad(flat, [(0, 0)] * keep_leading + [(0, pad)])
+    blocks = flat.reshape(lead + (-1, BLOCK))
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    codes = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return codes, scale[..., 0]
+
+
+def dequantize_int8(codes: Array, scale: Array, shape, dtype,
+                    keep_leading: int = 0) -> Array:
+    flat = (codes.astype(jnp.float32) * scale[..., None]).reshape(
+        shape[:keep_leading] + (-1,))
+    n = 1
+    for d in shape[keep_leading:]:
+        n *= d
+    return flat[..., :n].reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# top-k sparsification
+# ---------------------------------------------------------------------------
+def topk_sparsify(x: Array, frac: float) -> Tuple[Array, Array]:
+    """Keep the `frac` largest-magnitude entries. Returns (values, indices)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    k = max(int(flat.size * frac), 1)
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def topk_densify(vals: Array, idx: Array, shape, dtype) -> Array:
+    n = 1
+    for d in shape:
+        n *= d
+    flat = jnp.zeros((n,), jnp.float32).at[idx].set(vals)
+    return flat.reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# error-feedback compressor over pytrees
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """compress(delta + residual) -> (wire, new_residual); decompress(wire)."""
+    name: str
+    ratio: float  # wire bytes / f32 bytes (approximate, for delay model)
+
+    def init_residual(self, tree: PyTree) -> PyTree:
+        return jax.tree.map(
+            lambda t: jnp.zeros(t.shape, jnp.float32), tree)
+
+    def compress(self, tree: PyTree, residual: PyTree
+                 ) -> Tuple[PyTree, PyTree]:
+        raise NotImplementedError
+
+    def decompress(self, wire: PyTree) -> PyTree:
+        raise NotImplementedError
+
+
+class NoCompression(Compressor):
+    def __init__(self):
+        super().__init__(name="none", ratio=1.0)
+
+    def compress(self, tree, residual):
+        return tree, residual
+
+    def decompress(self, wire):
+        return wire
+
+
+class Int8Compressor(Compressor):
+    def __init__(self):
+        super().__init__(name="int8", ratio=0.25 + 4.0 / BLOCK / 4.0)
+
+    def compress(self, tree, residual):
+        def one(t, r):
+            target = t.astype(jnp.float32) + r
+            codes, scale = quantize_int8(target)
+            approx = dequantize_int8(codes, scale, t.shape, jnp.float32)
+            return {"codes": codes, "scale": scale,
+                    "shape": t.shape, "dtype": t.dtype}, target - approx
+
+        flat_t, tdef = jax.tree.flatten(tree)
+        flat_r = jax.tree.leaves(residual)
+        out = [one(t, r) for t, r in zip(flat_t, flat_r)]
+        return (tdef.unflatten([o[0] for o in out]),
+                tdef.unflatten([o[1] for o in out]))
+
+    def decompress(self, wire):
+        is_msg = lambda x: isinstance(x, dict) and "codes" in x
+        return jax.tree.map(
+            lambda m: dequantize_int8(m["codes"], m["scale"], m["shape"],
+                                      m["dtype"]),
+            wire, is_leaf=is_msg)
+
+
+class TopKCompressor(Compressor):
+    def __init__(self, frac: float = 0.01):
+        super().__init__(name=f"topk_{frac:g}", ratio=2.0 * frac)
+        self.__dict__["frac"] = frac  # frozen dataclass workaround
+
+    def compress(self, tree, residual):
+        frac = self.__dict__["frac"]
+
+        def one(t, r):
+            target = t.astype(jnp.float32) + r
+            vals, idx = topk_sparsify(target, frac)
+            approx = topk_densify(vals, idx, t.shape, jnp.float32)
+            return {"vals": vals, "idx": idx,
+                    "shape": t.shape, "dtype": t.dtype}, target - approx
+
+        flat_t, tdef = jax.tree.flatten(tree)
+        flat_r = jax.tree.leaves(residual)
+        out = [one(t, r) for t, r in zip(flat_t, flat_r)]
+        return (tdef.unflatten([o[0] for o in out]),
+                tdef.unflatten([o[1] for o in out]))
+
+    def decompress(self, wire):
+        is_msg = lambda x: isinstance(x, dict) and "vals" in x
+        return jax.tree.map(
+            lambda m: topk_densify(m["vals"], m["idx"], m["shape"],
+                                   m["dtype"]),
+            wire, is_leaf=is_msg)
+
+
+COMPRESSORS = {
+    "none": NoCompression,
+    "int8": Int8Compressor,
+    "topk": TopKCompressor,
+}

@@ -1,0 +1,171 @@
+"""Communication-delay model and delay-aware tuning of local iterations H
+(paper SS6, eq. (9)-(12)) plus the TPU per-level link models used by TreeSync.
+
+eq. (9):  t_total = (t_lp*H + t_delay + t_cp) * T
+eq. (11): gap factor after T rounds = (1 - (1 - (1-delta)^H) * C/K)^T
+eq. (12): minimize over H the bound with T = t_total/(t_lp*H + t_delay + t_cp)
+
+All bound evaluations are done in log-space for numerical stability
+(H up to 1e6 and T up to 1e9 appear in the paper's sweeps).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Sequence, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# paper SS6: star-network bound as a function of H
+# ---------------------------------------------------------------------------
+def rounds_for_budget(t_total: float, H: float, t_lp: float, t_delay: float,
+                      t_cp: float) -> float:
+    """eq. (10): T = t_total / (t_lp H + t_delay + t_cp)."""
+    return t_total / (t_lp * H + t_delay + t_cp)
+
+
+def per_round_factor(H: float, C: float, K: int, delta: float) -> float:
+    """eq. (11) base: g(H) = 1 - (1 - (1-delta)^H) * C/K."""
+    return 1.0 - (1.0 - (1.0 - delta) ** H) * C / K
+
+
+def log_bound(
+    H: float, *, C: float, K: int, delta: float, t_total: float,
+    t_lp: float, t_delay: float, t_cp: float,
+) -> float:
+    """log of eq. (12)'s objective: T(H) * log g(H). Lower is better (< 0)."""
+    g = per_round_factor(H, C, K, delta)
+    T = rounds_for_budget(t_total, H, t_lp, t_delay, t_cp)
+    # g in (0,1]; log(g) <= 0
+    return T * math.log(max(g, 1e-300))
+
+
+def optimal_h(
+    *, C: float, K: int, delta: float, t_total: float, t_lp: float,
+    t_delay: float, t_cp: float, h_min: int = 1, h_max: int = 10**7,
+) -> Tuple[int, float]:
+    """Integer minimizer of eq. (12) by coarse log-grid + local refinement.
+
+    Returns (H*, log_bound(H*)).
+    """
+    # coarse: log-spaced candidates
+    grid = sorted(
+        {int(h) for h in np.unique(np.round(
+            np.logspace(math.log10(h_min), math.log10(h_max), 200)))}
+    )
+    vals = [
+        log_bound(h, C=C, K=K, delta=delta, t_total=t_total, t_lp=t_lp,
+                  t_delay=t_delay, t_cp=t_cp)
+        for h in grid
+    ]
+    i = int(np.argmin(vals))
+    lo = grid[max(i - 1, 0)]
+    hi = grid[min(i + 1, len(grid) - 1)]
+    # exact integer scan in the bracket (bracket widths are ~5% of H, cheap
+    # up to ~1e6; subsample if enormous)
+    if hi - lo > 200_000:
+        cand: Iterable[int] = np.unique(
+            np.round(np.linspace(lo, hi, 100_000)).astype(np.int64))
+    else:
+        cand = range(lo, hi + 1)
+    best_h, best_v = grid[i], vals[i]
+    for h in cand:
+        v = log_bound(int(h), C=C, K=K, delta=delta, t_total=t_total,
+                      t_lp=t_lp, t_delay=t_delay, t_cp=t_cp)
+        if v < best_v:
+            best_h, best_v = int(h), v
+    return best_h, best_v
+
+
+def optimal_h_vs_delay(
+    rs: Sequence[float], *, C: float, K: int, delta: float, t_total: float,
+    t_lp: float, t_cp: float, h_max: int = 10**7,
+) -> np.ndarray:
+    """Fig. 4(b): optimal H for t_delay = r * t_lp over a sweep of r."""
+    out = []
+    for r in rs:
+        h, _ = optimal_h(C=C, K=K, delta=delta, t_total=t_total, t_lp=t_lp,
+                         t_delay=r * t_lp, t_cp=t_cp, h_max=h_max)
+        out.append(h)
+    return np.array(out)
+
+
+# ---------------------------------------------------------------------------
+# TPU link models: used to instantiate the paper's delay model per mesh level
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """One network level: latency + inverse-bandwidth delay for a message."""
+    name: str
+    latency_s: float
+    bw_bytes_per_s: float
+
+    def delay(self, msg_bytes: float) -> float:
+        return self.latency_s + msg_bytes / self.bw_bytes_per_s
+
+
+# v5e-flavored defaults (per DESIGN.md SS3); DCI is the slow cross-pod hop.
+ICI_LINK = LinkModel("ici", latency_s=1e-5, bw_bytes_per_s=50e9)
+DCI_LINK = LinkModel("dci", latency_s=1e-3, bw_bytes_per_s=6.25e9)
+
+
+def ring_allreduce_delay(link: LinkModel, msg_bytes: float, n: int) -> float:
+    """Ring all-reduce cost over n participants: 2(n-1)/n of the bytes per
+    link plus 2(n-1) latency hops."""
+    if n <= 1:
+        return 0.0
+    return 2 * (n - 1) * link.latency_s + (
+        2.0 * (n - 1) / n * msg_bytes / link.bw_bytes_per_s
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncLevel:
+    """One level of a hierarchical (tree) synchronization schedule."""
+    name: str
+    group_size: int          # K at this level
+    link: LinkModel
+    msg_bytes: float         # size of the averaged state
+
+    def round_delay(self) -> float:
+        return ring_allreduce_delay(self.link, self.msg_bytes, self.group_size)
+
+
+def plan_hierarchical_h(
+    levels: Sequence[SyncLevel],
+    *,
+    C: float,
+    delta: float,
+    t_total: float,
+    t_lp: float,
+    t_cp: float = 0.0,
+    h_max: int = 10**6,
+) -> list[dict]:
+    """Choose per-level local-round counts bottom-up with eq. (12).
+
+    Level 0 is the innermost (fastest link). For level i, the 'local
+    iteration' cost is the full inner-level round time, and the 'delay' is
+    this level's collective cost. Returns [{name, H, round_time}] bottom-up.
+
+    This is the paper's SS6 applied recursively: each level treats the level
+    below it as its LocalDualMethod.
+    """
+    plan = []
+    inner_iter_time = t_lp
+    inner_delta = delta
+    for lvl in levels:
+        h, _ = optimal_h(
+            C=C, K=lvl.group_size, delta=inner_delta, t_total=t_total,
+            t_lp=inner_iter_time, t_delay=lvl.round_delay(), t_cp=t_cp,
+            h_max=h_max,
+        )
+        round_time = inner_iter_time * h + lvl.round_delay() + t_cp
+        plan.append({"name": lvl.name, "H": h, "round_time": round_time,
+                     "delay": lvl.round_delay()})
+        # the level above sees one of our rounds as its local iteration, and
+        # its effective per-iteration improvement shrinks geometrically
+        inner_iter_time = round_time
+        inner_delta = 1.0 - per_round_factor(h, C, lvl.group_size, inner_delta)
+    return plan

@@ -1,0 +1,194 @@
+"""Primal/dual objectives for regularized loss minimization (paper eq. (1)-(2)).
+
+Primal:  min_w  P(w) = (lam/2)||w||^2 + (1/m) sum_i l_i(w^T x_i)
+Dual:    max_a  D(a) = -(lam/2)||A a||^2 - (1/m) sum_i l*_i(-a_i),
+         A_i = x_i / (lam * m),   w(a) = A a.
+
+Each supported loss provides:
+  * ``value(a, y)``          -- l_i(a)
+  * ``conj_neg(alpha, y)``   -- l*_i(-alpha) (the term appearing in D)
+  * ``coord_delta(wx, alpha, y, xsq_over_lm)``
+        closed-form (or Newton) maximizer of the Procedure-P scalar subproblem
+            max_d  -(lam m / 2)||w + d x_i/(lam m)||^2 - l*(-(alpha + d))
+        where ``wx = w . x_i`` and ``xsq_over_lm = ||x_i||^2 / (lam m)``.
+  * ``gamma``                -- smoothness: l is (1/gamma)-smooth (0 => non-smooth)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Loss:
+    name: str
+    value: Callable[[Array, Array], Array]
+    conj_neg: Callable[[Array, Array], Array]
+    coord_delta: Callable[[Array, Array, Array, Array], Array]
+    gamma: float
+
+
+# -----------------------------------------------------------------------------
+# squared loss (ridge regression):  l(a) = (a - y)^2 / 2
+#   l*(b) = b^2/2 + b y        =>  l*(-alpha) = alpha^2/2 - alpha y
+#   argmax_d: d = (y - wx - alpha) / (1 + xsq_over_lm)
+# -----------------------------------------------------------------------------
+def _sq_value(a, y):
+    return 0.5 * (a - y) ** 2
+
+
+def _sq_conj_neg(alpha, y):
+    return 0.5 * alpha**2 - alpha * y
+
+
+def _sq_coord_delta(wx, alpha, y, xsq_over_lm):
+    return (y - wx - alpha) / (1.0 + xsq_over_lm)
+
+
+squared = Loss("squared", _sq_value, _sq_conj_neg, _sq_coord_delta, gamma=1.0)
+
+
+# -----------------------------------------------------------------------------
+# hinge loss (SVM):  l(a) = max(0, 1 - y a),  y in {-1, +1}
+#   l*(-alpha) = -alpha y   for alpha y in [0, 1]  (+inf otherwise)
+#   SDCA closed form: u = y - wx? standard update (Shalev-Shwartz & Zhang '13):
+#     q = (1 - y wx) / xsq_over_lm + alpha y
+#     alpha_new = y * clip(q, 0, 1);  d = alpha_new - alpha
+# -----------------------------------------------------------------------------
+def _hinge_value(a, y):
+    return jnp.maximum(0.0, 1.0 - y * a)
+
+
+def _hinge_conj_neg(alpha, y):
+    # -alpha*y on the feasible set; feasibility is maintained by the update.
+    return -alpha * y
+
+
+def _hinge_coord_delta(wx, alpha, y, xsq_over_lm):
+    q = (1.0 - y * wx) / jnp.maximum(xsq_over_lm, 1e-12) + alpha * y
+    return y * jnp.clip(q, 0.0, 1.0) - alpha
+
+
+hinge = Loss("hinge", _hinge_value, _hinge_conj_neg, _hinge_coord_delta, gamma=0.0)
+
+
+# -----------------------------------------------------------------------------
+# smoothed hinge (gamma-smoothed; Shalev-Shwartz & Zhang '13 eq. for smooth SDCA)
+#   l(a) = 0                     if y a >= 1
+#        = 1 - y a - g/2         if y a <= 1 - g
+#        = (1 - y a)^2 / (2 g)   otherwise
+#   l*(-alpha) = -alpha y + (g/2)(alpha y)^2   for alpha y in [0, 1]
+#   closed form: q = (1 - y wx - g alpha y)/(xsq_over_lm + g) + alpha y
+# -----------------------------------------------------------------------------
+def _make_smooth_hinge(g: float) -> Loss:
+    def value(a, y):
+        z = 1.0 - y * a
+        return jnp.where(
+            z <= 0.0, 0.0, jnp.where(z >= g, z - g / 2.0, z**2 / (2.0 * g))
+        )
+
+    def conj_neg(alpha, y):
+        ay = alpha * y
+        return -ay + (g / 2.0) * ay**2
+
+    def coord_delta(wx, alpha, y, xsq_over_lm):
+        q = (1.0 - y * wx - g * alpha * y) / (xsq_over_lm + g) + alpha * y
+        return y * jnp.clip(q, 0.0, 1.0) - alpha
+
+    return Loss(f"smooth_hinge_{g:g}", value, conj_neg, coord_delta, gamma=g)
+
+
+smooth_hinge = _make_smooth_hinge(1.0)
+make_smooth_hinge = _make_smooth_hinge
+
+
+# -----------------------------------------------------------------------------
+# logistic loss:  l(a) = log(1 + exp(-y a))
+#   l*(-alpha): finite for alpha y in [0,1]:
+#      with u = alpha y:  l*(-alpha) = u log u + (1-u) log(1-u)
+#   no closed form coordinate max -> damped Newton on the scalar dual.
+# -----------------------------------------------------------------------------
+def _log_value(a, y):
+    return jnp.logaddexp(0.0, -y * a)
+
+
+def _xlogx(u):
+    return jnp.where(u > 0.0, u * jnp.log(jnp.maximum(u, 1e-30)), 0.0)
+
+
+def _log_conj_neg(alpha, y):
+    u = jnp.clip(alpha * y, 0.0, 1.0)
+    return _xlogx(u) + _xlogx(1.0 - u)
+
+
+def _log_coord_delta(wx, alpha, y, xsq_over_lm, newton_steps: int = 8):
+    # maximize  f(d) = -(1/2) xsq_over_lm d^2 - wx d - l*(-(alpha+d))
+    # substitute u = (alpha + d) y in (0,1):
+    #   f'(d) = -xsq_over_lm d - wx + y log((1-u)/u) ... derivative of -l*(-(alpha+d))
+    eps = 1e-6
+
+    def body(_, d):
+        u = jnp.clip((alpha + d) * y, eps, 1.0 - eps)
+        grad = -xsq_over_lm * d - wx - y * (jnp.log(u) - jnp.log(1.0 - u))
+        hess = -xsq_over_lm - 1.0 / (u * (1.0 - u))
+        step = grad / hess
+        d_new = d - step
+        # keep iterate strictly feasible
+        u_new = (alpha + d_new) * y
+        d_new = jnp.where(
+            (u_new <= 0.0) | (u_new >= 1.0),
+            (jnp.clip(u_new, eps, 1.0 - eps)) * y - alpha,
+            d_new,
+        )
+        return d_new
+
+    d0 = (jnp.clip(alpha * y, 0.25, 0.75)) * y - alpha  # start inside the domain
+    return jax.lax.fori_loop(0, newton_steps, body, d0)
+
+
+logistic = Loss("logistic", _log_value, _log_conj_neg, _log_coord_delta, gamma=0.25)
+
+LOSSES = {l.name: l for l in (squared, hinge, smooth_hinge, logistic)}
+
+
+# -----------------------------------------------------------------------------
+# Objectives
+# -----------------------------------------------------------------------------
+def data_matrix(X: Array, lam: float) -> Array:
+    """A (d x m) with columns x_i/(lam m) from row-major X (m x d)."""
+    m = X.shape[0]
+    return X.T / (lam * m)
+
+
+def primal_value(w: Array, X: Array, y: Array, loss: Loss, lam: float) -> Array:
+    margins = X @ w
+    return 0.5 * lam * jnp.dot(w, w) + jnp.mean(loss.value(margins, y))
+
+
+def dual_value(alpha: Array, X: Array, y: Array, loss: Loss, lam: float) -> Array:
+    m = X.shape[0]
+    w = (X.T @ alpha) / (lam * m)  # w(alpha) = A alpha
+    return -0.5 * lam * jnp.dot(w, w) - jnp.mean(loss.conj_neg(alpha, y))
+
+
+def w_of_alpha(alpha: Array, X: Array, lam: float) -> Array:
+    m = X.shape[0]
+    return (X.T @ alpha) / (lam * m)
+
+
+def duality_gap(alpha: Array, X: Array, y: Array, loss: Loss, lam: float) -> Array:
+    w = w_of_alpha(alpha, X, lam)
+    return primal_value(w, X, y, loss, lam) - dual_value(alpha, X, y, loss, lam)
+
+
+def ridge_dual_optimum(X: Array, y: Array, lam: float) -> Array:
+    """Closed-form dual optimum for the squared loss: (lam m A^T A + I) a = y."""
+    m = X.shape[0]
+    A = data_matrix(X, lam)
+    G = lam * m * (A.T @ A) + jnp.eye(m, dtype=X.dtype)
+    return jnp.linalg.solve(G, y)

@@ -1,0 +1,75 @@
+"""Procedure P: LocalSDCA at a leaf node, as a jit-able jax.lax loop.
+
+Given the leaf's data block X (m_b x d), labels y, current dual block ``alpha``
+and a w consistent with the *global* alpha (w = A alpha), performs H sequential
+random-coordinate exact maximizations and returns (delta_alpha, delta_w).
+
+The global problem size ``m_total`` (not the block size) enters through the
+A-matrix scaling A_i = x_i/(lam * m_total).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dual import Loss
+
+Array = jax.Array
+
+
+@functools.partial(
+    jax.jit, static_argnames=("loss", "num_steps", "m_total", "step_size")
+)
+def local_sdca(
+    X: Array,
+    y: Array,
+    alpha: Array,
+    w: Array,
+    key: Array,
+    *,
+    loss: Loss,
+    lam: float,
+    m_total: int,
+    num_steps: int,
+    step_size: float = 1.0,
+) -> Tuple[Array, Array]:
+    """Run H = num_steps coordinate steps; return (delta_alpha, delta_w)."""
+    m_b = X.shape[0]
+    lm = lam * m_total
+    xsq_over_lm = jnp.sum(X * X, axis=1) / lm  # ||x_i||^2/(lam m), precomputed
+    idx = jax.random.randint(key, (num_steps,), 0, m_b)
+
+    def body(h, carry):
+        alpha_c, w_c = carry
+        i = idx[h]
+        x_i = X[i]
+        wx = jnp.dot(w_c, x_i)
+        d = loss.coord_delta(wx, alpha_c[i], y[i], xsq_over_lm[i]) * step_size
+        alpha_c = alpha_c.at[i].add(d)
+        w_c = w_c + (d / lm) * x_i
+        return (alpha_c, w_c)
+
+    alpha_end, w_end = jax.lax.fori_loop(0, num_steps, body, (alpha, w))
+    return alpha_end - alpha, w_end - w
+
+
+def local_sdca_epochs(
+    X: Array,
+    y: Array,
+    alpha: Array,
+    w: Array,
+    key: Array,
+    *,
+    loss: Loss,
+    lam: float,
+    m_total: int,
+    epochs: int,
+) -> Tuple[Array, Array]:
+    """Convenience: H = epochs * m_b coordinate steps."""
+    return local_sdca(
+        X, y, alpha, w, key,
+        loss=loss, lam=lam, m_total=m_total, num_steps=epochs * X.shape[0],
+    )

@@ -1,0 +1,61 @@
+"""Deterministic synthetic datasets for the DCA experiments (paper SS7).
+
+The container is offline, so the UCI wine-quality set is replaced by a
+statistically similar synthetic regression problem (11 physico-chemical
+features, integer quality scores); the paper's synthetic experiment
+(A in R^{100x600}, iid N(0,1)) is reproduced exactly.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def gaussian_regression(
+    m: int = 600, d: int = 100, key: Array | None = None,
+    noise: float = 0.1,
+) -> Tuple[Array, Array]:
+    """Paper SS7: X rows iid N(0,1); y from a planted linear model + noise."""
+    key = jax.random.PRNGKey(7) if key is None else key
+    kx, kw, kn = jax.random.split(key, 3)
+    X = jax.random.normal(kx, (m, d))
+    w_star = jax.random.normal(kw, (d,)) / jnp.sqrt(d)
+    y = X @ w_star + noise * jax.random.normal(kn, (m,))
+    return X, y
+
+
+def gaussian_classification(
+    m: int = 600, d: int = 100, key: Array | None = None, margin: float = 0.5,
+) -> Tuple[Array, Array]:
+    """Linearly separable-ish binary labels in {-1, +1} for SVM tests."""
+    key = jax.random.PRNGKey(11) if key is None else key
+    kx, kw, kn = jax.random.split(key, 3)
+    X = jax.random.normal(kx, (m, d))
+    w_star = jax.random.normal(kw, (d,)) / jnp.sqrt(d)
+    score = X @ w_star + margin * jax.random.normal(kn, (m,))
+    y = jnp.where(score >= 0, 1.0, -1.0)
+    return X, y
+
+
+def wine_like(m: int = 1596, key: Array | None = None) -> Tuple[Array, Array]:
+    """Synthetic stand-in for the wine-quality set (offline container).
+
+    11 correlated positive features, integer-ish quality target in [3, 8],
+    standardized features (as one would for ridge regression).
+    """
+    key = jax.random.PRNGKey(17) if key is None else key
+    d = 11
+    kz, kmix, kw, kn = jax.random.split(key, 4)
+    z = jax.random.normal(kz, (m, d))
+    mix = jax.random.normal(kmix, (d, d)) / jnp.sqrt(d)
+    X = z @ (jnp.eye(d) + 0.5 * mix)  # correlated features
+    w_star = jax.random.normal(kw, (d,))
+    q = 5.5 + 1.2 * jnp.tanh(X @ w_star / jnp.sqrt(d))
+    y = jnp.clip(jnp.round(q + 0.3 * jax.random.normal(kn, (m,))), 3.0, 8.0)
+    # standardize
+    X = (X - X.mean(0)) / (X.std(0) + 1e-8)
+    return X, y

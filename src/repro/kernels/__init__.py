@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  sdca             -- Procedure P (LocalSDCA) as a single VMEM-resident
+                      kernel: H sequential closed-form coordinate steps with
+                      zero HBM round-trips between steps (the paper's
+                      compute hot spot, TPU-adapted).
+  flash_attention  -- blocked online-softmax causal/GQA/windowed attention
+                      (the LM stack's dominant non-matmul HBM term).
+  rglru            -- the RG-LRU diagonal recurrence (Griffin) as a
+                      chunked parallel-prefix kernel: one HBM read of
+                      (a, b) + one write of h total (the associative_scan
+                      oracle materializes O(log S) full intermediates).
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper) and ref.py (pure-jnp oracle); tests sweep shapes/dtypes in
+interpret mode against the oracle (this container has no TPU).
+"""

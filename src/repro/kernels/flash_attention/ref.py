@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for blocked flash attention: causal / sliding-window /
+GQA, f32 softmax accumulation."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0**30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  scale: Optional[float] = None) -> jax.Array:
+    """q: (B, Sq, H, d); k/v: (B, Sk, KV, d) with H % KV == 0.
+    Returns (B, Sq, H, d). Query i attends keys j with j <= i (causal)
+    and i - j < window (if windowed); q position offset assumes aligned
+    suffixes (Sq == Sk for training)."""
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    assert H % KV == 0
+    rep = H // KV
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = scale if scale is not None else D**-0.5
+
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * s
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    e = jnp.where(mask[None, None], e, 0.0)
+    p = e / (jnp.sum(e, axis=-1, keepdims=True) + 1e-30)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the RG-LRU diagonal linear recurrence:
+h_t = a_t * h_{t-1} + b_t (elementwise), h_0 given."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array,
+                   h0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """a, b: (B, S, W); h0: (B, W). Returns (h (B, S, W), h_last (B, W))."""
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    aT = a.swapaxes(0, 1)  # (S, B, W)
+    bT = b.swapaxes(0, 1)
+    h_last, hs = jax.lax.scan(step, h0, (aT, bT))
+    return hs.swapaxes(0, 1), h_last

@@ -1,0 +1,3 @@
+from repro.kernels.sdca.ops import sdca_block_solve
+
+__all__ = ["sdca_block_solve"]

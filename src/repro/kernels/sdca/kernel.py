@@ -1,0 +1,102 @@
+"""Blocked LocalSDCA as one Pallas kernel (the paper's compute hot spot).
+
+Procedure P is a *sequential* scalar-update loop: pick coordinate i, dot
+w.x_i, closed-form delta, rank-1 update of w. On an accelerator a naive
+port round-trips HBM every step (one (d,) read + write per coordinate) and
+is latency-bound. TPU adaptation:
+
+  * grid = (K,): one program per worker block (Algorithm 1's "for all
+    workers in parallel" IS the kernel grid).
+  * the whole block X (m_b x d), labels/alpha/||x||^2 vectors and the
+    private w copy are VMEM-resident for the kernel's lifetime; the H
+    coordinate steps run inside one lax.fori_loop with VREG arithmetic and
+    ZERO HBM traffic between steps.
+  * the sequential-dependence math of the paper is preserved exactly
+    (same iterates bit-for-bit vs. ref.py in f32): what changes is only
+    WHERE the iterates live (VMEM/VREG vs HBM).
+  * coordinate choices are passed in as an (K, H) int32 array (computed
+    with the standard jax PRNG outside) so kernel and oracle see identical
+    randomness.
+
+VMEM per program: (m_b*d + 3*m_b + 2*d + H) * 4B; m_b=2048, d=512, H=4096
+=> ~4.3 MiB, comfortably inside v5e VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.dual import Loss
+
+
+def _sdca_kernel(X_ref, y_ref, a_ref, w_ref, xsq_ref, idx_ref,
+                 da_ref, dw_ref, *, lm: float, loss: Loss, H: int):
+    X = X_ref[...]          # (m_b, d) resident
+    y = y_ref[...]
+    a0 = a_ref[...]
+    w0 = w_ref[...]         # (d,) shared input iterate
+    xsq = xsq_ref[...]      # ||x_i||^2 / (lam m)
+    idx = idx_ref[...]      # (H,)
+
+    def body(h, carry):
+        a_c, w_c = carry
+        i = idx[h]
+        x_i = jax.lax.dynamic_slice_in_dim(X, i, 1, axis=0)[0]  # (d,)
+        a_i = jax.lax.dynamic_slice_in_dim(a_c, i, 1, axis=0)[0]
+        y_i = jax.lax.dynamic_slice_in_dim(y, i, 1, axis=0)[0]
+        x2_i = jax.lax.dynamic_slice_in_dim(xsq, i, 1, axis=0)[0]
+        wx = jnp.sum(w_c * x_i)                                # VPU dot
+        dlt = loss.coord_delta(wx, a_i, y_i, x2_i)
+        a_c = jax.lax.dynamic_update_slice_in_dim(
+            a_c, (a_i + dlt)[None], i, axis=0)
+        w_c = w_c + (dlt / lm) * x_i                           # rank-1, VREG
+        return a_c, w_c
+
+    a_end, w_end = jax.lax.fori_loop(0, H, body, (a0, w0))
+    da_ref[...] = a_end - a0
+    dw_ref[...] = w_end - w0
+
+
+def sdca_block_kernel(
+    X: jax.Array,      # (K, m_b, d)
+    y: jax.Array,      # (K, m_b)
+    alpha: jax.Array,  # (K, m_b)
+    w: jax.Array,      # (d,)
+    idx: jax.Array,    # (K, H)
+    *,
+    loss: Loss,
+    lm: float,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (delta_alpha (K, m_b), delta_w (K, d))."""
+    K, m_b, d = X.shape
+    H = idx.shape[1]
+    xsq = jnp.sum(X * X, axis=2) / lm
+
+    kernel = functools.partial(_sdca_kernel, lm=lm, loss=loss, H=H)
+    da, dw = pl.pallas_call(
+        kernel,
+        grid=(K,),
+        in_specs=[
+            pl.BlockSpec((None, m_b, d), lambda k: (k, 0, 0)),
+            pl.BlockSpec((None, m_b), lambda k: (k, 0)),
+            pl.BlockSpec((None, m_b), lambda k: (k, 0)),
+            pl.BlockSpec((d,), lambda k: (0,)),       # shared w
+            pl.BlockSpec((None, m_b), lambda k: (k, 0)),
+            pl.BlockSpec((None, H), lambda k: (k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, m_b), lambda k: (k, 0)),
+            pl.BlockSpec((None, d), lambda k: (k, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, m_b), X.dtype),
+            jax.ShapeDtypeStruct((K, d), X.dtype),
+        ],
+        interpret=interpret,
+    )(X, y, alpha, w, xsq, idx)
+    return da, dw

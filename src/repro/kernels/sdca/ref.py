@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the blocked SDCA kernel: K workers, each running H
+sequential closed-form coordinate maximizations over its own data block
+(Procedure P / Algorithm 1's inner parallel loop)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dual import Loss
+
+
+def sdca_block_ref(
+    X: jax.Array,       # (K, m_b, d) per-worker data blocks
+    y: jax.Array,       # (K, m_b)
+    alpha: jax.Array,   # (K, m_b) current dual blocks
+    w: jax.Array,       # (d,) shared primal iterate (w = A alpha)
+    idx: jax.Array,     # (K, H) int32 coordinate choices
+    *,
+    loss: Loss,
+    lm: float,          # lambda * m_total
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (delta_alpha (K, m_b), delta_w (K, d))."""
+    K, m_b, d = X.shape
+    H = idx.shape[1]
+    xsq_over_lm = jnp.sum(X * X, axis=2) / lm  # (K, m_b)
+
+    def worker(Xk, yk, ak, idxk, xsqk):
+        def body(h, carry):
+            a_c, w_c = carry
+            i = idxk[h]
+            x_i = Xk[i]
+            wx = jnp.dot(w_c, x_i)
+            dlt = loss.coord_delta(wx, a_c[i], yk[i], xsqk[i])
+            return a_c.at[i].add(dlt), w_c + (dlt / lm) * x_i
+
+        a_end, w_end = jax.lax.fori_loop(0, H, body, (ak, w))
+        return a_end - ak, w_end - w
+
+    da, dw = jax.vmap(worker)(X, y, alpha, idx, xsq_over_lm)
+    return da, dw

@@ -1,0 +1,269 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile EVERY (architecture x input-shape)
+cell for the production meshes, record memory/cost/collective analysis.
+
+The two lines above must run before ANY jax import (jax locks the device
+count at first backend init), hence the unusual module layout.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b \
+        --shape train_4k --mesh single --force
+    PYTHONPATH=src python -m repro.launch.dryrun --list
+
+Results are written incrementally to results/dryrun/<arch>__<shape>__<mesh>.json
+so an interrupted sweep resumes where it stopped (fault tolerance for the
+analysis itself).
+
+(No ``from __future__`` import here: the XLA_FLAGS lines must be the very
+first statements of the module.)
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs.registry import ARCHS, get_config
+from repro.configs.shapes import SHAPES
+from repro.launch import roofline as rf
+from repro.launch import sharding as sh
+from repro.launch import steps
+from repro.launch.mesh import make_production_mesh
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+MESHES = {"single": False, "multi": True}
+
+# Baseline settings per shape kind (chosen so every cell fits 16 GiB HBM;
+# see EXPERIMENTS.md §Perf for the measurements behind them):
+#   * train: sequence-parallel residual boundaries (act_seq -> model) +
+#     4-way gradient accumulation.
+#   * prefill/decode: default rules (no remat-saved activations).
+def baseline_settings(kind: str) -> Dict[str, Any]:
+    if kind == "train":
+        return {
+            "rules": dataclasses.replace(sh.DEFAULT_RULES,
+                                         act_seq=("model",)),
+            "microbatches": 4,
+        }
+    return {"rules": sh.DEFAULT_RULES, "microbatches": 1}
+
+
+def _pattern_len(cfg) -> int:
+    if cfg.is_rwkv or not cfg.block_pattern:
+        return 1
+    return len(cfg.block_pattern)
+
+
+def _compile_once(cfg, shape, mesh, rules, microbatches=1):
+    """(compiled, lower_s, compile_s) for one cell variant."""
+    t0 = time.time()
+    cell = steps.build_cell(cfg, shape, mesh, rules=rules,
+                            microbatches=microbatches)
+    lowered = cell.lower()
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    return compiled, t_lower, time.time() - t0 - t_lower
+
+
+def _analyze(compiled) -> Dict[str, Any]:
+    cost = compiled.cost_analysis()
+    csum = rf.collective_summary(rf.parse_collectives(compiled.as_text()))
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "wire": float(csum["wire_bytes_per_chip"]),
+            "csum": csum}
+
+
+def _affine(v1: float, v2: float, n1: int, n2: int, n: int) -> float:
+    """Fit v = a + b*n through (n1,v1),(n2,v2); evaluate at n."""
+    b = (v2 - v1) / (n2 - n1)
+    return v1 + b * (n - n1)
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             rules: Optional[sh.AxisRules] = None,
+             verbose: bool = True,
+             cfg_overrides: Optional[Dict[str, Any]] = None,
+             microbatches: Optional[int] = None) -> Dict[str, Any]:
+    """Lower+compile one cell; return the full analysis record.
+
+    XLA's cost_analysis counts a while (lax.scan) body ONCE, so the scanned
+    full-depth compile under-reports per-layer flops/bytes/collectives. All
+    of those are exactly affine in the number of layer blocks, so we:
+      1. compile the TRUE config (layer scan) -> memory analysis + the
+         deliverable 'this program compiles on this mesh',
+      2. compile UNROLLED 1-block and 2-block variants (cheap) and fit
+         a + b*n per metric, evaluated at the true depth.
+    """
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind,
+    }
+    ok, why = steps.cell_is_supported(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=MESHES[mesh_name])
+    n_chips = mesh.devices.size
+    base = baseline_settings(shape.kind)
+    rules = rules or base["rules"]
+    mb = microbatches if microbatches else base["microbatches"]
+    mb = mb if shape.kind == "train" else 1
+    try:
+        # (1) true config, scanned layers -- proves the cell compiles
+        compiled, t_lower, t_compile = _compile_once(cfg, shape, mesh,
+                                                     rules, mb)
+        mem = compiled.memory_analysis()
+        scan_metrics = _analyze(compiled)
+
+        # (2) affine fit on unrolled 1-block / 2-block variants
+        p = _pattern_len(cfg)
+        tail = cfg.num_layers % p
+        n_target = cfg.num_layers // p
+        n1, n2 = 1, 2
+        fits: Dict[int, Dict[str, Any]] = {}
+        for nb in (n1, n2):
+            c_small = dataclasses.replace(
+                cfg, num_layers=nb * p + tail, scan_layers=False)
+            comp_s, _, _ = _compile_once(c_small, shape, mesh, rules, mb)
+            fits[nb] = _analyze(comp_s)
+
+        flops = _affine(fits[n1]["flops"], fits[n2]["flops"], n1, n2,
+                        n_target)
+        nbytes = _affine(fits[n1]["bytes"], fits[n2]["bytes"], n1, n2,
+                         n_target)
+        wire = _affine(fits[n1]["wire"], fits[n2]["wire"], n1, n2, n_target)
+        # per-op wire-byte breakdown, extrapolated the same way
+        by_op = {}
+        ops = set(fits[n1]["csum"]["by_op"]) | set(fits[n2]["csum"]["by_op"])
+        for op in ops:
+            w1 = fits[n1]["csum"]["by_op"].get(op, {}).get(
+                "wire_bytes_per_chip", 0.0)
+            w2 = fits[n2]["csum"]["by_op"].get(op, {}).get(
+                "wire_bytes_per_chip", 0.0)
+            c1 = fits[n1]["csum"]["by_op"].get(op, {}).get("count", 0)
+            c2 = fits[n2]["csum"]["by_op"].get(op, {}).get("count", 0)
+            by_op[op] = {
+                "wire_bytes_per_chip": _affine(w1, w2, n1, n2, n_target),
+                "count": round(_affine(c1, c2, n1, n2, n_target)),
+            }
+    except Exception as e:  # a failure here is a bug in our sharding
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        return rec
+
+    csum = {"by_op": by_op, "wire_bytes_per_chip": wire}
+    mflops = rf.model_flops(cfg, shape)
+    roof = rf.roofline({"flops": flops, "bytes accessed": nbytes}, csum,
+                       n_chips, mflops)
+
+    peak_bytes = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                  + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    rec.update(
+        status="ok",
+        n_chips=n_chips,
+        analysis_mode="scan-compile + unrolled 1/2-block affine fit",
+        timings={"lower_s": round(t_lower, 2),
+                 "compile_s": round(t_compile, 2)},
+        memory={
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_per_device": peak_bytes,
+            "peak_gib_per_device": round(peak_bytes / 2**30, 3),
+            "fits_hbm_16gib": bool(peak_bytes < 16 * 2**30),
+        },
+        cost={"flops_per_chip": flops, "bytes_per_chip": nbytes,
+              "scan_compile_flops": scan_metrics["flops"]},
+        collectives=csum,
+        roofline=roof,
+        params_total=cfg.param_count(),
+        params_active=cfg.active_param_count(),
+    )
+    if verbose:
+        print(f"  {arch} x {shape_name} x {mesh_name}: "
+              f"{rec['memory']['peak_gib_per_device']} GiB/dev, "
+              f"dominant={roof['dominant']}, "
+              f"roofline_frac={roof['roofline_fraction']:.3f}, "
+              f"useful={roof['useful_ratio']:.2f}, "
+              f"compile={t_compile:.0f}s", flush=True)
+    return rec
+
+
+def cell_path(arch: str, shape: str, mesh: str) -> Path:
+    safe = arch.replace(".", "_")
+    return RESULTS / f"{safe}__{shape}__{mesh}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells that already have results")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    global RESULTS
+    if args.out:
+        RESULTS = Path(args.out)
+    RESULTS.mkdir(parents=True, exist_ok=True)
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.list:
+        for a in archs:
+            for s in shapes:
+                ok, why = steps.cell_is_supported(get_config(a), SHAPES[s])
+                print(a, s, "OK" if ok else f"SKIP ({why})")
+        return
+
+    n_dev = len(jax.devices())
+    assert n_dev == 512, f"expected 512 forced host devices, got {n_dev}"
+
+    failures = []
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                p = cell_path(a, s, m)
+                if p.exists() and not args.force:
+                    rec = json.loads(p.read_text())
+                    print(f"  [cached] {a} x {s} x {m}: {rec['status']}")
+                    if rec["status"] == "error":
+                        failures.append((a, s, m))
+                    continue
+                rec = run_cell(a, s, m)
+                p.write_text(json.dumps(rec, indent=1))
+                if rec["status"] == "error":
+                    failures.append((a, s, m))
+                    print(f"  ERROR {a} x {s} x {m}: {rec['error']}",
+                          flush=True)
+
+    print(f"\ndone; {len(failures)} failures")
+    for f in failures:
+        print("  FAILED:", *f)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""TPU v5e hardware constants used by the roofline analysis (target
+hardware; this container is CPU-only so these are never 'measured')."""
+
+PEAK_FLOPS_BF16 = 197e12      # per chip, bf16 MXU
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (intra-pod)
+DCI_BW = 6.25e9               # bytes/s cross-pod (data-center network)
+ICI_LATENCY = 1e-5            # s per hop
+DCI_LATENCY = 1e-3            # s per hop
+HBM_PER_CHIP = 16 * 2**30     # 16 GiB
+VMEM_PER_CHIP = 128 * 2**20   # ~128 MiB vector memory

@@ -1,0 +1,194 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh) cell, all in seconds (lower = the
+floor set by that resource):
+
+  compute    = HLO_FLOPs / (chips * 197e12)
+  memory     = HLO_bytes / (chips * 819e9)
+  collective = collective wire bytes per chip / 50e9 (ICI link bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-program,
+so divided by chip count). Collective bytes are NOT in cost_analysis: we
+parse the *post-SPMD-partitioning* HLO (``compiled.as_text()``) and apply
+ring-collective wire formulas per op:
+
+  all-reduce          2 (n-1)/n * bytes     (reduce-scatter + all-gather)
+  all-gather            (n-1)/n * result bytes
+  reduce-scatter        (n-1)/n * operand bytes
+  all-to-all            (n-1)/n * bytes
+  collective-permute              bytes
+
+with n = replica-group size parsed from the op's replica_groups.
+MODEL_FLOPS = 6 N D (train) / 2 N D (forward-only), N = active params --
+the usefulness ratio MODEL_FLOPS/HLO_FLOPs exposes remat/redundant compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Any, Dict, List, Optional
+
+from repro.launch import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+# one HLO shape like bf16[16,1024]{1,0} or f32[] ; layout suffix optional
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+# an instruction line:  %name = SHAPE-or-tuple opname(...)
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"((?:all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute|ragged-all-to-all)(?:-start|-done)?)\(")
+_GROUPS_RE = re.compile(
+    r"replica_groups=(?:\{(.*?)\}\}|\[(\d+),(\d+)\])")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of one HLO shape string (or tuple of shapes)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    """Parse replica-group size: {{0,1},{2,3}} or iota [ngroups,gsize]<=..."""
+    m = _GROUPS_RE.search(line)
+    if m:
+        if m.group(1) is not None:
+            first = m.group(1).split("}")[0]
+            return max(first.count(",") + 1, 1)
+        return int(m.group(3))
+    # collective-permute has source_target_pairs instead
+    return 2
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    op: str
+    result_bytes: int
+    group_size: int
+    count: int = 1
+
+    def wire_bytes_per_chip(self) -> float:
+        """Ring-collective bytes each chip must push over its link."""
+        n = max(self.group_size, 1)
+        b = self.result_bytes
+        if n == 1:
+            return 0.0
+        if self.op.startswith("all-reduce"):
+            return 2.0 * (n - 1) / n * b
+        if self.op.startswith("all-gather"):
+            return (n - 1) / n * b
+        if self.op.startswith("reduce-scatter"):
+            # result is the scattered shard; operand was n x larger
+            return (n - 1) * b
+        if self.op.startswith(("all-to-all", "ragged-all-to-all")):
+            return (n - 1) / n * b
+        if self.op.startswith("collective-permute"):
+            return float(b)
+        return float(b)
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    """All collective instructions of the post-partitioning HLO module."""
+    agg: Dict[tuple, CollectiveOp] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        if op.endswith("-done"):
+            continue  # counted at -start
+        base = op[:-6] if op.endswith("-start") else op
+        b = shape_bytes(shape_str)
+        n = _group_size(line)
+        key = (base, b, n)
+        if key in agg:
+            agg[key].count += 1
+        else:
+            agg[key] = CollectiveOp(base, b, n)
+    return list(agg.values())
+
+
+def collective_summary(ops: List[CollectiveOp]) -> Dict[str, Any]:
+    by_op: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "result_bytes": 0, "wire_bytes_per_chip": 0.0})
+    for c in ops:
+        d = by_op[c.op]
+        d["count"] += c.count
+        d["result_bytes"] += c.result_bytes * c.count
+        d["wire_bytes_per_chip"] += c.wire_bytes_per_chip() * c.count
+    total_wire = sum(d["wire_bytes_per_chip"] for d in by_op.values())
+    total_result = sum(d["result_bytes"] for d in by_op.values())
+    return {"by_op": dict(by_op), "wire_bytes_per_chip": total_wire,
+            "result_bytes": total_result,
+            "n_ops": sum(d["count"] for d in by_op.values())}
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS
+# ---------------------------------------------------------------------------
+def model_flops(cfg, shape) -> float:
+    """6 N D for training, 2 N D forward-only; N = active params,
+    D = tokens processed by the step."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+# ---------------------------------------------------------------------------
+# the three terms
+# ---------------------------------------------------------------------------
+def roofline(cost: Dict[str, float], collectives: Dict[str, Any],
+             n_chips: int, mflops: float) -> Dict[str, Any]:
+    # cost_analysis() under SPMD reports the ONE-partition program, i.e.
+    # numbers are already per-chip (verified: sharded matmul reports
+    # total/chips). So: per-chip time = per-chip work / per-chip rate, which
+    # equals the spec's HLO_total/(chips * rate).
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    compute_s = flops / hw.PEAK_FLOPS_BF16
+    memory_s = nbytes / hw.HBM_BW
+    collective_s = collectives["wire_bytes_per_chip"] / hw.ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    ideal_s = mflops / (n_chips * hw.PEAK_FLOPS_BF16)
+    return {
+        **terms,
+        "dominant": dominant,
+        "model_flops": mflops,
+        "hlo_flops": flops,
+        "hlo_bytes": nbytes,
+        "useful_ratio": (mflops / (flops * n_chips)
+                         if flops else 0.0),
+        "roofline_fraction": ideal_s / step_s if step_s else 0.0,
+        "step_time_lower_bound_s": step_s,
+    }

@@ -1,0 +1,7 @@
+from repro.models.transformer import (  # noqa: F401
+    forward_train,
+    init_cache,
+    init_params,
+    prefill,
+    decode_step,
+)

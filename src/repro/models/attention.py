@@ -1,0 +1,193 @@
+"""Multi-head attention: GQA, qk-norm, QKV bias, sliding window, RoPE.
+
+Training/prefill uses a *query-chunked* implementation (lax.scan over query
+blocks) so the (S x S) score matrix is never materialized -- mandatory for
+the 32k prefill shapes. Decode attends a (possibly ring-buffered) KV cache.
+
+``attention_impl="flash"`` routes to the Pallas flash kernel
+(repro.kernels.flash_attention) on TPU; the XLA paths below are the oracle.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, rms_norm, rope, split_keys
+
+Array = jax.Array
+NEG_INF = -2.0**30
+
+
+def init_attn_params(key, cfg: ModelConfig, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = split_keys(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), dtype),
+        "wk": dense_init(ks[1], (d, kv * hd), dtype),
+        "wv": dense_init(ks[2], (d, kv * hd), dtype),
+        "wo": dense_init(ks[3], (h * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x: Array, positions: Array):
+    """x: (B, S, D) -> q (B,S,H,hd), k/v (B,S,KV,hd) with rope + qk-norm."""
+    B, S, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, h, hd)
+    k = k.reshape(B, S, kv, hd)
+    v = v.reshape(B, S, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(x: Array, n_rep: int) -> Array:
+    if n_rep == 1:
+        return x
+    return jnp.repeat(x, n_rep, axis=2)
+
+
+def _masked_softmax(scores: Array, mask: Array) -> Array:
+    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+    # guard fully-masked rows (outside window) against NaN
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - jax.lax.stop_gradient(m))
+    e = jnp.where(mask, e, 0.0)
+    return e / (jnp.sum(e, axis=-1, keepdims=True) + 1e-30)
+
+
+def attention_train(
+    p, cfg: ModelConfig, x: Array, positions: Array,
+    window: Optional[int] = None,
+) -> Array:
+    """Causal (optionally windowed) self-attention over full sequences,
+    chunked over queries. x: (B, S, D) -> (B, S, D).
+
+    GQA is computed with *grouped* einsums (query heads reshaped to
+    (kv_heads, group)): K/V are never materialized at q-head width, which
+    cuts their HBM stream h/kv-fold."""
+    B, S, D = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    rep = h // kv
+    win = window if window is not None else cfg.window
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    scale = hd**-0.5
+
+    qc = min(cfg.q_chunk_size, S)
+    n_chunks = S // qc
+    assert S % qc == 0, f"seq {S} must divide q_chunk {qc}"
+
+    kpos = positions  # (B, S)
+
+    def chunk_fn(carry, inputs):
+        q_blk, qpos = inputs  # (B, qc, H, hd), (B, qc)
+        qg = q_blk.reshape(B, qc, kv, rep, hd)
+        # scores: (B, KV, rep, qc, S)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
+                       preferred_element_type=jnp.float32) * scale
+        causal = qpos[:, None, None, :, None] >= kpos[:, None, None, None, :]
+        if win is not None:
+            causal &= (qpos[:, None, None, :, None]
+                       - kpos[:, None, None, None, :]) < win
+        probs = _masked_softmax(s, causal)
+        o = jnp.einsum("bgrqk,bkgd->bqgrd", probs.astype(v.dtype), v)
+        return carry, o.reshape(B, qc, h, hd)
+
+    q_chunks = q.reshape(B, n_chunks, qc, h, hd).swapaxes(0, 1)
+    p_chunks = positions.reshape(B, n_chunks, qc).swapaxes(0, 1)
+    # unroll in analysis mode: XLA cost_analysis counts a while body once
+    _, outs = jax.lax.scan(chunk_fn, None, (q_chunks, p_chunks),
+                           unroll=not cfg.scan_layers)
+    out = outs.swapaxes(0, 1).reshape(B, S, h * hd)
+    return out @ p["wo"]
+
+
+def attention_flash(p, cfg: ModelConfig, x: Array, positions: Array,
+                    window: Optional[int] = None) -> Array:
+    """Pallas flash-attention path (TPU target; interpret-mode on CPU)."""
+    from repro.kernels.flash_attention.ops import flash_attention
+
+    B, S, D = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    win = window if window is not None else cfg.window
+    out = flash_attention(q, k, v, causal=True, window=win)
+    return out.reshape(B, S, h * hd) @ p["wo"]
+
+
+def attend(p, cfg: ModelConfig, x: Array, positions: Array,
+           window: Optional[int] = None) -> Array:
+    if cfg.attention_impl == "flash":
+        return attention_flash(p, cfg, x, positions, window)
+    return attention_train(p, cfg, x, positions, window)
+
+
+# ---------------------------------------------------------------------------
+# decode: one new token against a KV cache
+# ---------------------------------------------------------------------------
+def init_layer_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     window: Optional[int] = None, dtype=jnp.bfloat16):
+    """KV cache for ONE attention layer. Windowed layers use a ring buffer of
+    size `window`; `pos` tracks absolute positions of each slot (-1 = empty)."""
+    win = window if window is not None else cfg.window
+    n = min(max_len, win) if win is not None else max_len
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, n, kv, hd), dtype),
+        "v": jnp.zeros((batch, n, kv, hd), dtype),
+        "slot_pos": jnp.full((n,), -1, jnp.int32),
+    }
+
+
+def decode_attention(
+    p, cfg: ModelConfig, x: Array, pos: Array, cache: dict,
+    window: Optional[int] = None,
+) -> Tuple[Array, dict]:
+    """x: (B, 1, D); pos: scalar int32 (same position for the whole batch,
+    standard batched decode). Returns (out (B,1,D), new cache)."""
+    B = x.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+
+    n = cache["k"].shape[1]
+    slot = pos % n  # ring for windowed layers; identity while pos < n
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    slot_pos = jax.lax.dynamic_update_slice(
+        cache["slot_pos"], pos[None].astype(jnp.int32), (slot,))
+
+    # grouped-GQA scores: K/V streamed at kv-head width (never repeated)
+    qg = q.reshape(B, 1, kv, h // kv, hd)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
+                   preferred_element_type=jnp.float32) * hd**-0.5
+    win = window if window is not None else cfg.window
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if win is not None:
+        valid &= (pos - slot_pos) < win
+    probs = _masked_softmax(s, valid[None, None, None, None, :])
+    o = jnp.einsum("bgrqk,bkgd->bqgrd", probs.astype(v.dtype), v)
+    out = o.reshape(B, 1, h * hd) @ p["wo"]
+    return out, {"k": k, "v": v, "slot_pos": slot_pos}

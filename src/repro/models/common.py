@@ -1,0 +1,57 @@
+"""Shared model primitives: norms, rotary embeddings, init helpers."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def rope(x: Array, positions: Array, theta: float = 10_000.0) -> Array:
+    """Rotary embedding. x: (..., S, H, hd); positions: (..., S) int."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    ang = ang[..., None, :]  # broadcast over heads: (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    return jnp.concatenate([xr1, xr2], axis=-1).astype(x.dtype)
+
+
+def dense_init(key: Array, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else fan_in**-0.5
+    return (jax.random.normal(key, shape) * s).astype(dtype)
+
+
+def split_keys(key: Array, n: int):
+    return list(jax.random.split(key, n))
+
+
+def cast_floats(tree, dtype):
+    """Cast float leaves to `dtype` (mixed precision: f32 master weights are
+    cast to the activation dtype at use; sensitive paths re-cast to f32
+    internally)."""
+    def c(t):
+        if hasattr(t, "dtype") and jnp.issubdtype(t.dtype, jnp.floating):
+            return t.astype(dtype)
+        return t
+    return jax.tree.map(c, tree)

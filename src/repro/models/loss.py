@@ -1,0 +1,49 @@
+"""Sequence-chunked cross-entropy: the (B, S, V) logits tensor is never
+materialized (vocab up to 256k x 1M tokens would be ~1 TB); logits are
+computed and reduced chunk-by-chunk under lax.scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def chunked_xent(
+    h: Array,           # (B, S, D) final hidden states
+    unemb: Array,       # (D, V)
+    labels: Array,      # (B, S) int32
+    mask: Array,        # (B, S) {0,1}
+    chunk: int = 512,
+    unroll: bool = False,  # analysis mode: while bodies count once
+) -> tuple[Array, Array]:
+    """Returns (sum_loss, sum_mask)."""
+    B, S, D = h.shape
+    c = min(chunk, S)
+    assert S % c == 0, f"S={S} not divisible by loss chunk {c}"
+    nc = S // c
+    hs = h.reshape(B, nc, c, D).swapaxes(0, 1)
+    ls = labels.reshape(B, nc, c).swapaxes(0, 1)
+    ms = mask.reshape(B, nc, c).swapaxes(0, 1)
+
+    # remat: without this, grad-of-scan saves every chunk's (B, c, V)
+    # logits for the softmax backward -- 20 GiB/device at 256k vocab
+    # (measured, see EXPERIMENTS.md §Perf); recomputing them per chunk in
+    # the backward keeps only (lse, ll) per chunk.
+    @jax.checkpoint
+    def chunk_loss(hc, lc, mc):
+        logits = hc.astype(jnp.float32) @ unemb.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - ll) * mc)
+
+    def body(carry, inp):
+        hc, lc, mc = inp
+        return (carry[0] + chunk_loss(hc, lc, mc),
+                carry[1] + jnp.sum(mc)), None
+
+    (loss_sum, n), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (hs, ls, ms),
+        unroll=unroll,
+    )
+    return loss_sum, n

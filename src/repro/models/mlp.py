@@ -1,0 +1,122 @@
+"""Feed-forward layers: SwiGLU / GELU MLPs and capacity-based top-k MoE.
+
+The MoE uses scatter-based token dispatch (GShard-style, static capacity) so
+the (tokens x experts) one-hot never feeds a matmul: tokens are scattered
+into an (E, C, D) buffer, experts run as one batched einsum (expert-parallel
+over the "model" mesh axis), and results gather back with combine weights.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, split_keys
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# dense MLPs
+# ---------------------------------------------------------------------------
+def init_mlp_params(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = split_keys(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], (d, f), dtype),
+            "w_up": dense_init(ks[1], (d, f), dtype),
+            "w_down": dense_init(ks[2], (f, d), dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], (d, f), dtype),
+        "w_down": dense_init(ks[1], (f, d), dtype),
+    }
+
+
+def mlp(p, cfg: ModelConfig, x: Array) -> Array:
+    if cfg.mlp_type == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return jax.nn.gelu(x @ p["w_up"]) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+def init_moe_params(key, cfg: ModelConfig, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = split_keys(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d, f), dtype),
+        "w_up": dense_init(ks[2], (e, d, f), dtype),
+        "w_down": dense_init(ks[3], (e, f, d), dtype),
+    }
+    if cfg.moe_dense_ff:
+        p["dense"] = init_mlp_params(ks[4], cfg, dtype, d_ff=cfg.moe_dense_ff)
+    return p
+
+
+def moe(p, cfg: ModelConfig, x: Array) -> Tuple[Array, Array]:
+    """x: (B, S, D) -> ((B, S, D), aux_loss). Top-k routing, static
+    capacity, scatter dispatch; optional parallel dense residual branch
+    (arctic). The load-balance aux loss shares this router pass (computing
+    it separately doubled router+top_k work -- see EXPERIMENTS.md §Perf)."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    xf = x.reshape(T, D)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])  # (T, E) in f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, K)  # (T, K)
+    # Switch-style load-balance loss from the same routing decision
+    frac = jnp.mean(jax.nn.one_hot(gate_idx, E, dtype=jnp.float32),
+                    axis=(0, 1))
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=0))
+    gate_w = gate_w / (jnp.sum(gate_w, axis=-1, keepdims=True) + 1e-9)
+
+    # flatten (token, k) assignments
+    eids = gate_idx.reshape(T * K)
+    C = max(int(cfg.capacity_factor * T * K / E), 1)
+
+    onehot = jax.nn.one_hot(eids, E, dtype=jnp.int32)  # (T*K, E)
+    pos_in_e = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1  # (T*K,)
+    keep = (pos_in_e < C) & (pos_in_e >= 0)
+    slot = jnp.clip(pos_in_e, 0, C - 1)
+
+    tok_rep = jnp.repeat(xf, K, axis=0)  # (T*K, D)
+    buf = jnp.zeros((E, C, D), x.dtype)
+    buf = buf.at[eids, slot].add(
+        jnp.where(keep[:, None], tok_rep, 0.0).astype(x.dtype),
+        mode="drop",
+    )
+
+    # batched expert FFN: (E, C, D) x (E, D, F)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["w_up"]
+    )
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])  # (E, C, D)
+
+    # gather back and combine
+    out_tok = out_buf[eids, slot] * keep[:, None].astype(x.dtype)  # (T*K, D)
+    out = (out_tok.reshape(T, K, D) * gate_w[..., None].astype(x.dtype)).sum(1)
+
+    if cfg.moe_dense_ff:
+        out = out + mlp(p["dense"], cfg, xf)
+
+    return out.reshape(B, S, D), aux
+
+
+def ffn(p, cfg: ModelConfig, x: Array) -> Tuple[Array, Array]:
+    """Returns (out, moe_aux_loss) -- aux is 0 for dense FFNs."""
+    if cfg.is_moe:
+        return moe(p, cfg, x)
+    return mlp(p, cfg, x), jnp.float32(0.0)
+
+
+def init_ffn_params(key, cfg: ModelConfig, dtype):
+    return init_moe_params(key, cfg, dtype) if cfg.is_moe else init_mlp_params(
+        key, cfg, dtype)

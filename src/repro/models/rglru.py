@@ -1,0 +1,97 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block:  x -> [in-proj -> causal conv1d(w=4) -> RG-LRU] * gelu(gate-proj)
+          -> out-proj
+
+RG-LRU:  r_t = sigmoid(x_t W_a);  i_t = sigmoid(x_t W_x)
+         a_t = exp(-c * softplus(Lambda) * r_t)          (c = 8)
+         h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses jax.lax.associative_scan over time (parallel,
+sub-quadratic); decode carries (h, conv tail) state — O(1) per token, which
+is what makes the 500k-token long-context cell feasible for this family.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, split_keys
+
+Array = jax.Array
+_C = 8.0
+
+
+def init_rglru_params(key, cfg: ModelConfig, dtype):
+    d, w = cfg.d_model, cfg.lru_width
+    ks = split_keys(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, w), dtype),
+        "w_gate": dense_init(ks[1], (d, w), dtype),
+        "conv": dense_init(ks[2], (cfg.conv_width, w), dtype, scale=0.1),
+        "w_a": dense_init(ks[3], (w, w), dtype),
+        "w_x": dense_init(ks[4], (w, w), dtype),
+        # Lambda parametrized so softplus(lam) spreads decays in (0.9, 0.999)
+        "lam": jnp.linspace(-2.0, 2.0, w).astype(jnp.float32),
+        "w_out": dense_init(ks[5], (w, d), dtype),
+    }
+
+
+def _gates(p, u: Array):
+    """u: (..., W) conv output -> (a_t, b_t) of the recurrence."""
+    r = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_x"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * u.astype(jnp.float32)
+    )
+    return a, b
+
+
+def _scan_linear(a: Array, b: Array) -> Array:
+    """h_t = a_t h_{t-1} + b_t along axis=1 (time), h_0 = 0."""
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block(p, cfg: ModelConfig, x: Array) -> Array:
+    """x: (B, S, D) -> (B, S, D), parallel over time."""
+    u = x @ p["w_in"]  # (B, S, W)
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    # causal conv1d, width cw
+    cw = cfg.conv_width
+    pad = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    conv = sum(pad[:, i : i + u.shape[1]] * p["conv"][i] for i in range(cw))
+    a, b = _gates(p, conv)
+    h = _scan_linear(a, b).astype(x.dtype)
+    return (h * gate) @ p["w_out"]
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width), dtype),
+    }
+
+
+def rglru_decode(p, cfg: ModelConfig, x: Array, cache: dict
+                 ) -> Tuple[Array, dict]:
+    """x: (B, 1, D) -> (B, 1, D); O(1) state update."""
+    u = (x @ p["w_in"])[:, 0]  # (B, W)
+    gate = jax.nn.gelu(x @ p["w_gate"])[:, 0]
+    hist = jnp.concatenate([cache["conv"], u[:, None]], axis=1)  # (B, cw, W)
+    conv = jnp.einsum("bcw,cw->bw", hist, p["conv"])
+    a, b = _gates(p, conv)
+    h = a * cache["h"] + b
+    out = ((h.astype(x.dtype) * gate) @ p["w_out"])[:, None]
+    return out, {"h": h, "conv": hist[:, 1:]}

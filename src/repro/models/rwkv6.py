@@ -1,0 +1,197 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free token/channel mixing
+with data-dependent decay.
+
+Time mixing (per head, head_dim = N):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with w_t = exp(-exp(w0 + lora_w(x~_t)))  (data-dependent decay), and
+data-dependent token-shift interpolation (ddlerp) on the r/k/v/w/g inputs.
+
+Training/prefill runs a *chunked* parallel form (O(S * n * N) intra-chunk +
+O(S/n * N^2) state carries; sub-quadratic in S). Decode carries
+(S, shift) state -- O(1) per token, enabling the 500k long-context cell.
+
+Numerics: per-step log-decay is clamped to [-4, -1e-4] and chunks are kept
+short (16) so every exp() stays inside the f32 range (see test_rwkv6).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, rms_norm, split_keys
+
+Array = jax.Array
+
+CHUNK = 16
+LORA_RANK = 64
+MIX_LORA_RANK = 32
+LOG_W_MIN, LOG_W_MAX = -4.0, -1e-4
+_MIX_NAMES = ("r", "k", "v", "w", "g")
+
+
+def init_rwkv_params(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    n_heads = d // cfg.rwkv_head_dim
+    ks = split_keys(key, 12)
+    return {
+        # time mix
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),
+        "mix_lora_a": dense_init(ks[0], (d, 5 * MIX_LORA_RANK), jnp.float32),
+        "mix_lora_b": dense_init(ks[1], (5, MIX_LORA_RANK, d), jnp.float32,
+                                 scale=0.01),
+        "wr": dense_init(ks[2], (d, d), dtype),
+        "wk": dense_init(ks[3], (d, d), dtype),
+        "wv": dense_init(ks[4], (d, d), dtype),
+        "wg": dense_init(ks[5], (d, d), dtype),
+        "wo": dense_init(ks[6], (d, d), dtype),
+        "w0": jnp.linspace(-1.5, 1.5, d).astype(jnp.float32),
+        "w_lora_a": dense_init(ks[7], (d, LORA_RANK), jnp.float32),
+        "w_lora_b": dense_init(ks[8], (LORA_RANK, d), jnp.float32, scale=0.01),
+        "u": 0.1 * jnp.ones((n_heads, cfg.rwkv_head_dim), jnp.float32),
+        "ln_x": jnp.zeros((d,), jnp.float32),
+        # channel mix
+        "cm_mu_k": 0.5 * jnp.ones((d,), jnp.float32),
+        "cm_mu_r": 0.5 * jnp.ones((d,), jnp.float32),
+        "cm_wk": dense_init(ks[9], (d, cfg.d_ff), dtype),
+        "cm_wv": dense_init(ks[10], (cfg.d_ff, d), dtype),
+        "cm_wr": dense_init(ks[11], (d, d), dtype),
+    }
+
+
+def _ddlerp(p, x: Array, x_prev: Array):
+    """Data-dependent token-shift: one mixed input per r/k/v/w/g stream."""
+    dx = x_prev - x
+    base = x + dx * p["mu"][:, None, None, :]  # (5, B, S, D) via broadcast
+    lora = jnp.tanh((x + dx * 0.5) @ p["mix_lora_a"])  # (B, S, 5*R)
+    B, S, _ = x.shape
+    lora = lora.reshape(B, S, 5, MIX_LORA_RANK).transpose(2, 0, 1, 3)
+    adj = jnp.einsum("nbsr,nrd->nbsd", lora, p["mix_lora_b"])
+    return base + adj * dx  # (5, B, S, D)
+
+
+def _log_decay(p, xw: Array) -> Array:
+    """log w_t in [LOG_W_MIN, LOG_W_MAX]; xw: (B, S, D)."""
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"]) @ p["w_lora_b"]
+    return jnp.clip(-jnp.exp(p["w0"] + lora), LOG_W_MIN, LOG_W_MAX)
+
+
+def _wkv_chunked(r, k, v, log_w, u):
+    """r/k/v/log_w: (B, H, S, N); u: (H, N). Returns (B, H, S, N)."""
+    B, H, S, N = r.shape
+    n = min(CHUNK, S)
+    assert S % n == 0
+    nc = S // n
+    rc, kc, vc, wc = (
+        t.reshape(B, H, nc, n, N).transpose(2, 0, 1, 3, 4)
+        for t in (r, k, v, log_w)
+    )
+
+    def chunk(state, inp):
+        rr, kk, vv, lwst = inp  # (B, H, n, N)
+        lw = jnp.cumsum(lwst, axis=2)  # within-chunk cumulative log decay
+        lw_prev = lw - lwst  # lw_{t-1} (zero at t=0)
+        q_t = rr * jnp.exp(lw_prev)
+        k_t = kk * jnp.exp(-lw)
+        inter = jnp.einsum("bhin,bhnm->bhim", q_t, state)
+        scores = jnp.einsum("bhin,bhjn->bhij", q_t, k_t)
+        mask = jnp.tril(jnp.ones((n, n), bool), k=-1)
+        scores = jnp.where(mask, scores, 0.0)
+        diag = jnp.einsum("bhin,bhin->bhi", rr, u[None, :, None, :] * kk)
+        y = (
+            jnp.einsum("bhij,bhjm->bhim", scores, vv)
+            + diag[..., None] * vv
+            + inter
+        )
+        lw_n = lw[:, :, -1:, :]  # (B, H, 1, N)
+        k_rem = kk * jnp.exp(lw_n - lw)
+        new_state = (
+            jnp.exp(lw_n[:, :, 0, :, None]) * state
+            + jnp.einsum("bhjn,bhjm->bhnm", k_rem, vv)
+        )
+        return new_state, y
+
+    state0 = jnp.zeros((B, H, N, N), jnp.float32)
+    _, ys = jax.lax.scan(chunk, state0, (rc, kc, vc, wc))
+    return ys.transpose(1, 2, 0, 3, 4).reshape(B, H, S, N)
+
+
+def _heads(x: Array, H: int, N: int) -> Array:
+    B, S, _ = x.shape
+    return x.reshape(B, S, H, N).transpose(0, 2, 1, 3)
+
+
+def time_mix(p, cfg: ModelConfig, x: Array) -> Array:
+    """x: (B, S, D) -> (B, S, D), parallel (chunked) over time."""
+    B, S, D = x.shape
+    N = cfg.rwkv_head_dim
+    H = D // N
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev)
+    r = _heads((xr @ p["wr"]).astype(jnp.float32), H, N)
+    k = _heads((xk @ p["wk"]).astype(jnp.float32), H, N)
+    v = _heads((xv @ p["wv"]).astype(jnp.float32), H, N)
+    g = jax.nn.silu(xg @ p["wg"])
+    log_w = _heads(_log_decay(p, xw), H, N)
+    y = _wkv_chunked(r, k, v, log_w, p["u"])  # (B, H, S, N)
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, D)
+    y = rms_norm(y.astype(x.dtype), p["ln_x"])
+    return (y * g) @ p["wo"]
+
+
+def channel_mix(p, cfg: ModelConfig, x: Array) -> Array:
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    xk = x + (x_prev - x) * p["cm_mu_k"]
+    xr = x + (x_prev - x) * p["cm_mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    return jax.nn.sigmoid(xr @ p["cm_wr"]) * (kk @ p["cm_wv"])
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    N = cfg.rwkv_head_dim
+    H = d // N
+    return {
+        "wkv": jnp.zeros((batch, H, N, N), jnp.float32),
+        "tm_prev": jnp.zeros((batch, d), dtype),
+        "cm_prev": jnp.zeros((batch, d), dtype),
+    }
+
+
+def time_mix_decode(p, cfg: ModelConfig, x: Array, cache: dict
+                    ) -> Tuple[Array, dict]:
+    """x: (B, 1, D); O(1) state update."""
+    B, _, D = x.shape
+    N = cfg.rwkv_head_dim
+    H = D // N
+    x_prev = cache["tm_prev"][:, None].astype(x.dtype)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev)
+    r = _heads((xr @ p["wr"]).astype(jnp.float32), H, N)[:, :, 0]
+    k = _heads((xk @ p["wk"]).astype(jnp.float32), H, N)[:, :, 0]
+    v = _heads((xv @ p["wv"]).astype(jnp.float32), H, N)[:, :, 0]
+    g = jax.nn.silu(xg @ p["wg"])
+    w = jnp.exp(_heads(_log_decay(p, xw), H, N)[:, :, 0])  # (B, H, N)
+    S = cache["wkv"]  # (B, H, N, N)
+    kv = jnp.einsum("bhn,bhm->bhnm", k, v)
+    y = jnp.einsum("bhn,bhnm->bhm", r, S + p["u"][None, :, :, None] * kv)
+    S_new = w[..., None] * S + kv
+    y = y.reshape(B, 1, D)
+    y = rms_norm(y.astype(x.dtype), p["ln_x"])
+    out = (y * g) @ p["wo"]
+    return out, {**cache, "wkv": S_new, "tm_prev": x[:, 0]}
+
+
+def channel_mix_decode(p, cfg: ModelConfig, x: Array, cache: dict
+                       ) -> Tuple[Array, dict]:
+    x_prev = cache["cm_prev"][:, None].astype(x.dtype)
+    xk = x + (x_prev - x) * p["cm_mu_k"]
+    xr = x + (x_prev - x) * p["cm_mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    out = jax.nn.sigmoid(xr @ p["cm_wr"]) * (kk @ p["cm_wv"])
+    return out, {**cache, "cm_prev": x[:, 0]}

@@ -1,0 +1,460 @@
+"""Composable decoder-only model covering every assigned architecture:
+dense GQA transformers (qk-norm / QKV-bias / sliding-window variants),
+MoE (top-k + optional dense residual), RG-LRU hybrids (Griffin), and RWKV-6.
+
+Layers are grouped into repeating *pattern blocks* (cfg.block_pattern) and
+stacked, so the forward pass is a single lax.scan per group -- this keeps the
+HLO compact enough to dry-run 64-layer 32B+ configs on a 512-device mesh.
+
+Three execution modes per sub-layer: train (no cache), prefill (build cache),
+decode (consume cache; O(1) state for recurrent families).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.common import (cast_floats, dense_init, dtype_of, rms_norm,
+                                 split_keys)
+from repro.models.loss import chunked_xent
+from repro.models.shardctx import constrain
+
+Array = jax.Array
+PyTree = Any
+
+
+def _pattern(cfg: ModelConfig) -> Tuple[str, ...]:
+    if cfg.is_rwkv:
+        return ("rwkv",)
+    return cfg.block_pattern or ("attn",)
+
+
+def block_layout(cfg: ModelConfig) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+    """(pattern, n_full_blocks, tail_kinds)."""
+    p = _pattern(cfg)
+    n_full = cfg.num_layers // len(p)
+    tail = tuple(p[: cfg.num_layers % len(p)])
+    return p, n_full, tail
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_sublayer(key, cfg: ModelConfig, kind: str, dtype) -> Dict:
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {"ln1": jnp.zeros((cfg.d_model,), dtype)}
+    if kind == "attn":
+        p["mix"] = attn_mod.init_attn_params(k1, cfg, dtype)
+    elif kind == "rec":
+        p["mix"] = rglru_mod.init_rglru_params(k1, cfg, dtype)
+    elif kind == "rwkv":
+        p["mix"] = rwkv_mod.init_rwkv_params(k1, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if kind != "rwkv":
+        p["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+        p["ffn"] = mlp_mod.init_ffn_params(k2, cfg, dtype)
+    else:
+        p["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: Array) -> PyTree:
+    dtype = dtype_of(cfg.param_dtype)
+    pattern, n_full, tail = block_layout(cfg)
+    k_emb, k_blocks, k_tail, k_un = jax.random.split(key, 4)
+
+    def init_block(bk):
+        ks = split_keys(bk, len(pattern))
+        return {f"sub{i}": _init_sublayer(ks[i], cfg, kind, dtype)
+                for i, kind in enumerate(pattern)}
+
+    params: Dict[str, Any] = {
+        "embed": dense_init(k_emb, (cfg.vocab_size, cfg.d_model), dtype,
+                            scale=0.02),
+        "final_ln": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if n_full:
+        params["blocks"] = jax.vmap(init_block)(
+            jax.random.split(k_blocks, n_full))
+    if tail:
+        ks = split_keys(k_tail, len(tail))
+        params["tail"] = [
+            _init_sublayer(ks[i], cfg, kind, dtype)
+            for i, kind in enumerate(tail)
+        ]
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(
+            k_un, (cfg.d_model, cfg.vocab_size), dtype)
+    return params
+
+
+def _unembed(cfg: ModelConfig, params) -> Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+# ---------------------------------------------------------------------------
+# sub-layer application (train mode)
+# ---------------------------------------------------------------------------
+def _sublayer_train(p, cfg: ModelConfig, kind: str, x: Array,
+                    positions: Array) -> Tuple[Array, Array]:
+    """Returns (x, moe_aux_loss)."""
+    p = cast_floats(p, x.dtype)
+    aux = jnp.float32(0.0)
+    h = rms_norm(x, p["ln1"])
+    if kind == "attn":
+        x = x + attn_mod.attend(p["mix"], cfg, h, positions)
+    elif kind == "rec":
+        x = x + rglru_mod.rglru_block(p["mix"], cfg, h)
+    elif kind == "rwkv":
+        x = x + rwkv_mod.time_mix(p["mix"], cfg, h)
+        h2 = rms_norm(x, p["ln2"])
+        x = x + rwkv_mod.channel_mix(p["mix"], cfg, h2)
+        return x, aux
+    h2 = rms_norm(x, p["ln2"])
+    out, aux = mlp_mod.ffn(p["ffn"], cfg, h2)
+    x = x + out
+    return x, aux
+
+
+def _block_train(blk, cfg: ModelConfig, pattern, x: Array,
+                 positions: Array) -> Tuple[Array, Array]:
+    aux = jnp.float32(0.0)
+    for i, kind in enumerate(pattern):
+        x, a = _sublayer_train(blk[f"sub{i}"], cfg, kind, x, positions)
+        aux = aux + a
+    return x, aux
+
+
+def _embed_inputs(cfg: ModelConfig, params, batch) -> Array:
+    dtype = dtype_of(cfg.activation_dtype)
+    if cfg.input_mode == "embeddings" and "embeds" in batch:
+        return batch["embeds"].astype(dtype)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dtype)
+    if cfg.tie_embeddings:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(dtype)
+    return x
+
+
+def forward_hidden(cfg: ModelConfig, params, batch: Dict[str, Array]
+                   ) -> Tuple[Array, Array]:
+    """Full-sequence forward to final hidden states. Returns (h, moe_aux)."""
+    pattern, n_full, tail = block_layout(cfg)
+    x = _embed_inputs(cfg, params, batch)
+    x = constrain(x, "act_batch", "act_seq", "act_embed")
+    B, S, _ = x.shape
+    positions = batch.get(
+        "positions", jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    )
+
+    def inner(blk, x):
+        x, a = _block_train(blk, cfg=cfg, pattern=pattern, x=x,
+                            positions=positions)
+        return constrain(x, "act_batch", "act_seq", "act_embed"), a
+
+    if cfg.remat:
+        block_fn = jax.checkpoint(
+            inner, policy=jax.checkpoint_policies.nothing_saveable)
+    else:
+        block_fn = inner
+
+    aux = jnp.float32(0.0)
+    if n_full:
+        if cfg.scan_layers:
+            def scan_body(carry, blk):
+                x, aux = carry
+                x, a = block_fn(blk, x)
+                return (x, aux + a), None
+
+            (x, aux), _ = jax.lax.scan(scan_body, (x, aux),
+                                       params["blocks"])
+        else:  # unrolled: analysis-grade HLO (see ModelConfig.scan_layers)
+            for i in range(n_full):
+                blk = jax.tree.map(lambda t: t[i], params["blocks"])
+                x, a = block_fn(blk, x)
+                aux = aux + a
+    for i, kind in enumerate(tail):
+        x, a = _sublayer_train(params["tail"][i], cfg, kind, x, positions)
+        aux = aux + a
+        x = constrain(x, "act_batch", "act_seq", "act_embed")
+    return rms_norm(x, params["final_ln"]), aux
+
+
+def forward_train(cfg: ModelConfig, params, batch: Dict[str, Array]
+                  ) -> Tuple[Array, Dict[str, Array]]:
+    """Causal-LM loss. batch: tokens/embeds, labels, optional mask."""
+    h, aux = forward_hidden(cfg, params, batch)
+    labels = batch["labels"]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    loss_sum, n = chunked_xent(h, _unembed(cfg, params), labels, mask,
+                               cfg.logits_chunk,
+                               unroll=not cfg.scan_layers)
+    loss = loss_sum / jnp.maximum(n, 1.0)
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "moe_aux": aux, "tokens": n}
+
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+def _init_sublayer_cache(cfg: ModelConfig, kind: str, batch: int,
+                         max_len: int, dtype):
+    if kind == "attn":
+        return attn_mod.init_layer_cache(cfg, batch, max_len, dtype=dtype)
+    if kind == "rec":
+        return rglru_mod.init_rglru_cache(cfg, batch, dtype=dtype)
+    if kind == "rwkv":
+        return rwkv_mod.init_rwkv_cache(cfg, batch, dtype=dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> PyTree:
+    pattern, n_full, tail = block_layout(cfg)
+
+    def one_block(_):
+        return {
+            f"sub{i}": _init_sublayer_cache(cfg, kind, batch, max_len, dtype)
+            for i, kind in enumerate(pattern)
+        }
+
+    cache: Dict[str, Any] = {"pos": jnp.int32(0)}
+    if n_full:
+        cache["blocks"] = jax.vmap(one_block)(jnp.arange(n_full))
+    if tail:
+        cache["tail"] = [
+            _init_sublayer_cache(cfg, kind, batch, max_len, dtype)
+            for kind in tail
+        ]
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def _sublayer_decode(p, cfg: ModelConfig, kind: str, x: Array, pos: Array,
+                     cache) -> Tuple[Array, PyTree]:
+    p = cast_floats(p, x.dtype)
+    h = rms_norm(x, p["ln1"])
+    if kind == "attn":
+        o, cache = attn_mod.decode_attention(p["mix"], cfg, h, pos, cache)
+        x = x + o
+    elif kind == "rec":
+        o, cache = rglru_mod.rglru_decode(p["mix"], cfg, h, cache)
+        x = x + o
+    elif kind == "rwkv":
+        o, cache = rwkv_mod.time_mix_decode(p["mix"], cfg, h, cache)
+        x = x + o
+        h2 = rms_norm(x, p["ln2"])
+        o, cache = rwkv_mod.channel_mix_decode(p["mix"], cfg, h2, cache)
+        return x + o, cache
+    h2 = rms_norm(x, p["ln2"])
+    x = x + mlp_mod.ffn(p["ffn"], cfg, h2)[0]
+    return x, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache: PyTree, tokens: Array
+                ) -> Tuple[Array, PyTree]:
+    """One token per sequence. tokens: (B, 1) -> logits (B, V)."""
+    pattern, n_full, tail = block_layout(cfg)
+    pos = cache["pos"]
+    x = _embed_inputs(cfg, params, {"tokens": tokens})
+    x = constrain(x, "act_batch", None, "act_embed")
+
+    new_cache: Dict[str, Any] = {"pos": pos + 1}
+    if n_full:
+        def body(x, inp):
+            blk, blk_cache = inp
+            ncache = {}
+            for i, kind in enumerate(pattern):
+                x, c = _sublayer_decode(blk[f"sub{i}"], cfg, kind, x, pos,
+                                        blk_cache[f"sub{i}"])
+                ncache[f"sub{i}"] = c
+            return x, ncache
+
+        if cfg.scan_layers:
+            x, new_cache["blocks"] = jax.lax.scan(
+                body, x, (params["blocks"], cache["blocks"]))
+        else:
+            nblocks = cache["blocks"]
+            for i in range(n_full):
+                blk = jax.tree.map(lambda t: t[i], params["blocks"])
+                bc = jax.tree.map(lambda t: t[i], cache["blocks"])
+                x, nc = body(x, (blk, bc))
+                nblocks = jax.tree.map(
+                    lambda full, new: full.at[i].set(new), nblocks, nc)
+            new_cache["blocks"] = nblocks
+    if tail:
+        new_cache["tail"] = []
+        for i, kind in enumerate(tail):
+            x, c = _sublayer_decode(params["tail"][i], cfg, kind, x, pos,
+                                    cache["tail"][i])
+            new_cache["tail"].append(c)
+    h = rms_norm(x, params["final_ln"])
+    logits = (h[:, 0].astype(jnp.float32)
+              @ _unembed(cfg, params).astype(jnp.float32))
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill: full-sequence forward that also builds the decode cache
+# ---------------------------------------------------------------------------
+def _attn_prefill_cache(p, cfg: ModelConfig, h: Array, positions: Array,
+                        max_len: int, dtype) -> PyTree:
+    """Recompute k/v for the whole prompt and lay them out ring-consistently."""
+    B, S, _ = h.shape
+    _, k, v = attn_mod._project_qkv(p["mix"], cfg, h, positions)
+    cache = attn_mod.init_layer_cache(cfg, B, max_len, dtype=dtype)
+    n = cache["k"].shape[1]
+    take = min(n, S)
+    src = slice(S - take, S)  # last `take` positions
+    pos_tail = positions[0, src]
+    slots = pos_tail % n
+    cache["k"] = cache["k"].at[:, slots].set(k[:, src].astype(dtype))
+    cache["v"] = cache["v"].at[:, slots].set(v[:, src].astype(dtype))
+    cache["slot_pos"] = cache["slot_pos"].at[slots].set(pos_tail)
+    return cache
+
+
+def _sublayer_prefill(p, cfg: ModelConfig, kind: str, x: Array,
+                      positions: Array, max_len: int, dtype
+                      ) -> Tuple[Array, PyTree]:
+    p = cast_floats(p, x.dtype)
+    h = rms_norm(x, p["ln1"])
+    if kind == "attn":
+        cache = _attn_prefill_cache(p, cfg, h, positions, max_len, dtype)
+        x = x + attn_mod.attend(p["mix"], cfg, h, positions)
+    elif kind == "rec":
+        u = h @ p["mix"]["w_in"]
+        gate = jax.nn.gelu(h @ p["mix"]["w_gate"])
+        cw = cfg.conv_width
+        padded = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+        conv = sum(padded[:, i: i + u.shape[1]] * p["mix"]["conv"][i]
+                   for i in range(cw))
+        a, b = rglru_mod._gates(p["mix"], conv)
+        hseq = rglru_mod._scan_linear(a, b)
+        cache = {"h": hseq[:, -1], "conv": padded[:, -(cw - 1):]
+                 if cw > 1 else jnp.zeros((x.shape[0], 0, cfg.lru_width), dtype)}
+        x = x + ((hseq.astype(x.dtype) * gate) @ p["mix"]["w_out"])
+    elif kind == "rwkv":
+        x, cache = _rwkv_prefill(p, cfg, x)
+        return x, cache
+    else:
+        raise ValueError(kind)
+    h2 = rms_norm(x, p["ln2"])
+    x = x + mlp_mod.ffn(p["ffn"], cfg, h2)[0]
+    return x, cache
+
+
+def _rwkv_prefill(p, cfg: ModelConfig, x: Array) -> Tuple[Array, PyTree]:
+    """Run the rwkv sublayer over the prompt, returning terminal state."""
+    h = rms_norm(x, p["ln1"])
+    B, S, D = h.shape
+    N = cfg.rwkv_head_dim
+    H = D // N
+    pm = p["mix"]
+    h_prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    xr, xk, xv, xw, xg = rwkv_mod._ddlerp(pm, h, h_prev)
+    r = rwkv_mod._heads((xr @ pm["wr"]).astype(jnp.float32), H, N)
+    k = rwkv_mod._heads((xk @ pm["wk"]).astype(jnp.float32), H, N)
+    v = rwkv_mod._heads((xv @ pm["wv"]).astype(jnp.float32), H, N)
+    g = jax.nn.silu(xg @ pm["wg"])
+    log_w = rwkv_mod._heads(rwkv_mod._log_decay(pm, xw), H, N)
+    y, state = _wkv_chunked_with_state(r, k, v, log_w, pm["u"])
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, D)
+    y = rms_norm(y.astype(x.dtype), pm["ln_x"])
+    x = x + (y * g) @ pm["wo"]
+    tm_prev = h[:, -1]
+    h2 = rms_norm(x, p["ln2"])
+    x = x + rwkv_mod.channel_mix(pm, cfg, h2)
+    cache = {"wkv": state, "tm_prev": tm_prev, "cm_prev": h2[:, -1]}
+    return x, cache
+
+
+def _wkv_chunked_with_state(r, k, v, log_w, u):
+    """Same as rwkv6._wkv_chunked but also returns the terminal state."""
+    B, H, S, N = r.shape
+    n = min(rwkv_mod.CHUNK, S)
+    nc = S // n
+    rc, kc, vc, wc = (
+        t.reshape(B, H, nc, n, N).transpose(2, 0, 1, 3, 4)
+        for t in (r, k, v, log_w)
+    )
+
+    def chunk(state, inp):
+        rr, kk, vv, lwst = inp
+        lw = jnp.cumsum(lwst, axis=2)
+        lw_prev = lw - lwst
+        q_t = rr * jnp.exp(lw_prev)
+        k_t = kk * jnp.exp(-lw)
+        inter = jnp.einsum("bhin,bhnm->bhim", q_t, state)
+        scores = jnp.einsum("bhin,bhjn->bhij", q_t, k_t)
+        mask = jnp.tril(jnp.ones((n, n), bool), k=-1)
+        scores = jnp.where(mask, scores, 0.0)
+        diag = jnp.einsum("bhin,bhin->bhi", rr, u[None, :, None, :] * kk)
+        y = (jnp.einsum("bhij,bhjm->bhim", scores, vv)
+             + diag[..., None] * vv + inter)
+        lw_n = lw[:, :, -1:, :]
+        k_rem = kk * jnp.exp(lw_n - lw)
+        new_state = (jnp.exp(lw_n[:, :, 0, :, None]) * state
+                     + jnp.einsum("bhjn,bhjm->bhnm", k_rem, vv))
+        return new_state, y
+
+    state0 = jnp.zeros((B, H, N, N), jnp.float32)
+    state, ys = jax.lax.scan(chunk, state0, (rc, kc, vc, wc))
+    return ys.transpose(1, 2, 0, 3, 4).reshape(B, H, S, N), state
+
+
+def prefill(cfg: ModelConfig, params, batch: Dict[str, Array],
+            max_len: Optional[int] = None, cache_dtype=jnp.bfloat16
+            ) -> Tuple[Array, PyTree]:
+    """Process a prompt; return (last-position logits (B, V), decode cache)."""
+    pattern, n_full, tail = block_layout(cfg)
+    x = _embed_inputs(cfg, params, batch)
+    x = constrain(x, "act_batch", "act_seq", "act_embed")
+    B, S, _ = x.shape
+    max_len = max_len or S
+    positions = batch.get(
+        "positions", jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    )
+
+    cache: Dict[str, Any] = {"pos": jnp.int32(S)}
+    if n_full:
+        def body(x, blk):
+            ncache = {}
+            for i, kind in enumerate(pattern):
+                x, c = _sublayer_prefill(blk[f"sub{i}"], cfg, kind, x,
+                                         positions, max_len, cache_dtype)
+                ncache[f"sub{i}"] = c
+            return constrain(x, "act_batch", "act_seq", "act_embed"), ncache
+
+        if cfg.scan_layers:
+            x, cache["blocks"] = jax.lax.scan(body, x, params["blocks"])
+        else:
+            caches = []
+            for i in range(n_full):
+                blk = jax.tree.map(lambda t: t[i], params["blocks"])
+                x, nc = body(x, blk)
+                caches.append(nc)
+            cache["blocks"] = jax.tree.map(
+                lambda *ts: jnp.stack(ts), *caches)
+    if tail:
+        cache["tail"] = []
+        for i, kind in enumerate(tail):
+            x, c = _sublayer_prefill(params["tail"][i], cfg, kind, x,
+                                     positions, max_len, cache_dtype)
+            cache["tail"].append(c)
+    h = rms_norm(x, params["final_ln"])
+    logits = (h[:, -1].astype(jnp.float32)
+              @ _unembed(cfg, params).astype(jnp.float32))
+    return logits, cache

@@ -1,0 +1,19 @@
+"""Minimal pytree optimizers (no external deps): AdamW, Adafactor, SGD.
+
+API (optax-like but self-contained):
+    opt = get_optimizer(cfg)            # from a ModelConfig, or make_adamw(...)
+    state = opt.init(params)
+    params, state = opt.update(params, grads, state)
+"""
+from repro.optim.api import Optimizer, get_optimizer
+from repro.optim.adamw import make_adamw
+from repro.optim.adafactor import make_adafactor
+from repro.optim.sgd import make_sgd
+
+__all__ = [
+    "Optimizer",
+    "get_optimizer",
+    "make_adamw",
+    "make_adafactor",
+    "make_sgd",
+]

@@ -1,0 +1,88 @@
+"""Adafactor (Shazeer & Stern 2018): factored second moments.
+
+Parameters with >= 2 dims (and both trailing dims >= min_dim_size_to_factor)
+store only row/col mean accumulators -- O(n+m) instead of O(nm) -- which is
+what makes optimizer state for the 480B MoE config fit in HBM.
+Implements the standard pieces: pow decay, RMS update clipping, relative
+step-size scaling.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.api import Optimizer
+
+
+def _factored(shape, min_size: int) -> bool:
+    return len(shape) >= 2 and shape[-1] >= min_size and shape[-2] >= min_size
+
+
+def make_adafactor(
+    lr: float = 1e-3,
+    decay_pow: float = 0.8,
+    clip_threshold: float = 1.0,
+    eps1: float = 1e-30,
+    eps2: float = 1e-3,
+    min_dim_size_to_factor: int = 128,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        def leaf_state(p):
+            if _factored(p.shape, min_dim_size_to_factor):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "v": jax.tree.map(leaf_state, params,
+                              is_leaf=lambda x: hasattr(x, "shape")),
+        }
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        stepf = step.astype(jnp.float32)
+        beta2 = 1.0 - stepf ** (-decay_pow)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps1
+            if _factored(p.shape, min_dim_size_to_factor):
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                # rank-1 reconstruction of the second moment
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                u = (g
+                     * jax.lax.rsqrt(vr / jnp.maximum(denom, eps1))[..., None]
+                     * jax.lax.rsqrt(vc)[..., None, :])
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(v)
+                new_s = {"v": v}
+            # RMS clipping
+            rms = jnp.sqrt(jnp.mean(u * u) + eps1)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            pf = p.astype(jnp.float32)
+            # relative step size (scaled by param RMS, floored at eps2)
+            scale = jnp.maximum(jnp.sqrt(jnp.mean(pf * pf)), eps2)
+            pf = pf - lr * scale * u
+            if weight_decay and p.ndim >= 2:
+                pf = pf - lr * weight_decay * pf
+            return pf.astype(p.dtype), new_s
+
+        is_state = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_s, sdef = jax.tree.flatten(state["v"], is_leaf=is_state)
+        out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_v = sdef.unflatten([o[1] for o in out])
+        return new_p, {"step": step, "v": new_v}
+
+    return Optimizer("adafactor", init, update)

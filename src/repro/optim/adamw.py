@@ -1,0 +1,90 @@
+"""AdamW with decoupled weight decay and linear-warmup/cosine schedules.
+
+Moment states are stored in float32 regardless of parameter dtype (standard
+mixed-precision practice); the update is computed in float32 and cast back.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.api import Optimizer
+
+
+def warmup_cosine(lr: float, warmup: int = 100, total: int = 10_000,
+                  final_frac: float = 0.1) -> Callable:
+    """Standard LM schedule: linear warmup then cosine decay to final_frac*lr."""
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return sched
+
+
+def make_adamw(
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: Optional[float] = 1.0,
+    schedule: Optional[Callable] = None,
+) -> Optimizer:
+    sched = schedule if schedule is not None else (lambda step: lr)
+
+    def init(params):
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": zeros,
+            "nu": jax.tree.map(jnp.copy, zeros),
+        }
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        stepf = step.astype(jnp.float32)
+        lr_t = sched(step)
+
+        if grad_clip is not None:
+            gsq = sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)
+            )
+            gnorm = jnp.sqrt(gsq + 1e-16)
+            scale = jnp.minimum(1.0, grad_clip / gnorm)
+        else:
+            scale = jnp.float32(1.0)
+
+        bc1 = 1.0 - b1**stepf
+        bc2 = 1.0 - b2**stepf
+
+        def upd(p, g, mu, nu):
+            g = g.astype(jnp.float32) * scale
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            mhat = mu / bc1
+            nhat = nu / bc2
+            pf = p.astype(jnp.float32)
+            # decoupled weight decay: skip 1-D params (norms, biases)
+            wd = weight_decay if p.ndim >= 2 else 0.0
+            pf = pf - lr_t * (mhat / (jnp.sqrt(nhat) + eps) + wd * pf)
+            return pf.astype(p.dtype), mu, nu
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_mu = jax.tree.leaves(state["mu"])
+        flat_nu = jax.tree.leaves(state["nu"])
+        out = [upd(p, g, m, n)
+               for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_mu = tdef.unflatten([o[1] for o in out])
+        new_nu = tdef.unflatten([o[2] for o in out])
+        return new_p, {"step": step, "mu": new_mu, "nu": new_nu}
+
+    return Optimizer("adamw", init, update)

@@ -1,0 +1,37 @@
+"""Optimizer container + config-driven selection."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """A pair of pure functions over parameter pytrees.
+
+    ``init(params) -> state`` and
+    ``update(params, grads, state) -> (new_params, new_state)``.
+    ``state`` always carries a scalar int32 ``step`` as its first element so
+    checkpointing can report progress uniformly.
+    """
+    name: str
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+
+
+def get_optimizer(cfg, lr: float = 3e-4, weight_decay: float = 0.1) -> Optimizer:
+    """Pick the optimizer named by a ModelConfig (adamw | adafactor | sgd)."""
+    from repro.optim.adafactor import make_adafactor
+    from repro.optim.adamw import make_adamw
+    from repro.optim.sgd import make_sgd
+
+    kind = getattr(cfg, "optimizer", "adamw")
+    if kind == "adamw":
+        return make_adamw(lr=lr, weight_decay=weight_decay)
+    if kind == "adafactor":
+        return make_adafactor(lr=lr)
+    if kind == "sgd":
+        return make_sgd(lr=lr)
+    raise ValueError(f"unknown optimizer {kind!r}")

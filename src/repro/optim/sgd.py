@@ -1,0 +1,42 @@
+"""SGD with (Nesterov) momentum -- used for TreeSync local steps."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.api import Optimizer
+
+
+def make_sgd(lr: float = 0.1, momentum: float = 0.9,
+             nesterov: bool = False) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            mom = None
+        else:
+            mom = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"step": jnp.zeros((), jnp.int32), "mom": mom}
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        if momentum == 0.0:
+            new_p = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new_p, {"step": step, "mom": None}
+
+        def upd(p, g, m):
+            g = g.astype(jnp.float32)
+            m = momentum * m + g
+            d = g + momentum * m if nesterov else m
+            return (p.astype(jnp.float32) - lr * d).astype(p.dtype), m
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["mom"])
+        out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+        return (tdef.unflatten([o[0] for o in out]),
+                {"step": step, "mom": tdef.unflatten([o[1] for o in out])})
+
+    return Optimizer("sgd", init, update)

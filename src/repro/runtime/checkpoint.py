@@ -1,0 +1,154 @@
+"""Fault-tolerant checkpointing: atomic writes, keep-k retention, async
+save thread, auto-resume.
+
+Format: one .npz per checkpoint holding every leaf (keyed by its pytree
+path) + a JSON sidecar with step / pytree structure / metadata. Writes go
+to a temp name then os.replace() -- a crash mid-save can never corrupt the
+latest checkpoint, and restart always resumes from the newest *complete*
+checkpoint (the restart path of the checkpoint/restart story).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import threading
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_STEP_RE = re.compile(r"step_(\d+)\.npz$")
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", None))) for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _unflatten(template: PyTree, arrays: Dict[str, np.ndarray]) -> PyTree:
+    flat, tdef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", None))) for k in path)
+        arr = arrays[key]
+        want = getattr(leaf, "dtype", None)
+        if want is not None and arr.dtype != want:
+            arr = arr.astype(want)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(tdef, [l for _, l in flat].__class__(
+        leaves) if False else leaves)
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+    async_save: bool = False
+
+    def __post_init__(self):
+        self.dir = Path(self.directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ---- save -----------------------------------------------------------
+    def save(self, step: int, state: PyTree,
+             metadata: Optional[Dict] = None) -> Path:
+        if self.async_save:
+            self.wait()  # one in flight at a time
+            host_state = jax.tree.map(np.asarray, state)  # snapshot now
+            self._thread = threading.Thread(
+                target=self._save_sync, args=(step, host_state, metadata))
+            self._thread.start()
+            return self._path(step)
+        return self._save_sync(step, state, metadata)
+
+    def _save_sync(self, step: int, state: PyTree,
+                   metadata: Optional[Dict]) -> Path:
+        final = self._path(step)
+        tmp = final.with_suffix(".tmp.npz")
+        arrays = _flatten(state)
+        # dtype-preserving: bf16 has no numpy dtype -> view as uint16
+        packed = {}
+        dtypes = {}
+        for k, v in arrays.items():
+            if v.dtype == jax.numpy.bfloat16:
+                packed[k] = v.view(np.uint16)
+                dtypes[k] = "bfloat16"
+            else:
+                packed[k] = v
+                dtypes[k] = str(v.dtype)
+        np.savez(tmp, **packed)
+        meta = {"step": int(step), "time": time.time(),
+                "dtypes": dtypes, **(metadata or {})}
+        tmp_meta = final.with_suffix(".tmp.json")
+        tmp_meta.write_text(json.dumps(meta))
+        os.replace(tmp, final)                       # atomic publish
+        os.replace(tmp_meta, final.with_suffix(".json"))
+        self._gc()
+        return final
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ---- restore --------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        steps = sorted(self.all_steps())
+        return steps[-1] if steps else None
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for p in self.dir.glob("step_*.npz"):
+            m = _STEP_RE.search(p.name)
+            if m and p.with_suffix(".json").exists():  # complete only
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def restore(self, template: PyTree, step: Optional[int] = None
+                ) -> Tuple[int, PyTree]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        final = self._path(step)
+        meta = json.loads(final.with_suffix(".json").read_text())
+        with np.load(final) as z:
+            arrays = {}
+            for k in z.files:
+                v = z[k]
+                if meta["dtypes"].get(k) == "bfloat16":
+                    v = v.view(jax.numpy.bfloat16)
+                arrays[k] = v
+        return step, _unflatten(template, arrays)
+
+    # ---- retention ------------------------------------------------------
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: max(len(steps) - self.keep, 0)]:
+            self._path(s).unlink(missing_ok=True)
+            self._path(s).with_suffix(".json").unlink(missing_ok=True)
+
+    def _path(self, step: int) -> Path:
+        return self.dir / f"step_{step:010d}.npz"
+
+
+def resume_or_init(mgr: CheckpointManager, init_fn: Callable[[], PyTree]
+                   ) -> Tuple[int, PyTree]:
+    """Auto-resume: newest complete checkpoint, else fresh init at step 0."""
+    template = None
+    if mgr.latest_step() is not None:
+        template = init_fn()
+        return mgr.restore(template)
+    return 0, init_fn()

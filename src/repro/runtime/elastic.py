@@ -1,0 +1,60 @@
+"""Elastic scaling: re-shard training state onto a different mesh.
+
+When nodes fail (or capacity is added), the job restarts on a different
+device count. Checkpoints are stored as *global* host arrays (see
+checkpoint.py), so elasticity is: rebuild shardings for the new mesh from
+the same rules and device_put. `remesh_state` also works in-process for
+live shrink/grow (state -> host -> new mesh), and `fold_batch` rescales the
+per-replica batch so the global batch size is invariant across remeshes
+(learning dynamics are preserved -- same tokens/step).
+
+The contract that makes this trivially correct: every sharding in the
+framework is a *function of (config, mesh, rules)* -- nothing is baked into
+the state itself.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.launch import sharding as sh
+
+PyTree = Any
+
+
+def to_host(state: PyTree) -> PyTree:
+    """Gather a (possibly sharded) pytree to host numpy arrays."""
+    return jax.tree.map(lambda t: np.asarray(jax.device_get(t)), state)
+
+
+def remesh_state(state: PyTree, shardings: PyTree) -> PyTree:
+    """Place a host (or differently-sharded) state onto new shardings."""
+    return jax.tree.map(
+        lambda t, s: jax.device_put(t, s), state, shardings)
+
+
+def remesh_params(cfg, params: PyTree, new_mesh: Mesh,
+                  rules: sh.AxisRules = sh.DEFAULT_RULES) -> PyTree:
+    pshape = jax.eval_shape(lambda t: t, params)
+    shardings = sh.param_shardings(cfg, pshape, new_mesh, rules)
+    return remesh_state(params, shardings)
+
+
+def fold_batch(global_batch: int, mesh: Mesh) -> Dict[str, int]:
+    """Per-device batch for an invariant global batch on any mesh size."""
+    from repro.launch.mesh import axis_size
+    dp = axis_size(mesh, "data") * axis_size(mesh, "pod")
+    assert global_batch % dp == 0, (
+        f"global batch {global_batch} must divide data parallelism {dp}; "
+        f"pad or regrid the batch")
+    return {"data_parallel": dp, "per_replica": global_batch // dp}
+
+
+def shrink_survivors(n_devices: int, lost: int, model_parallel: int) -> int:
+    """Largest usable device count after losing `lost` devices, keeping the
+    model-parallel group width (a TP group is an atomic failure domain)."""
+    alive = n_devices - lost
+    return (alive // model_parallel) * model_parallel

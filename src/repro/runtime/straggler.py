@@ -1,0 +1,103 @@
+"""Straggler mitigation -- the paper's own mechanism, operationalized.
+
+The paper's core observation (§6): when a link/worker is slow, do MORE
+local work per sync (larger H) instead of letting the barrier idle the
+fleet. TreeSync exposes per-level sync periods; this module turns observed
+per-step timing into updated periods via the paper's eq. (12), plus a
+bounded-skip barrier policy for transient stragglers.
+
+No real cluster exists in this container, so the observation side is an
+interface (`StepTimer.observe`) fed by the launcher; the *decision* side
+(re-optimizing H, skip decisions) is pure and fully tested.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.delay import optimal_h
+
+
+@dataclasses.dataclass
+class StepTimer:
+    """Online robust timing stats per sync level (median + MAD)."""
+    window: int = 64
+
+    def __post_init__(self):
+        self.samples: List[float] = []
+
+    def observe(self, seconds: float) -> None:
+        self.samples.append(seconds)
+        if len(self.samples) > self.window:
+            self.samples.pop(0)
+
+    @property
+    def median(self) -> float:
+        return float(np.median(self.samples)) if self.samples else 0.0
+
+    @property
+    def mad(self) -> float:
+        if not self.samples:
+            return 0.0
+        m = self.median
+        return float(np.median(np.abs(np.array(self.samples) - m)))
+
+    def is_straggling(self, seconds: float, k: float = 5.0,
+                      rel_floor: float = 0.2) -> bool:
+        """Is this step an outlier vs the recent window? Requires BOTH a
+        k-MAD exceedance and a minimum relative slowdown (a 1% blip on a
+        perfectly steady cluster is not a straggler)."""
+        if len(self.samples) < 8:
+            return False
+        return seconds > max(self.median + k * self.mad,
+                             self.median * (1.0 + rel_floor))
+
+
+@dataclasses.dataclass
+class AdaptiveSchedule:
+    """Re-optimize the paper's H when the observed delay drifts.
+
+    C, delta: the convergence-bound constants of eq. (11)-(12);
+    t_total: the planning horizon; re-planning uses the *measured*
+    t_lp (local step) and t_delay (sync barrier) medians.
+    """
+    C: float = 0.5
+    delta: float = 1e-3
+    t_total: float = 3600.0
+    K: int = 2
+    h_max: int = 4096
+    hysteresis: float = 1.3   # only change H when >30% off current optimum
+
+    current_h: int = 1
+
+    def replan(self, t_lp: float, t_delay: float, t_cp: float = 0.0) -> int:
+        h, _ = optimal_h(C=self.C, K=self.K, delta=self.delta,
+                         t_total=self.t_total, t_lp=max(t_lp, 1e-9),
+                         t_delay=max(t_delay, 0.0), t_cp=t_cp,
+                         h_max=self.h_max)
+        if (max(h, self.current_h) / max(min(h, self.current_h), 1)
+                >= self.hysteresis):
+            self.current_h = h
+        return self.current_h
+
+
+@dataclasses.dataclass
+class BoundedSkip:
+    """Transient-straggler policy: a sync round may be skipped (local work
+    continues) at most `max_consecutive` times, then the barrier is forced.
+    This bounds replica divergence: with period H and at most s skips, any
+    two replicas are never more than H*(s+1) local steps apart -- the same
+    bounded-staleness object the paper's tree analysis tolerates (each
+    subtree runs more local rounds before the parent round closes)."""
+    max_consecutive: int = 2
+    skipped: int = 0
+
+    def decide(self, barrier_would_stall: bool) -> bool:
+        """True => skip the sync this round."""
+        if barrier_would_stall and self.skipped < self.max_consecutive:
+            self.skipped += 1
+            return True
+        self.skipped = 0
+        return False

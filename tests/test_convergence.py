@@ -1,0 +1,105 @@
+"""Theorem 1/2 + Proposition 1 rate validation: the empirical gap must decay
+at least as fast as the theoretical bound (in expectation over seeds)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import convergence as conv
+from repro.core import dual as D
+from repro.core.tree import star, two_level
+from repro.core.treedual import tree_dual_solve
+from repro.data.synthetic import gaussian_regression
+
+
+def test_rho_min_power_matches_eigh():
+    X, _ = gaussian_regression(m=60, d=15)
+    lam = 0.1
+    A = np.asarray(D.data_matrix(X, lam))
+    blocks = [slice(0, 20), slice(20, 40), slice(40, 60)]
+    exact = conv.rho_min(A, blocks, lam, 60)
+    approx = conv.rho_min_power(A, blocks, lam, 60, iters=500)
+    assert abs(exact - approx) <= 0.02 * exact + 1e-8
+
+
+def test_rho_min_zero_for_single_block():
+    X, _ = gaussian_regression(m=40, d=10)
+    lam = 0.1
+    A = np.asarray(D.data_matrix(X, lam))
+    assert conv.rho_min(A, [slice(0, 40)], lam, 40) < 1e-8
+
+
+def test_leaf_theta_formula():
+    # Prop 1: H=0 -> Theta=1 (no progress); H->inf -> 0
+    assert conv.leaf_theta(0.1, 100, 1.0, 25, 0) == 1.0
+    assert conv.leaf_theta(0.1, 100, 1.0, 25, 10**6) < 1e-9
+    th1 = conv.leaf_theta(0.1, 100, 1.0, 25, 50)
+    th2 = conv.leaf_theta(0.1, 100, 1.0, 25, 100)
+    assert 0 < th2 < th1 < 1
+
+
+def test_theorem2_bound_holds_star():
+    """Empirical mean gap across seeds <= Theorem-2 bound (with slack for the
+    finite seed count)."""
+    m, d, K, lam = 120, 15, 4, 0.5
+    X, y = gaussian_regression(m=m, d=d)
+    A = np.asarray(D.data_matrix(X, lam))
+    blocks = [slice(k * m // K, (k + 1) * m // K) for k in range(K)]
+    rho = conv.rho_min(A, blocks, lam, m)
+    H, T = 300, 8
+    theta_leaf = conv.leaf_theta(lam, m, D.squared.gamma, m // K, H)
+    theta_round = 1.0 - (1.0 - theta_leaf) / K * (
+        lam * m * D.squared.gamma / (rho + lam * m * D.squared.gamma)
+    )
+
+    a_star = D.ridge_dual_optimum(X, y, lam)
+    d_star = float(D.dual_value(a_star, X, y, D.squared, lam))
+
+    tree = star(K, m // K, outer_rounds=T, local_steps=H)
+    gaps = []
+    for seed in range(5):
+        res = tree_dual_solve(tree, X, y, loss=D.squared, lam=lam,
+                              key=jax.random.PRNGKey(seed))
+        gaps.append(d_star - np.array(res.duals))
+    mean_gap = np.mean(gaps, axis=0)  # over seeds, per round
+    bound = mean_gap[0] * theta_round ** np.arange(T + 1)
+    # allow 2x slack: the bound is in expectation, 5 seeds only
+    assert (mean_gap <= 2.0 * bound + 1e-7).all()
+
+
+def test_tree_theta_recursion_monotone_in_rounds():
+    X, _ = gaussian_regression(m=80, d=10)
+    lam = 0.2
+    A = np.asarray(D.data_matrix(X, lam))
+
+    def make(root_rounds, group_rounds, H):
+        return two_level(2, 2, 20, root_rounds=root_rounds,
+                         group_rounds=group_rounds, local_steps=H)
+
+    th_small = conv.tree_theta(make(1, 1, 50), A, lam, 1.0)
+    th_more_local = conv.tree_theta(make(1, 1, 200), A, lam, 1.0)
+    th_more_rounds = conv.tree_theta(make(3, 2, 50), A, lam, 1.0)
+    assert 0 < th_more_local < th_small < 1
+    assert 0 < th_more_rounds < th_small < 1
+
+
+def test_tree_theta_bound_holds_two_level():
+    m, lam = 80, 0.5
+    X, y = gaussian_regression(m=m, d=10)
+    A = np.asarray(D.data_matrix(X, lam))
+    R = 6
+    tree = two_level(2, 2, m // 4, root_rounds=R, group_rounds=2,
+                     local_steps=200)
+    theta_root = conv.tree_theta(tree, A, lam, D.squared.gamma)
+    # per-root-round factor
+    theta_round = theta_root ** (1.0 / R)
+
+    a_star = D.ridge_dual_optimum(X, y, lam)
+    d_star = float(D.dual_value(a_star, X, y, D.squared, lam))
+    gaps = []
+    for seed in range(5):
+        res = tree_dual_solve(tree, X, y, loss=D.squared, lam=lam,
+                              key=jax.random.PRNGKey(100 + seed))
+        gaps.append(d_star - np.array(res.duals))
+    mean_gap = np.mean(gaps, axis=0)
+    bound = mean_gap[0] * theta_round ** np.arange(R + 1)
+    assert (mean_gap <= 2.0 * bound + 1e-7).all()

@@ -1,0 +1,82 @@
+"""Delay model (eq. (9)-(12)) and optimal-H behaviour (paper SS6, Fig. 4)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import delay as dl
+
+# the paper's Fig. 4 parameter set
+PAPER = dict(C=0.5, K=3, delta=1.0 / 300, t_total=1.0, t_lp=4e-5, t_cp=3e-5)
+
+
+def test_rounds_for_budget_eq10():
+    assert dl.rounds_for_budget(1.0, 100, 4e-5, 0.4, 3e-5) == pytest.approx(
+        1.0 / (4e-5 * 100 + 0.4 + 3e-5)
+    )
+
+
+def test_per_round_factor_limits():
+    # H -> 0: no local progress, factor -> 1
+    assert dl.per_round_factor(0, 0.5, 3, 0.01) == pytest.approx(1.0)
+    # H -> inf: factor -> 1 - C/K
+    assert dl.per_round_factor(10**9, 0.5, 3, 0.01) == pytest.approx(
+        1.0 - 0.5 / 3
+    )
+
+
+def test_optimal_h_increases_with_delay():
+    """Paper Fig. 4(b): optimal H is nondecreasing in the delay ratio r."""
+    rs = [0, 10, 1e3, 1e5, 1e7]
+    hs = dl.optimal_h_vs_delay(rs, **PAPER)
+    assert (np.diff(hs) >= 0).all()
+    assert hs[0] < hs[-1]
+
+
+def test_optimal_h_small_when_no_delay():
+    h, _ = dl.optimal_h(t_delay=0.0, **PAPER)
+    # with no delay, communicate often (H stays small relative to big-delay H)
+    h_big, _ = dl.optimal_h(t_delay=1e5 * PAPER["t_lp"], **PAPER)
+    assert h < h_big
+    assert h <= 200
+
+
+def test_optimal_h_beats_neighbors():
+    h, v = dl.optimal_h(t_delay=10 * PAPER["t_lp"], **PAPER)
+    for other in (max(1, h // 2), h * 2, max(1, h - 1), h + 1):
+        assert v <= dl.log_bound(other, t_delay=10 * PAPER["t_lp"], **PAPER) + 1e-12
+
+
+def test_log_bound_matches_direct_eval_small():
+    # for small numbers compare against direct eq. (12) evaluation
+    H = 50
+    args = dict(C=0.5, K=3, delta=0.01, t_total=1e-2, t_lp=4e-5,
+                t_delay=1e-3, t_cp=3e-5)
+    g = dl.per_round_factor(H, 0.5, 3, 0.01)
+    T = dl.rounds_for_budget(1e-2, H, 4e-5, 1e-3, 3e-5)
+    assert dl.log_bound(H, **args) == pytest.approx(T * math.log(g))
+
+
+def test_ring_allreduce_delay_scaling():
+    link = dl.LinkModel("x", latency_s=1e-6, bw_bytes_per_s=1e9)
+    d2 = dl.ring_allreduce_delay(link, 1e6, 2)
+    d8 = dl.ring_allreduce_delay(link, 1e6, 8)
+    assert d8 > d2  # more hops
+    assert dl.ring_allreduce_delay(link, 1e6, 1) == 0.0
+
+
+def test_plan_hierarchical_h_slow_outer_link_gets_longer_period():
+    """The cross-pod (slow) level must sync less frequently than the
+    intra-pod level -- the paper's qualitative result, applied to TreeSync."""
+    msg = 200e6  # 100M-param model deltas, bf16
+    levels = [
+        dl.SyncLevel("intra_pod", 16, dl.ICI_LINK, msg),
+        dl.SyncLevel("cross_pod", 2, dl.DCI_LINK, msg),
+    ]
+    plan = dl.plan_hierarchical_h(
+        levels, C=0.5, delta=1e-3, t_total=100.0, t_lp=5e-3,
+    )
+    assert plan[0]["name"] == "intra_pod"
+    # outer level round time must be >= inner round time (it contains it)
+    assert plan[1]["round_time"] >= plan[0]["round_time"]
+    assert plan[0]["H"] >= 1 and plan[1]["H"] >= 1

@@ -1,0 +1,84 @@
+"""Unit tests for losses, conjugates and primal/dual objectives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dual as D
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+LOSS_LABELS = {
+    "squared": 0.7,
+    "hinge": 1.0,
+    "smooth_hinge_1": 1.0,
+    "logistic": -1.0,
+}
+
+
+@pytest.mark.parametrize("name", list(D.LOSSES))
+def test_conjugate_is_legendre_transform(name):
+    """l*(-alpha) must equal sup_a (-alpha*a - l(a)) on the feasible set."""
+    loss = D.LOSSES[name]
+    y = jnp.float32(LOSS_LABELS.get(name, 1.0))
+    a_grid = jnp.linspace(-50.0, 50.0, 200_001)
+    if name == "squared":
+        alphas = jnp.linspace(-3.0, 3.0, 7)
+    else:
+        # feasible set of the dual variable is alpha*y in [0,1]
+        alphas = jnp.linspace(0.02, 0.98, 7) * y
+    for alpha in alphas:
+        sup = jnp.max(-alpha * a_grid - loss.value(a_grid, y))
+        np.testing.assert_allclose(
+            float(loss.conj_neg(alpha, y)), float(sup), rtol=2e-3, atol=2e-3
+        )
+
+
+@pytest.mark.parametrize("name", list(D.LOSSES))
+def test_coord_delta_is_argmax(name):
+    """The closed-form/Newton coordinate step must beat a dense grid search."""
+    loss = D.LOSSES[name]
+    y = jnp.float32(LOSS_LABELS.get(name, 1.0))
+    wx = jnp.float32(0.3)
+    alpha = jnp.float32(0.4 * y if name != "squared" else 0.25)
+    xsq_over_lm = jnp.float32(0.8)
+
+    def obj(d):
+        return (
+            -0.5 * xsq_over_lm * d**2 - wx * d - loss.conj_neg(alpha + d, y)
+        )
+
+    d_star = loss.coord_delta(wx, alpha, y, xsq_over_lm)
+    if name == "squared":
+        d_grid = jnp.linspace(-5.0, 5.0, 400_001)
+    else:
+        d_grid = (jnp.linspace(0.0, 1.0, 400_001)) * y - alpha
+    best = jnp.max(obj(d_grid))
+    assert float(obj(d_star)) >= float(best) - 1e-4
+
+
+def test_weak_duality_and_ridge_optimum():
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(key, (40, 8))
+    y = jax.random.normal(jax.random.PRNGKey(1), (40,))
+    lam = 0.1
+    alpha = 0.01 * jax.random.normal(jax.random.PRNGKey(2), (40,))
+    gap = D.duality_gap(alpha, X, y, D.squared, lam)
+    assert float(gap) >= -1e-5  # weak duality
+
+    a_star = D.ridge_dual_optimum(X, y, lam)
+    gap_star = D.duality_gap(a_star, X, y, D.squared, lam)
+    assert float(gap_star) < 1e-3  # strong duality at the optimum
+    # optimum is a stationary point: numeric gradient of D ~ 0
+    g = jax.grad(lambda a: D.dual_value(a, X, y, D.squared, lam))(a_star)
+    np.testing.assert_allclose(np.asarray(g), 0.0, atol=1e-5)
+
+
+def test_primal_dual_relationship():
+    X = jax.random.normal(jax.random.PRNGKey(3), (30, 5))
+    lam = 0.05
+    alpha = jax.random.normal(jax.random.PRNGKey(4), (30,))
+    w = D.w_of_alpha(alpha, X, lam)
+    A = D.data_matrix(X, lam)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(A @ alpha), rtol=1e-5)

@@ -1,0 +1,188 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(deliverable c; no TPU in this container)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dual as dual_mod
+from repro.core.local_sdca import local_sdca
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.sdca.kernel import sdca_block_kernel
+from repro.kernels.sdca.ref import sdca_block_ref
+from repro.kernels.sdca.ops import sdca_block_solve
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+def _qkv(key, B, S, H, KV, D, dtype):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, H, D), dtype)
+    k = jax.random.normal(kk, (B, S, KV, D), dtype)
+    v = jax.random.normal(kv, (B, S, KV, D), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,S,H,KV,D,bq,bk", [
+    (1, 128, 2, 2, 32, 64, 64),     # MHA
+    (2, 256, 4, 2, 64, 128, 128),   # GQA 2:1
+    (1, 256, 8, 1, 64, 64, 128),    # MQA
+    (1, 64, 2, 2, 128, 32, 16),     # small blocks, big head_dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_causal_shapes_dtypes(B, S, H, KV, D, bq, bk, dtype):
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, S, H, KV, D, dtype)
+    out = flash_attention_kernel(q, k, v, causal=True, block_q=bq,
+                                 block_k=bk, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [16, 64, 100])
+def test_flash_sliding_window(window):
+    q, k, v = _qkv(jax.random.PRNGKey(1), 2, 256, 4, 4, 32, jnp.float32)
+    out = flash_attention_kernel(q, k, v, causal=True, window=window,
+                                 block_q=64, block_k=64, interpret=True)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_noncausal():
+    q, k, v = _qkv(jax.random.PRNGKey(2), 1, 128, 2, 2, 32, jnp.float32)
+    out = flash_attention_kernel(q, k, v, causal=False, block_q=64,
+                                 block_k=64, interpret=True)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_band_pruning_matches_full_scan():
+    """Loop-bound pruning (the TPU adaptation) must not change results:
+    compare a heavily-windowed case against block_k == S (no pruning)."""
+    q, k, v = _qkv(jax.random.PRNGKey(3), 1, 256, 2, 2, 32, jnp.float32)
+    pruned = flash_attention_kernel(q, k, v, causal=True, window=32,
+                                    block_q=32, block_k=32, interpret=True)
+    unpruned = flash_attention_kernel(q, k, v, causal=True, window=32,
+                                      block_q=32, block_k=256,
+                                      interpret=True)
+    np.testing.assert_allclose(np.asarray(pruned), np.asarray(unpruned),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_vs_model_attention_path():
+    """The model's attention (attention_impl='flash') equals the XLA path."""
+    import dataclasses
+    from repro.configs.registry import ARCHS
+    from repro.models import attention as attn_mod
+    from repro.models.transformer import init_params
+
+    cfg = dataclasses.replace(ARCHS["qwen3-32b"].SMOKE, q_chunk_size=32)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    blk = jax.tree.map(lambda t: t[0], params["blocks"])["sub0"]["mix"]
+    x = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model),
+                                jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(64, dtype=jnp.int32), (2, 64))
+    ref = attn_mod.attention_train(blk, cfg, x, pos)
+    out = attn_mod.attention_flash(blk, cfg, x, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# blocked SDCA
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("loss_name", ["squared", "smooth_hinge_1", "hinge"])
+@pytest.mark.parametrize("K,m_b,d,H", [(2, 32, 16, 64), (4, 64, 8, 128),
+                                       (1, 128, 32, 256)])
+def test_sdca_kernel_matches_ref(loss_name, K, m_b, d, H):
+    loss = dual_mod.LOSSES[loss_name]
+    key = jax.random.PRNGKey(0)
+    kx, ky, ka, kw, ki = jax.random.split(key, 5)
+    X = jax.random.normal(kx, (K, m_b, d))
+    y = (jnp.sign(jax.random.normal(ky, (K, m_b))) if loss.gamma != 1.0
+         else jax.random.normal(ky, (K, m_b)))
+    alpha = 0.1 * jax.random.normal(ka, (K, m_b))
+    if loss_name != "squared":   # hinge-family feasibility: alpha*y in [0,1]
+        alpha = jnp.abs(alpha) * y
+    lam, m_total = 0.1, K * m_b
+    w = jax.random.normal(kw, (d,)) * 0.1
+    idx = jax.random.randint(ki, (K, H), 0, m_b)
+
+    da_k, dw_k = sdca_block_kernel(X, y, alpha, w, idx, loss=loss,
+                                   lm=lam * m_total, interpret=True)
+    da_r, dw_r = sdca_block_ref(X, y, alpha, w, idx, loss=loss,
+                                lm=lam * m_total)
+    np.testing.assert_allclose(np.asarray(da_k), np.asarray(da_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dw_k), np.asarray(dw_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sdca_kernel_matches_sequential_local_sdca():
+    """K=1 kernel == the core-layer sequential Procedure P (same PRNG)."""
+    loss = dual_mod.LOSSES["squared"]
+    key = jax.random.PRNGKey(3)
+    kx, ky, kw, ki = jax.random.split(key, 4)
+    m_b, d, H = 64, 16, 128
+    X = jax.random.normal(kx, (m_b, d))
+    y = jax.random.normal(ky, (m_b,))
+    alpha = jnp.zeros((m_b,))
+    w = jnp.zeros((d,))
+    lam = 0.1
+    idx = jax.random.randint(ki, (1, H), 0, m_b)
+
+    da_k, dw_k = sdca_block_kernel(X[None], y[None], alpha[None], w, idx,
+                                   loss=loss, lm=lam * m_b, interpret=True)
+
+    # replicate the same coordinate sequence through the core path
+    def run_seq():
+        a_c, w_c = alpha, w
+        lm = lam * m_b
+        xsq = jnp.sum(X * X, axis=1) / lm
+        for h in range(H):
+            i = int(idx[0, h])
+            wx = jnp.dot(w_c, X[i])
+            dlt = loss.coord_delta(wx, a_c[i], y[i], xsq[i])
+            a_c = a_c.at[i].add(dlt)
+            w_c = w_c + (dlt / lm) * X[i]
+        return a_c - alpha, w_c - w
+
+    da_s, dw_s = run_seq()
+    np.testing.assert_allclose(np.asarray(da_k[0]), np.asarray(da_s),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(dw_k[0]), np.asarray(dw_s),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_sdca_solve_increases_dual_and_converges():
+    """Repeated kernel rounds drive the duality gap toward 0 (CoCoA on
+    ridge regression, K=4 workers)."""
+    from repro.data.synthetic import gaussian_regression
+    loss = dual_mod.LOSSES["squared"]
+    K, lam = 4, 0.1
+    X, y = gaussian_regression(m=256, d=32)
+    m = X.shape[0]
+    Xb = X.reshape(K, m // K, -1)
+    yb = y.reshape(K, m // K)
+    alpha = jnp.zeros((K, m // K))
+    w = jnp.zeros((X.shape[1],))
+    key = jax.random.PRNGKey(0)
+    gaps = []
+    for t in range(30):
+        key, k = jax.random.split(key)
+        alpha, w, _ = sdca_block_solve(Xb, yb, alpha, w, k, loss=loss,
+                                       lam=lam, m_total=m, num_steps=256)
+        gap = float(dual_mod.duality_gap(alpha.reshape(-1), X, y, loss, lam))
+        gaps.append(gap)
+    assert gaps[-1] < 2e-3 * gaps[0], gaps[:3] + gaps[-3:]
+    assert gaps[-1] < gaps[len(gaps) // 2]  # still descending late
+    # w stays consistent with alpha: w == A alpha
+    w_check = dual_mod.w_of_alpha(alpha.reshape(-1), X, lam)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w_check),
+                               rtol=1e-4, atol=1e-5)

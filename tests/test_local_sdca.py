@@ -1,0 +1,95 @@
+"""Procedure P (LocalSDCA) behaviour tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dual as D
+from repro.core.local_sdca import local_sdca
+from repro.data.synthetic import gaussian_classification, gaussian_regression
+
+
+def test_single_worker_converges_to_ridge_optimum():
+    X, y = gaussian_regression(m=120, d=20)
+    lam = 0.1
+    alpha = jnp.zeros((120,))
+    w = jnp.zeros((20,))
+    da, dw = local_sdca(
+        X, y, alpha, w, jax.random.PRNGKey(0),
+        loss=D.squared, lam=lam, m_total=120, num_steps=120 * 60,
+    )
+    alpha, w = alpha + da, w + dw
+    a_star = D.ridge_dual_optimum(X, y, lam)
+    gap = float(D.duality_gap(alpha, X, y, D.squared, lam))
+    gap0 = float(D.duality_gap(jnp.zeros((120,)), X, y, D.squared, lam))
+    assert gap < 1e-3 * gap0
+    np.testing.assert_allclose(np.asarray(alpha), np.asarray(a_star),
+                               rtol=0.05, atol=0.05)
+
+
+def test_w_consistency():
+    """dw returned must equal A_block @ dalpha (Procedure P output spec)."""
+    X, y = gaussian_regression(m=50, d=10)
+    lam = 0.2
+    alpha0 = 0.1 * jax.random.normal(jax.random.PRNGKey(5), (50,))
+    w0 = D.w_of_alpha(alpha0, X, lam)
+    da, dw = local_sdca(
+        X, y, alpha0, w0, jax.random.PRNGKey(1),
+        loss=D.squared, lam=lam, m_total=50, num_steps=200,
+    )
+    np.testing.assert_allclose(
+        np.asarray(dw), np.asarray((X.T @ da) / (lam * 50)), rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+def test_dual_monotone_nondecreasing():
+    X, y = gaussian_regression(m=80, d=12)
+    lam = 0.1
+    alpha = jnp.zeros((80,))
+    w = jnp.zeros((12,))
+    prev = float(D.dual_value(alpha, X, y, D.squared, lam))
+    for step in range(6):
+        da, dw = local_sdca(
+            X, y, alpha, w, jax.random.PRNGKey(step),
+            loss=D.squared, lam=lam, m_total=80, num_steps=100,
+        )
+        alpha, w = alpha + da, w + dw
+        cur = float(D.dual_value(alpha, X, y, D.squared, lam))
+        assert cur >= prev - 1e-6  # exact coordinate maximization never hurts
+        prev = cur
+
+
+def test_svm_hinge_feasible_and_improving():
+    X, y = gaussian_classification(m=100, d=15)
+    lam = 0.05
+    alpha = jnp.zeros((100,))
+    w = jnp.zeros((15,))
+    d0 = float(D.dual_value(alpha, X, y, D.hinge, lam))
+    da, dw = local_sdca(
+        X, y, alpha, w, jax.random.PRNGKey(2),
+        loss=D.hinge, lam=lam, m_total=100, num_steps=3000,
+    )
+    alpha, w = alpha + da, w + dw
+    # dual feasibility: alpha_i y_i in [0, 1]
+    ay = np.asarray(alpha * y)
+    assert (ay >= -1e-6).all() and (ay <= 1 + 1e-6).all()
+    assert float(D.dual_value(alpha, X, y, D.hinge, lam)) > d0
+    # small duality gap on a separable-ish problem
+    gap = float(D.duality_gap(alpha, X, y, D.hinge, lam))
+    assert gap < 0.1
+
+
+def test_logistic_newton_steps_improve():
+    X, y = gaussian_classification(m=60, d=10)
+    lam = 0.1
+    alpha = jnp.zeros((60,)) + 0.5 * y  # strictly feasible start
+    w = D.w_of_alpha(alpha, X, lam)
+    d0 = float(D.dual_value(alpha, X, y, D.logistic, lam))
+    da, dw = local_sdca(
+        X, y, alpha, w, jax.random.PRNGKey(3),
+        loss=D.logistic, lam=lam, m_total=60, num_steps=2000,
+    )
+    alpha2, w2 = alpha + da, w + dw
+    d1 = float(D.dual_value(alpha2, X, y, D.logistic, lam))
+    assert d1 > d0
+    assert float(D.duality_gap(alpha2, X, y, D.logistic, lam)) < 0.2

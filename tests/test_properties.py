@@ -1,0 +1,203 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as comp
+from repro.core import dual as dual_mod
+from repro.core.delay import (log_bound, optimal_h, per_round_factor,
+                              rounds_for_budget)
+from repro.core.local_sdca import local_sdca
+from repro.core.tree import star, two_level
+from repro.launch.roofline import (CollectiveOp, collective_summary,
+                                   parse_collectives, shape_bytes)
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# duality invariants
+# ---------------------------------------------------------------------------
+@SETTINGS
+@given(st.integers(4, 24), st.integers(2, 8),
+       st.floats(0.01, 1.0), st.integers(0, 10_000))
+def test_weak_duality_squared(m, d, lam, seed):
+    """P(w(alpha)) >= D(alpha) for any alpha (weak duality)."""
+    key = jax.random.PRNGKey(seed)
+    kx, ky, ka = jax.random.split(key, 3)
+    X = jax.random.normal(kx, (m, d))
+    y = jax.random.normal(ky, (m,))
+    alpha = jax.random.normal(ka, (m,))
+    loss = dual_mod.LOSSES["squared"]
+    gap = float(dual_mod.duality_gap(alpha, X, y, loss, lam))
+    assert gap >= -1e-4, gap
+
+
+@SETTINGS
+@given(st.integers(8, 32), st.integers(2, 8), st.floats(0.05, 1.0),
+       st.integers(0, 10_000), st.integers(1, 64))
+def test_sdca_never_decreases_dual(m, d, lam, seed, steps):
+    """Every LocalSDCA step is an exact scalar maximization => the dual
+    objective is nondecreasing."""
+    key = jax.random.PRNGKey(seed)
+    kx, ky, kr = jax.random.split(key, 3)
+    X = jax.random.normal(kx, (m, d))
+    y = jax.random.normal(ky, (m,))
+    loss = dual_mod.LOSSES["squared"]
+    alpha = jnp.zeros((m,))
+    w = jnp.zeros((d,))
+    d0 = float(dual_mod.dual_value(alpha, X, y, loss, lam))
+    da, dw = local_sdca(X, y, alpha, w, kr, loss=loss, lam=lam,
+                        m_total=m, num_steps=steps)
+    d1 = float(dual_mod.dual_value(alpha + da, X, y, loss, lam))
+    assert d1 >= d0 - 1e-6, (d0, d1)
+    # w-consistency: dw == A @ da
+    w_expect = dual_mod.w_of_alpha(alpha + da, X, lam)
+    np.testing.assert_allclose(np.asarray(w + dw), np.asarray(w_expect),
+                               rtol=1e-4, atol=1e-5)
+
+
+@SETTINGS
+@given(st.sampled_from(["squared", "smooth_hinge_1", "logistic"]),
+       st.integers(0, 1000))
+def test_coord_delta_is_argmax(loss_name, seed):
+    """The closed-form coordinate delta maximizes the scalar dual: no
+    nearby delta does better."""
+    loss = dual_mod.LOSSES[loss_name]
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    wx = float(jax.random.normal(ks[0], ()))
+    y = (float(jnp.sign(jax.random.normal(ks[1], ())))
+         if loss_name != "squared" else float(jax.random.normal(ks[1], ())))
+    alpha = float(jax.random.uniform(ks[2], (), minval=0.1, maxval=0.9)) * (
+        y if loss_name != "squared" else 1.0)
+    xsq = float(jax.random.uniform(ks[3], (), minval=0.1, maxval=2.0))
+
+    def scalar_dual(delta):
+        # the Procedure-P objective, dropping alpha-independent terms:
+        # -(xsq/2) d^2 - wx d - l*(-(alpha+d))
+        return (-0.5 * xsq * delta**2 - wx * delta
+                - loss.conj_neg(jnp.asarray(alpha + delta), jnp.asarray(y)))
+
+    d_star = float(loss.coord_delta(jnp.asarray(wx), jnp.asarray(alpha),
+                                    jnp.asarray(y), jnp.asarray(xsq)))
+    f_star = float(scalar_dual(d_star))
+    for eps in (-0.05, -0.01, 0.01, 0.05):
+        trial = d_star + eps
+        if loss_name != "squared":
+            u = (alpha + trial) * y
+            if not (0.0 <= u <= 1.0):
+                continue  # outside the dual-feasible set
+        assert f_star >= float(scalar_dual(trial)) - 1e-5
+
+
+# ---------------------------------------------------------------------------
+# delay model invariants (paper §6)
+# ---------------------------------------------------------------------------
+@SETTINGS
+@given(st.floats(0.1, 0.9), st.integers(2, 16), st.floats(1e-4, 0.1),
+       st.floats(1e-6, 1e-3), st.floats(0.0, 1.0))
+def test_bound_is_valid_rate(C, K, delta, t_lp, t_delay):
+    """g(H) in (0, 1] and T > 0 => log bound <= 0 (contraction)."""
+    g = per_round_factor(16, C, K, delta)
+    assert 0.0 < g <= 1.0
+    lb = log_bound(16, C=C, K=K, delta=delta, t_total=1.0, t_lp=t_lp,
+                   t_delay=t_delay, t_cp=0.0)
+    assert lb <= 0.0
+    assert rounds_for_budget(1.0, 16, t_lp, t_delay, 0.0) > 0
+
+
+@SETTINGS
+@given(st.floats(0.0, 1e3), st.floats(1.5, 10.0))
+def test_optimal_h_monotone_in_delay(r, factor):
+    """Paper Fig. 4(b): H*(r2) >= H*(r1) for r2 > r1."""
+    kw = dict(C=0.5, K=3, delta=1 / 300, t_total=1.0, t_lp=4e-5, t_cp=3e-5,
+              h_max=10**5)
+    h1, _ = optimal_h(t_delay=r * 4e-5, **kw)
+    h2, _ = optimal_h(t_delay=r * factor * 4e-5 + 1e-6, **kw)
+    assert h2 >= h1
+
+
+# ---------------------------------------------------------------------------
+# tree timing invariants
+# ---------------------------------------------------------------------------
+@SETTINGS
+@given(st.integers(2, 8), st.integers(1, 64), st.floats(0, 1e-2),
+       st.integers(1, 8))
+def test_star_time_matches_eq9(K, H, t_delay, T):
+    """star solve_time == eq. (9): (t_lp H + t_delay + t_cp) * T."""
+    t_lp, t_cp = 1e-5, 3e-5
+    tree = star(K, 10, outer_rounds=T, local_steps=H, t_lp=t_lp,
+                t_cp=t_cp, t_delay=t_delay)
+    expect = (t_lp * H + t_delay + t_cp) * T
+    assert abs(tree.solve_time() - expect) < 1e-12
+
+
+@SETTINGS
+@given(st.integers(2, 4), st.integers(1, 4), st.integers(1, 4),
+       st.integers(1, 4))
+def test_tree_time_additivity(groups, wpg, gr, rr):
+    """Two-level tree time = root rounds x (group phase + root link)."""
+    tree = two_level(groups, wpg, 10, root_rounds=rr, group_rounds=gr,
+                     local_steps=16, t_lp=1e-5, root_delay=1e-3,
+                     group_delay=1e-5)
+    per_group_round = 16 * 1e-5 + 1e-5
+    per_root_round = gr * per_group_round + 1e-3
+    assert abs(tree.solve_time() - rr * per_root_round) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# compression invariants
+# ---------------------------------------------------------------------------
+@SETTINGS
+@given(st.integers(1, 2048), st.integers(0, 10_000))
+def test_int8_quant_bounded_error(n, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    codes, scale = comp.quantize_int8(x)
+    back = comp.dequantize_int8(codes, scale, x.shape, x.dtype)
+    blockmax = np.abs(np.asarray(x)).max() if n else 0.0
+    # per-block absmax scaling: error <= scale/2 <= blockmax/254
+    assert float(jnp.max(jnp.abs(back - x))) <= blockmax / 254.0 + 1e-7
+
+
+@SETTINGS
+@given(st.integers(2, 512), st.floats(0.01, 1.0), st.integers(0, 1000))
+def test_topk_preserves_largest(n, frac, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    vals, idx = comp.topk_sparsify(x, frac)
+    k = max(int(n * frac), 1)
+    thresh = np.sort(np.abs(np.asarray(x)))[-k]
+    assert np.all(np.abs(np.asarray(vals)) >= thresh - 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# HLO parsing invariants
+# ---------------------------------------------------------------------------
+@SETTINGS
+@given(st.sampled_from(["f32", "bf16", "s32"]), st.integers(1, 64),
+       st.integers(1, 64), st.integers(2, 64))
+def test_shape_bytes_and_wire_formulas(dt, a, b, n):
+    nbytes = {"f32": 4, "bf16": 2, "s32": 4}[dt]
+    assert shape_bytes(f"{dt}[{a},{b}]") == a * b * nbytes
+    ar = CollectiveOp("all-reduce", a * b * nbytes, n)
+    ag = CollectiveOp("all-gather", a * b * nbytes, n)
+    # all-reduce == reduce-scatter + all-gather on the same payload
+    rs_plus_ag = 2 * ag.wire_bytes_per_chip()
+    assert abs(ar.wire_bytes_per_chip() - rs_plus_ag) < 1e-9
+
+
+def test_parse_collectives_snippet():
+    hlo = """
+  %ar = f32[1024,16]{1,0} all-reduce(f32[1024,16]{1,0} %x), replica_groups=[16,16]<=[256], to_apply=%add
+  %ag.1 = bf16[64,128]{1,0} all-gather(bf16[4,128]{1,0} %y), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+  %cp = f32[8]{0} collective-permute(f32[8]{0} %z), source_target_pairs={{0,1},{1,0}}
+    """
+    ops = parse_collectives(hlo)
+    summary = collective_summary(ops)
+    assert summary["by_op"]["all-reduce"]["count"] == 1
+    assert summary["by_op"]["all-gather"]["count"] == 1
+    ar = [o for o in ops if o.op == "all-reduce"][0]
+    assert ar.group_size == 16 and ar.result_bytes == 1024 * 16 * 4
+    ag = [o for o in ops if o.op == "all-gather"][0]
+    assert ag.group_size == 4

@@ -1,0 +1,126 @@
+"""Fault-tolerance: checkpoint atomicity/retention/resume, elastic remesh,
+straggler policies."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime.checkpoint import CheckpointManager, resume_or_init
+from repro.runtime.elastic import (fold_batch, remesh_state,
+                                   shrink_survivors, to_host)
+from repro.runtime.straggler import AdaptiveSchedule, BoundedSkip, StepTimer
+
+
+def _state(v=0.0):
+    return {"params": {"w": jnp.full((8, 8), v), "b": jnp.zeros((8,))},
+            "step": jnp.int32(int(v)),
+            "bf16": jnp.full((4,), v, jnp.bfloat16)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    s = _state(3.0)
+    mgr.save(3, s, metadata={"loss": 1.23})
+    step, restored = mgr.restore(_state())
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(s)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert restored["bf16"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_retention_keep_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _state(float(s)))
+    assert mgr.all_steps() == [3, 4]
+    step, r = mgr.restore(_state())
+    assert step == 4 and float(r["params"]["w"][0, 0]) == 4.0
+
+
+def test_checkpoint_ignores_partial_writes(tmp_path):
+    """A crash mid-save (orphan .npz without sidecar) is never resumed."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _state(1.0))
+    # simulate a crash: full npz written but no .json sidecar
+    broken = tmp_path / "step_0000000009.npz"
+    broken.write_bytes(b"not a checkpoint")
+    assert mgr.latest_step() == 1
+    step, _ = mgr.restore(_state())
+    assert step == 1
+
+
+def test_checkpoint_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=True)
+    mgr.save(1, _state(1.0))
+    mgr.save(2, _state(2.0))
+    mgr.wait()
+    assert mgr.latest_step() == 2
+
+
+def test_resume_or_init(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    step, s = resume_or_init(mgr, lambda: _state(0.0))
+    assert step == 0
+    mgr.save(7, _state(7.0))
+    step, s = resume_or_init(mgr, lambda: _state(0.0))
+    assert step == 7 and float(s["params"]["w"][0, 0]) == 7.0
+
+
+def test_elastic_remesh_preserves_values():
+    """Host -> mesh A -> host -> mesh B roundtrip is value-identical."""
+    from repro.launch.mesh import make_host_mesh
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = make_host_mesh()
+    s = _state(5.0)
+    sh = jax.tree.map(lambda t: NamedSharding(mesh, P()), s)
+    placed = remesh_state(to_host(s), sh)
+    back = to_host(placed)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(s)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_fold_batch_invariance():
+    from jax.sharding import AbstractMesh
+    m1 = AbstractMesh((16, 16), ("data", "model"))
+    m2 = AbstractMesh((8, 16), ("data", "model"))
+    assert fold_batch(256, m1)["per_replica"] * 16 == 256
+    assert fold_batch(256, m2)["per_replica"] * 8 == 256
+    with pytest.raises(AssertionError):
+        fold_batch(100, m1)  # 100 % 16 != 0
+
+
+def test_shrink_survivors_respects_tp_group():
+    assert shrink_survivors(512, lost=3, model_parallel=16) == 496
+    assert shrink_survivors(512, lost=16, model_parallel=16) == 496
+    assert shrink_survivors(256, lost=1, model_parallel=16) == 240
+
+
+def test_step_timer_straggler_detection():
+    t = StepTimer()
+    for _ in range(20):
+        t.observe(1.0 + np.random.default_rng(0).normal() * 0.0)
+    assert not t.is_straggling(1.01)
+    assert t.is_straggling(10.0)
+
+
+def test_adaptive_schedule_monotone_in_delay():
+    """Paper Fig. 4(b): larger delay => larger (or equal) optimal H."""
+    s = AdaptiveSchedule(C=0.5, delta=1 / 300, t_total=1.0, K=3,
+                         h_max=10**6, hysteresis=1.0)
+    hs = [s.replan(t_lp=4e-5, t_delay=4e-5 * r, t_cp=3e-5)
+          for r in (0, 10, 1e3, 1e5)]
+    assert all(b >= a for a, b in zip(hs, hs[1:])), hs
+    assert hs[-1] > hs[0]
+
+
+def test_bounded_skip_forces_barrier():
+    p = BoundedSkip(max_consecutive=2)
+    assert p.decide(True) is True
+    assert p.decide(True) is True
+    assert p.decide(True) is False   # forced sync after 2 skips
+    assert p.decide(False) is False

@@ -1,0 +1,142 @@
+"""Sharding rules: divisibility guards, head alignment, FSDP+TP 2D layout,
+and an end-to-end sharded train step on the host mesh."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ARCHS
+from repro.configs.shapes import SHAPES
+from repro.launch import sharding as sh
+from repro.launch import steps
+from repro.launch.mesh import make_host_mesh
+
+
+def _flat(tree):
+    return {
+        "/".join(str(getattr(k, "key", getattr(k, "idx", None)))
+                 for k in path): v
+        for path, v in jax.tree_util.tree_flatten_with_path(
+            tree, is_leaf=lambda x: isinstance(x, P))[0]
+    }
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh(model=1) if len(jax.devices()) < 4 else \
+        jax.make_mesh((len(jax.devices()) // 2, 2), ("data", "model"))
+
+
+def test_qwen3_full_specs_2d():
+    """On the production mesh shapes, qwen3 weights are FSDP x TP sharded."""
+    cfg = ARCHS["qwen3-32b"].FULL
+    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    pshape = steps.params_shape(cfg)
+    specs = _flat(sh.param_specs(cfg, pshape, mesh))
+    assert specs["blocks/sub0/mix/wq"] == P(None, "data", "model")
+    assert specs["blocks/sub0/mix/wo"] == P(None, "model", "data")
+    assert specs["blocks/sub0/ffn/w_gate"] == P(None, "data", "model")
+    assert specs["blocks/sub0/ffn/w_down"] == P(None, "model", "data")
+    assert specs["embed"] == P("model", "data")
+    assert specs["blocks/sub0/ln1"] == P(None, None)
+    # kv fused dim: kv=8 heads < 16-way axis -> head-alignment guard trips
+    assert specs["blocks/sub0/mix/wk"] == P(None, "data", None)
+
+
+def test_head_alignment_guard_yi():
+    """yi-34b: 56 q-heads don't divide 16 -> heads dim replicated."""
+    cfg = ARCHS["yi-34b"].FULL
+    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    specs = _flat(sh.param_specs(cfg, steps.params_shape(cfg), mesh))
+    assert specs["blocks/sub0/mix/wq"] == P(None, "data", None)
+    # but the FFN still gets TP
+    assert specs["blocks/sub0/ffn/w_gate"] == P(None, "data", "model")
+
+
+def test_moe_expert_parallel():
+    cfg = ARCHS["arctic-480b"].FULL
+    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    specs = _flat(sh.param_specs(cfg, steps.params_shape(cfg), mesh))
+    assert specs["blocks/sub0/ffn/w_gate"] == P(None, "model", "data", None)
+    assert specs["blocks/sub0/ffn/w_down"] == P(None, "model", None, "data")
+    assert specs["blocks/sub0/ffn/router"] == P(None, "data", None)
+    # arctic's dense residual branch is a plain MLP
+    assert specs["blocks/sub0/ffn/dense/w_gate"] == P(None, "data", "model")
+
+
+def test_opt_state_inherits_param_specs():
+    from repro.optim import make_adamw
+    cfg = ARCHS["qwen3-32b"].SMOKE
+    mesh = jax.sharding.AbstractMesh((4, 2), ("data", "model"))
+    pshape = steps.params_shape(cfg)
+    opt = make_adamw()
+    oshape = jax.eval_shape(opt.init, pshape)
+    ospecs = sh.opt_state_specs(cfg, oshape, pshape, mesh)
+    pspecs = sh.param_specs(cfg, pshape, mesh)
+    assert _flat(ospecs)["mu/blocks/sub0/mix/wq"] == \
+        _flat(pspecs)["blocks/sub0/mix/wq"]
+    assert _flat(ospecs)["step"] == P()
+
+
+def test_adafactor_factored_state_specs():
+    from repro.optim import make_adafactor
+    cfg = ARCHS["arctic-480b"].FULL
+    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    pshape = steps.params_shape(cfg)
+    opt = make_adafactor()
+    oshape = jax.eval_shape(opt.init, pshape)
+    ospecs = _flat(sh.opt_state_specs(cfg, oshape, pshape, mesh))
+    # vr of (L, E, D, F) w_gate: drops the last (F) dim's spec
+    assert ospecs["v/blocks/sub0/ffn/w_gate/vr"] == P(None, "model", "data")
+    assert ospecs["v/blocks/sub0/ffn/w_gate/vc"] == P(None, "model", None)
+
+
+def test_divisibility_fallback():
+    """A dim that doesn't divide the axis falls back to replication."""
+    cfg = dataclasses.replace(ARCHS["qwen3-32b"].SMOKE, d_model=60)
+    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    dropped = []
+    specs = _flat(sh.param_specs(cfg, steps.params_shape(cfg), mesh, dropped=dropped))
+    assert specs["blocks/sub0/mix/wq"][1] is None  # 60 % 16 != 0
+    assert any(d[1] == "embed" for d in dropped)
+
+
+def test_end_to_end_sharded_train_step(mesh):
+    """Run (not just lower) a sharded train step on the host mesh; the
+    result must equal the single-device step."""
+    cfg = dataclasses.replace(ARCHS["qwen3-32b"].SMOKE, remat=False)
+    shape = dataclasses.replace(SHAPES["train_4k"], seq_len=32,
+                                global_batch=8)
+    cell = steps.build_cell(cfg, shape, mesh)
+    params = jax.device_put(
+        jax.tree.map(jnp.zeros_like,
+                     jax.eval_shape(lambda: None) or None), None) \
+        if False else None
+    # build real values
+    from repro.models.transformer import init_params
+    from repro.optim import get_optimizer
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    opt = get_optimizer(cfg)
+    opt_state = opt.init(params)
+    batch = {
+        "tokens": jax.random.randint(key, (8, 32), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (8, 32), 0, cfg.vocab_size),
+    }
+    ref_step = jax.jit(steps.make_train_step(cfg, opt))
+    p_ref, o_ref, m_ref = ref_step(params, opt_state, batch)
+
+    p_sh = jax.device_put(params, cell.in_shardings[0])
+    o_sh = jax.device_put(opt_state, cell.in_shardings[1])
+    b_sh = {k: jax.device_put(v, cell.in_shardings[2][k])
+            for k, v in batch.items()}
+    p2, o2, m2 = cell.jitted(p_sh, o_sh, b_sh)
+    np.testing.assert_allclose(float(m2["loss"]), float(m_ref["loss"]),
+                               rtol=1e-3)  # bf16 reduction-order noise
+    for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(p_ref)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=5e-3, atol=1e-3)  # Adam amplifies bf16 grad noise near eps

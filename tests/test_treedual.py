@@ -1,0 +1,109 @@
+"""TreeDualMethod (Algorithms 1-3) system tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dual as D
+from repro.core.tree import star, two_level
+from repro.core.treedual import cocoa_star_solve, tree_dual_solve
+from repro.data.synthetic import gaussian_regression, wine_like
+
+LAM = 0.1
+
+
+def test_cocoa_star_converges():
+    X, y = gaussian_regression(m=240, d=30)
+    res = cocoa_star_solve(
+        X, y, n_workers=4, loss=D.squared, lam=LAM,
+        outer_rounds=30, local_steps=6 * 60,  # H = m_k epochs-ish
+    )
+    gap0 = res.history[0]["gap"]
+    assert res.history[-1]["gap"] < 1e-2 * gap0
+    # w returned must equal A alpha
+    np.testing.assert_allclose(
+        np.asarray(res.w), np.asarray(D.w_of_alpha(res.alpha, X, LAM)),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_dual_monotone_over_rounds():
+    X, y = gaussian_regression(m=160, d=20)
+    res = cocoa_star_solve(
+        X, y, n_workers=4, loss=D.squared, lam=LAM,
+        outer_rounds=15, local_steps=80,
+    )
+    duals = res.duals
+    assert (np.diff(duals) >= -1e-6).all()
+
+
+def test_two_level_tree_converges_same_optimum_as_star():
+    X, y = wine_like(m=240)
+    lam = 0.3
+    res_star = cocoa_star_solve(
+        X, y, n_workers=4, loss=D.squared, lam=lam,
+        outer_rounds=40, local_steps=240,
+    )
+    tree = two_level(
+        n_groups=2, workers_per_group=2, m_per_worker=60,
+        root_rounds=20, group_rounds=3, local_steps=240,
+    )
+    res_tree = tree_dual_solve(tree, X, y, loss=D.squared, lam=lam)
+    a_star = D.ridge_dual_optimum(X, y, lam)
+    d_star = float(D.dual_value(a_star, X, y, D.squared, lam))
+    assert d_star - res_star.duals[-1] < 5e-3 * abs(d_star) + 5e-3
+    assert d_star - res_tree.duals[-1] < 5e-3 * abs(d_star) + 5e-3
+
+
+def test_tree_with_group_rounds_one_matches_star_updates():
+    """A 2-level tree with T_group=1 performs star-like averaging; it must
+    still be monotone and converge (the exact sequence differs because of the
+    nested 1/K scalings, which the paper's analysis accounts for)."""
+    X, y = gaussian_regression(m=120, d=10)
+    tree = two_level(
+        n_groups=2, workers_per_group=2, m_per_worker=30,
+        root_rounds=25, group_rounds=1, local_steps=120,
+    )
+    res = tree_dual_solve(tree, X, y, loss=D.squared, lam=LAM)
+    assert (np.diff(res.duals) >= -1e-6).all()
+    assert res.history[-1]["gap"] < 0.05 * res.history[0]["gap"]
+
+
+def test_three_level_tree_runs():
+    """Depth-3 recursion (the paper's algorithm is defined for any depth)."""
+    from repro.core.tree import TreeNode
+
+    def leaf(name):
+        return TreeNode(name=name, rounds=60, data_size=20, t_lp=1e-5)
+
+    g0 = TreeNode(name="g0", children=(leaf("l0"), leaf("l1")), rounds=2)
+    g1 = TreeNode(name="g1", children=(leaf("l2"), leaf("l3")), rounds=2)
+    mid = TreeNode(name="mid", children=(g0, g1), rounds=2)
+    g2 = TreeNode(name="g2", children=(leaf("l4"), leaf("l5")), rounds=2)
+    root = TreeNode(name="root", children=(mid, g2), rounds=12)
+
+    X, y = gaussian_regression(m=root.total_data(), d=8)
+    res = tree_dual_solve(root, X, y, loss=D.squared, lam=LAM)
+    assert res.history[-1]["gap"] < 0.1 * res.history[0]["gap"]
+    assert (np.diff(res.duals) >= -1e-6).all()
+
+
+def test_simulated_time_star_matches_eq9():
+    """Star round time must equal eq. (9): (t_lp H + t_delay + t_cp) * T."""
+    t_lp, t_cp, t_delay, H, T = 4e-5, 3e-5, 0.4, 100, 7
+    tree = star(3, 10, outer_rounds=T, local_steps=H,
+                t_lp=t_lp, t_cp=t_cp, t_delay=t_delay)
+    expected = (t_lp * H + t_delay + t_cp) * T
+    assert tree.solve_time() == pytest.approx(expected, rel=1e-9)
+
+
+def test_simulated_time_two_level():
+    tree = two_level(
+        n_groups=2, workers_per_group=2, m_per_worker=10,
+        root_rounds=3, group_rounds=5, local_steps=10,
+        t_lp=1e-4, t_cp=1e-5, root_delay=1.0, group_delay=0.01,
+    )
+    # group round: H*t_lp + group->? the group's own solve: 5*(10*1e-4+0.01+1e-5)
+    group_solve = 5 * (10 * 1e-4 + 0.01 + 1e-5)
+    expected = 3 * (group_solve + 1.0 + 1e-5)
+    assert tree.solve_time() == pytest.approx(expected, rel=1e-9)
