@@ -1,0 +1,67 @@
+"""Micro-benchmark: the compiled tree-schedule engine vs the legacy Python
+recursion on a depth-3, 8-leaf tree (the acceptance target is a >= 5x
+host-path speedup; in practice the gap is much larger because the legacy
+path pays one jit dispatch + full-vector alpha copies per leaf solve per
+round, while the engine is ONE lax.scan program).
+
+    PYTHONPATH=src python benchmarks/bench_engine.py
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+
+from repro.core.dual import LOSSES
+from repro.core.engine.plan import balanced_tree
+from repro.core.treedual import tree_dual_solve, tree_dual_solve_reference
+from repro.data.synthetic import gaussian_regression
+
+LAM = 0.1
+
+
+def _time(fn, repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready((out.alpha, out.w))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(verbose: bool = True) -> Dict[str, float]:
+    # depth-3, 8-leaf balanced tree: 10 root x 2 x 2 rounds, H=128
+    tree = balanced_tree([2, 2, 2], [10, 2, 2], local_steps=128, m_leaf=32)
+    m = tree.total_data()
+    X, y = gaussian_regression(m=m, d=32)
+    loss = LOSSES["squared"]
+    key = jax.random.PRNGKey(0)
+    kw = dict(loss=loss, lam=LAM, key=key, record_history=False)
+
+    legacy = lambda: tree_dual_solve_reference(tree, X, y, **kw)  # noqa: E731
+    engine = lambda: tree_dual_solve(tree, X, y, **kw)            # noqa: E731
+
+    # warm both paths (compile + trace caches), then time steady-state
+    legacy(); engine()
+    t_legacy = _time(legacy)
+    t_engine = _time(engine)
+    speedup = t_legacy / t_engine
+
+    if verbose:
+        print("bench_engine: depth-3, 8-leaf tree "
+              f"(m={m}, 40 ticks x H=128), host path")
+        print(f"  legacy recursion : {t_legacy * 1e3:9.2f} ms")
+        print(f"  compiled engine  : {t_engine * 1e3:9.2f} ms")
+        print(f"  speedup          : {speedup:9.1f}x")
+    assert speedup >= 5.0, f"engine speedup {speedup:.1f}x < 5x target"
+    return {"t_legacy": t_legacy, "t_engine": t_engine, "speedup": speedup}
+
+
+def main() -> Dict[str, float]:
+    return run()
+
+
+if __name__ == "__main__":
+    main()

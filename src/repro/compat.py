@@ -1,0 +1,43 @@
+"""Version shims for jax API drift (the repo pins jax 0.4.37 but the code
+is written against the modern surface).
+
+* ``shard_map``: ``jax.shard_map`` only exists in newer jax; 0.4.37 ships it
+  as ``jax.experimental.shard_map.shard_map`` with the replication check
+  spelled ``check_rep`` instead of ``check_vma``.
+* ``make_abstract_mesh`` lives in ``repro.launch.mesh`` (the AbstractMesh
+  constructor signature changed across versions).
+* ``on_tpu``: backend probe shared by every kernel call site that flips
+  Pallas interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` where available, else the 0.4.x experimental one.
+
+    ``check_vma`` maps onto the old ``check_rep`` flag; both default to off
+    because the tree programs psum over axis subsets (per-level averaging),
+    which the replication checker cannot express."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check_vma)
+        except TypeError:
+            # very new versions may rename/drop the flag; only swallow the
+            # mismatch when the caller wasn't relying on the check
+            if check_vma:
+                raise
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:
+        return False

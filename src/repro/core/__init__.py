@@ -3,7 +3,17 @@
 # communication-delay model with the optimal local-iteration count H
 # (eq. (12)), and the TreeSync hierarchical synchronization schedule that
 # applies the same machinery to large-model data-parallel training.
-from repro.core import convergence, delay, dual, local_sdca, tree, treedual  # noqa: F401
+#
+# TreeDualMethod runs through the unified tree-schedule engine
+# (repro.core.engine): any TreeNode topology is compiled to a flat static
+# plan and executed as one jit/scan program with pluggable host (vmap),
+# Pallas-leaf, and shard_map mesh backends; repro.core.treedual keeps the
+# original recursion as a cross-check oracle.
+from repro.core import convergence, delay, dual, instrument, local_sdca  # noqa: F401
+from repro.core import tree, treedual  # noqa: F401
+from repro.core import engine  # noqa: F401
 from repro.core.dual import LOSSES, duality_gap, dual_value, primal_value  # noqa: F401
+from repro.core.instrument import SolveResult  # noqa: F401
 from repro.core.tree import TreeNode, star, two_level  # noqa: F401
-from repro.core.treedual import cocoa_star_solve, tree_dual_solve  # noqa: F401
+from repro.core.treedual import (cocoa_star_solve, tree_dual_solve,  # noqa: F401
+                                 tree_dual_solve_reference)

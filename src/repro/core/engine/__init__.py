@@ -1,0 +1,76 @@
+"""Unified tree-schedule engine.
+
+One entry point -- :func:`solve` -- runs the paper's TreeDualMethod
+(Algorithms 1-3) on ANY ``TreeNode`` topology (star, multi-level, deep,
+imbalanced, heterogeneous per-node rounds) as a single compiled program:
+
+    plan  = compile_tree(tree)          # flat static schedule (the IR)
+    keys  = key_plan(tree, plan, key)   # legacy-RNG per-solve key replay
+    run   = get_host_executor(plan, ...)  # ONE jit'd lax.scan
+    alpha, w, duals, primals = run(X, y, keys)
+
+Backends:
+  * ``backend="vmap"``   -- host/XLA: batched leaf solves via vmapped
+    Procedure P (default).
+  * ``backend="pallas"`` -- leaf solves via the Pallas blocked-SDCA kernel
+    (per-block w + step masks; interpret mode off-TPU).
+  * ``engine.mesh.execute_plan_mesh`` -- shard_map device program for
+    level-homogeneous plans (mesh axes = one admissible grouping of the
+    plan); used by ``repro.core.treedual_mesh``.
+
+All backends consume the same coordinate-index plan, so the retained legacy
+recursion (``repro.core.treedual.tree_dual_solve_reference``) is a
+bit-comparable oracle for every path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core.dual import Loss
+from repro.core.engine.host import execute_plan, get_host_executor  # noqa: F401
+from repro.core.engine.plan import (  # noqa: F401
+    LevelSpec, TreePlan, balanced_tree, compile_tree, index_plan, key_plan,
+    tree_from_level_plan,
+)
+from repro.core.instrument import (SolveResult, history_from_series,
+                                   round_times)
+from repro.core.tree import TreeNode
+
+Array = jax.Array
+
+
+def solve(
+    tree: TreeNode,
+    X: Array,
+    y: Array,
+    *,
+    loss: Loss,
+    lam: float,
+    key: Optional[Array] = None,
+    record_history: bool = True,
+    backend: str = "vmap",
+    weighting: str = "uniform",
+) -> SolveResult:
+    """Algorithm 3 at the root of ``tree``, compiled: one jit/scan program."""
+    m = X.shape[0]
+    assert tree.total_data() == m, (
+        f"tree data sizes {tree.total_data()} != m={m}")
+    plan = compile_tree(tree, weighting=weighting)
+    keys = key_plan(tree, plan, key)
+    fn = get_host_executor(plan, loss=loss, lam=lam,
+                           record_history=record_history, backend=backend)
+    out = fn(X, y, keys)
+    if not record_history:
+        alpha, w = out
+        return SolveResult(alpha=alpha, w=w, history=[])
+    alpha, w, duals, primals = out
+    duals = np.asarray(duals)
+    primals = np.asarray(primals)
+    # duals[0] is the start-of-run record; entries 1.. align with ticks and
+    # carry NaN except at root-sync ticks.
+    sel = np.concatenate([[True], plan.root_sync])
+    history = history_from_series(round_times(tree), duals[sel], primals[sel])
+    return SolveResult(alpha=alpha, w=w, history=history)

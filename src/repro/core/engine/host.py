@@ -1,0 +1,215 @@
+"""Host backend: execute a :class:`~repro.core.engine.plan.TreePlan` as ONE
+jit-compiled ``lax.scan`` over ticks.
+
+Per tick: a batched leaf solve (vmapped Procedure P, or the Pallas
+``sdca_block_kernel`` with per-block w and step masks), then the tick's sync
+events bottom-up (per-leaf alpha rescale against the depth snapshot and a
+segment-sum weighted w-average), then snapshot refreshes.  The whole nested
+recursion therefore costs one compile and zero per-child Python dispatch --
+compare the legacy recursion's O(tree x rounds) jit calls and full-vector
+``alpha.at[sl].add`` copies.
+
+Optionally records the (dual, primal) series at root-sync ticks inside the
+same program (a ``lax.cond`` so the objective is only evaluated T_root
+times, as the legacy history recording did on the host).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import on_tpu
+from repro.core.dual import Loss
+from repro.core.engine.plan import TreePlan
+
+Array = jax.Array
+
+# Executors are cached per (plan structure, loss, lam, flags) so repeated
+# solves with the same topology reuse one compiled program; LRU-bounded
+# because sweeps (fig4/fig5-style) generate a fresh plan per configuration.
+_EXEC_CACHE: OrderedDict = OrderedDict()
+_EXEC_CACHE_MAX = 32
+
+
+def get_host_executor(
+    plan: TreePlan,
+    *,
+    loss: Loss,
+    lam: float,
+    record_history: bool = True,
+    backend: str = "vmap",
+):
+    """Build (or fetch from cache) the jitted executor for ``plan``.
+
+    The executor has signature ``fn(X, y, keys) -> (alpha, w[, duals,
+    primals])`` with ``keys`` the (S, n, 2) per-solve key plan
+    (``plan.key_plan``); coordinate draws happen inside the compiled
+    program.  The executor is specialized to the plan structure but
+    re-usable across keys/data of the same shape."""
+    if backend not in ("vmap", "pallas"):
+        raise ValueError(f"unknown backend {backend!r} (use 'vmap' or "
+                         "'pallas'; the mesh backend is engine.mesh)")
+    # loss keyed by (name, gamma): Loss names encode their parameters (e.g.
+    # 'smooth_hinge_1'), so per-call constructed losses still hit the cache
+    cache_key = (plan.fingerprint, loss.name, loss.gamma, float(lam),
+                 bool(record_history), backend)
+    fn = _EXEC_CACHE.get(cache_key)
+    if fn is None:
+        fn = _build_host_executor(plan, loss=loss, lam=lam,
+                                  record_history=record_history,
+                                  backend=backend)
+        _EXEC_CACHE[cache_key] = fn
+        while len(_EXEC_CACHE) > _EXEC_CACHE_MAX:
+            _EXEC_CACHE.popitem(last=False)
+    else:
+        _EXEC_CACHE.move_to_end(cache_key)
+    return fn
+
+
+def _build_host_executor(plan: TreePlan, *, loss, lam, record_history,
+                         backend):
+    n, m_b, S, D = plan.n_leaves, plan.m_b, plan.n_ticks, plan.depth
+    h_max, m = plan.h_max, plan.m_total
+    lm = lam * m
+
+    # ---- static layout maps (host numpy -> closed-over constants) ------
+    j = np.arange(m_b)
+    gather_idx = np.minimum(plan.leaf_offsets[:, None] + j[None, :], m - 1)
+    valid = (j[None, :] < plan.leaf_sizes[:, None])           # (n, m_b)
+    flat_map = np.zeros((m,), np.int64)                       # i -> blocked pos
+    for li in range(n):
+        o, s = int(plan.leaf_offsets[li]), int(plan.leaf_sizes[li])
+        flat_map[o:o + s] = li * m_b + np.arange(s)
+    hmask = (np.arange(h_max)[None, :] < plan.leaf_h[:, None])  # (n, h_max)
+    # leaves grouped by H so each group draws its exact randint shape (the
+    # legacy draw has no prefix property, so the shape must match per leaf)
+    h_groups = [
+        (h, tuple(np.nonzero(plan.leaf_h == h)[0].tolist()))
+        for h in sorted({int(v) for v in plan.leaf_h})
+    ]
+    leaf_mb = jnp.asarray(plan.leaf_sizes.astype(np.int32))
+
+    gather_idx = jnp.asarray(gather_idx)
+    valid_f = jnp.asarray(valid, jnp.float32)
+    flat_map = jnp.asarray(flat_map)
+    hmask = jnp.asarray(hmask, jnp.float32)
+    ascale = jnp.asarray(plan.alpha_scale)                    # (D, n)
+    wcoef = jnp.asarray(plan.w_coeff)                         # (D, n)
+    gids = jnp.asarray(plan.group_ids)                        # (D, n)
+    ngroups = plan.n_groups
+    # per-tick xs
+    solve_mask = jnp.asarray(plan.solve_mask)                 # (S, n)
+    sync_mask = jnp.asarray(plan.sync_mask)                   # (S, D, n)
+    refresh_mask = jnp.asarray(plan.refresh_mask)             # (S, D, n)
+    root_sync = jnp.asarray(plan.root_sync)                   # (S,) bool
+
+    use_kernel = backend == "pallas"
+    if use_kernel:
+        from repro.kernels.sdca.kernel import sdca_block_kernel
+    else:
+        from repro.kernels.sdca.ref import sdca_block_ref
+
+    def solve_fn(X: Array, y: Array, keys: Array):
+        dtype = X.dtype
+        vmask = valid_f.astype(dtype)
+        Xb = X[gather_idx] * vmask[:, :, None]                # (n, m_b, d)
+        yb = y[gather_idx] * vmask                            # (n, m_b)
+        d_feat = X.shape[1]
+
+        def draw_idx(keys_s):
+            """The tick's (n, h_max) coordinate draws, exactly as the legacy
+            recursion would: randint(key_l, (H_l,), 0, m_b_l) per leaf."""
+            idx_s = jnp.zeros((n, h_max), jnp.int32)
+            for h, leaf_list in h_groups:
+                rows = jnp.asarray(leaf_list)
+                draws = jax.vmap(
+                    lambda k, mb: jax.random.randint(k, (h, ), 0, mb)
+                )(keys_s[rows], leaf_mb[rows])
+                idx_s = idx_s.at[rows, :h].set(draws)
+            return idx_s
+
+        def leaf_batch(a, w, keys_s, smask):
+            idx_s = draw_idx(keys_s)
+            mk = (hmask * smask[:, None]).astype(dtype)       # (n, h_max)
+            if use_kernel:
+                return sdca_block_kernel(
+                    Xb, yb, a, w, idx_s, loss=loss, lm=lm, step_mask=mk,
+                    interpret=not on_tpu())
+            return sdca_block_ref(Xb, yb, a, w, idx_s, loss=loss, lm=lm,
+                                  step_mask=mk)
+
+        def objective(a, w):
+            """(dual, primal) at a root sync, where w rows are all equal."""
+            w0 = w[0]
+            reg = 0.5 * lam * jnp.dot(w0, w0)
+            dv = -reg - jnp.sum(vmask * loss.conj_neg(a, yb)) / m
+            margins = jnp.einsum("nbd,d->nb", Xb, w0)
+            pv = reg + jnp.sum(vmask * loss.value(margins, yb)) / m
+            return dv, pv
+
+        def tick(carry, xs):
+            a, w, snapA, snapW = carry
+            keys_s, smask, sync_s, ref_s, hflag = xs
+            da, dw = leaf_batch(a, w, keys_s, smask)
+            a = a + da
+            w = w + dw
+            for dd in range(D - 1, -1, -1):
+                msk = sync_s[dd].astype(bool)[:, None]        # (n, 1)
+                a = jnp.where(msk, snapA[dd]
+                              + ascale[dd][:, None] * (a - snapA[dd]), a)
+                contrib = ((wcoef[dd] * sync_s[dd]).astype(dtype)[:, None]
+                           * (w - snapW[dd]))
+                tot = jax.ops.segment_sum(contrib, gids[dd],
+                                          num_segments=ngroups[dd])
+                w = jnp.where(msk, snapW[dd] + tot[gids[dd]], w)
+            refb = ref_s.astype(bool)[..., None]              # (D, n, 1)
+            snapA = jnp.where(refb, a[None], snapA)
+            snapW = jnp.where(refb, w[None], snapW)
+            if record_history:
+                out = jax.lax.cond(
+                    hflag, lambda aw: objective(*aw),
+                    lambda aw: (jnp.array(jnp.nan, dtype),
+                                jnp.array(jnp.nan, dtype)),
+                    (a, w))
+            else:
+                out = None
+            return (a, w, snapA, snapW), out
+
+        a0 = jnp.zeros((n, m_b), dtype)
+        w0 = jnp.zeros((n, d_feat), dtype)
+        carry0 = (a0, w0, jnp.zeros((D, n, m_b), dtype),
+                  jnp.zeros((D, n, d_feat), dtype))
+        xs = (keys, solve_mask.astype(dtype), sync_mask.astype(dtype),
+              refresh_mask.astype(dtype), root_sync)
+        (a, w, _, _), hist = jax.lax.scan(tick, carry0, xs)
+        alpha = a.reshape(-1)[flat_map]
+        if record_history:
+            d0, p0 = objective(a0, w0)
+            duals = jnp.concatenate([d0[None], hist[0]])
+            primals = jnp.concatenate([p0[None], hist[1]])
+            return alpha, w[0], duals, primals
+        return alpha, w[0]
+
+    return jax.jit(solve_fn)
+
+
+def execute_plan(
+    plan: TreePlan,
+    X: Array,
+    y: Array,
+    keys,
+    *,
+    loss: Loss,
+    lam: float,
+    record_history: bool = True,
+    backend: str = "vmap",
+) -> Tuple:
+    """Convenience: build/fetch the executor and run it once (``keys`` is
+    the (S, n, 2) per-solve key plan from ``plan.key_plan``)."""
+    fn = get_host_executor(plan, loss=loss, lam=lam,
+                           record_history=record_history, backend=backend)
+    return fn(X, y, jnp.asarray(keys))

@@ -1,0 +1,144 @@
+"""Mesh backend: run a level-homogeneous :class:`TreePlan` as a sharded
+device program (``shard_map`` + ``lax`` collectives), with the Pallas
+blocked-SDCA kernel at the leaves.
+
+The mesh axes are one *admissible grouping* of the plan: internal depth d
+of the tree maps onto mesh axis ``axes[L-1-d]`` (axes listed innermost
+first), so every depth-d sync group is exactly the set of devices sharing
+coordinates on the axes above.  Because mesh plans are level-homogeneous
+(every node at a depth shares (rounds, fan-out) and all leaves are
+congruent), the flat tick schedule factors back into nested ``fori_loop``s
+with one ``psum`` per sync -- the natural lowering on a device mesh, and
+bit-compatible with the host backend because both consume the same
+per-solve key plan (the legacy-RNG replay from ``engine.plan``).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import on_tpu, shard_map
+from repro.core.dual import Loss
+from repro.core.engine.plan import TreePlan, key_plan
+from repro.core.tree import TreeNode
+
+Array = jax.Array
+
+
+def execute_plan_mesh(
+    plan: TreePlan,
+    tree: TreeNode,
+    X: Array,
+    y: Array,
+    mesh: Mesh,
+    *,
+    axes: Sequence[str],
+    loss: Loss,
+    lam: float,
+    key=None,
+    use_kernel: bool = True,
+) -> Tuple[Array, Array]:
+    """Run the plan on ``mesh``; returns (alpha (m,), w (d,))."""
+    assert plan.levels is not None, (
+        "the mesh backend needs a level-homogeneous plan (balanced tree, "
+        "uniform per-depth rounds); use the host backend otherwise")
+    assert plan.weighting == "uniform", (
+        "mesh lowering uses per-level psum/K averaging (uniform weights)")
+    L = len(axes)
+    assert plan.depth == L, (plan.depth, L)
+    sizes = [dict(mesh.shape)[a] for a in axes]
+    for d in range(L):
+        assert plan.levels[d].group_size == sizes[L - 1 - d], (
+            f"depth {d} fan-out {plan.levels[d].group_size} != mesh axis "
+            f"{axes[L - 1 - d]} size {sizes[L - 1 - d]}")
+    n, m_b = plan.n_leaves, plan.m_b
+    m, d_feat = X.shape
+    assert int(plan.leaf_sizes.min()) == m_b, "mesh backend needs equal blocks"
+    assert n * m_b == m, (n, m_b, m)
+    lm = lam * m
+
+    keys = key_plan(tree, plan, key)                        # (S, n, 2)
+    keys_leaf = jnp.asarray(keys.transpose(1, 0, 2))        # (n, S, 2)
+    rounds = [plan.levels[d].rounds for d in range(L)]
+    ks = [plan.levels[d].group_size for d in range(L)]
+    axis_of_depth = [axes[L - 1 - d] for d in range(L)]
+    H = plan.h_max
+
+    Xb = X.reshape(n, m_b, d_feat)
+    yb = y.reshape(n, m_b)
+    spec_in = P(tuple(reversed(axes)))
+
+    def leaf_solve(Xs, ys, a, w, k_t):
+        """One Procedure-P call on this shard's (1, m_b) block, drawing the
+        tick's coordinates from the replayed per-solve key."""
+        ix = jax.random.randint(k_t, (H,), 0, m_b)[None]  # legacy draw shape
+        if use_kernel:
+            from repro.kernels.sdca.kernel import sdca_block_kernel
+            da, dw = sdca_block_kernel(Xs, ys, a, w, ix, loss=loss, lm=lm,
+                                       interpret=not on_tpu())
+        else:
+            from repro.kernels.sdca.ref import sdca_block_ref
+            da, dw = sdca_block_ref(Xs, ys, a, w, ix, loss=loss, lm=lm)
+        return da, dw[0]
+
+    def program(Xs, ys, a0, kys):
+        # Xs (1, m_b, d), a0 (1, m_b), kys (1, S, 2) on this shard
+        w0 = jnp.zeros((d_feat,), X.dtype)
+
+        def run(depth, a, w, t):
+            """One full solve of a depth-`depth` node: rounds[depth] rounds,
+            each recursing below then psum-averaging over this depth's
+            axis (Algorithm 2)."""
+            T, K, axis = rounds[depth], ks[depth], axis_of_depth[depth]
+
+            def one_round(_, carry):
+                a_c, w_c, t_c = carry
+                if depth == L - 1:
+                    k_t = jax.lax.dynamic_index_in_dim(kys, t_c, axis=1,
+                                                       keepdims=False)[0]
+                    da, dw = leaf_solve(Xs, ys, a_c, w_c, k_t)
+                    t_c = t_c + 1
+                else:
+                    a_lo, w_lo, t_c = run(depth + 1, a_c, w_c, t_c)
+                    da, dw = a_lo - a_c, w_lo - w_c
+                a_c = a_c + da / K
+                w_c = w_c + jax.lax.psum(dw, axis) / K
+                return a_c, w_c, t_c
+            return jax.lax.fori_loop(0, T, one_round, (a, w, t))
+
+        a_end, w_end, _ = run(0, a0, w0, jnp.int32(0))
+        return a_end, jnp.broadcast_to(w_end[None], (1, d_feat))
+
+    program = shard_map(
+        program, mesh=mesh,
+        in_specs=(spec_in, spec_in, spec_in, spec_in),
+        out_specs=(spec_in, spec_in),
+    )
+
+    a0 = jnp.zeros((n, m_b), X.dtype)
+    Xs = jax.device_put(Xb, NamedSharding(mesh, spec_in))
+    ys = jax.device_put(yb, NamedSharding(mesh, spec_in))
+    kys = jax.device_put(keys_leaf, NamedSharding(mesh, spec_in))
+    alpha, w = jax.jit(program)(Xs, ys, a0, kys)
+    return alpha.reshape(m), w[0]
+
+
+def tree_from_mesh_axes(
+    mesh: Mesh,
+    axes: Sequence[str],
+    rounds: Sequence[int],
+    *,
+    local_steps: int,
+    m_leaf: int,
+) -> TreeNode:
+    """The tree whose recursion IS the mesh-axis hierarchy: ``axes`` are
+    listed innermost (leaf level) first, so the root fans out over
+    ``axes[-1]`` and runs ``rounds[-1]`` rounds."""
+    from repro.core.engine.plan import balanced_tree
+    sizes = [dict(mesh.shape)[a] for a in axes]
+    return balanced_tree(
+        list(reversed(sizes)), list(reversed(rounds)),
+        local_steps=local_steps, m_leaf=m_leaf)

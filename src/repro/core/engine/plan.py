@@ -1,0 +1,401 @@
+"""Tree-schedule plan IR: lower an arbitrary ``TreeNode`` topology into a
+flat, static execution plan that a single jit-compiled ``lax.scan`` program
+can run (see ``engine.host``) or a ``shard_map`` mesh program can consume
+(see ``engine.mesh``).
+
+The paper's TreeDualMethod (Algorithms 1-3) is a nested recursion: every
+internal node runs T rounds; each round runs all children's full solves in
+parallel from the round-start state and then combines the children's
+(delta_alpha, delta_w) with weights summing to 1 (1/K in the paper).  The
+whole recursion is *statically determined* by the tree, so it compiles to a
+sequence of S "ticks":
+
+  * tick = one batched leaf-solve slot.  ``span(node)`` ticks cover one full
+    solve of ``node``: ``span(leaf) = 1``,
+    ``span(internal) = rounds * max_k span(child_k)``.  Children are aligned
+    at the *start* of the parent round; a child with a smaller span solves
+    early and then idles (its per-tick ``solve_mask`` is 0), exactly
+    reproducing the recursion where every child starts from the round-start
+    snapshot.
+  * at the last tick of each internal round the node "syncs": for every leaf
+    under it, ``alpha <- snap + alpha_scale * (alpha - snap)`` and
+    ``w <- snap + sum_leaves w_coeff * (w_leaf - snap)`` (a segment-sum over
+    the node's leaf group).  Syncs within one tick apply bottom-up
+    (deepest ancestor first), as in the recursion.
+  * snapshots: one per internal *depth* per leaf-column.  ``snap[d]`` for
+    leaf ``l`` holds the state at the start of the current round of ``l``'s
+    depth-d ancestor; it is refreshed at the end of any tick where an
+    ancestor at depth <= d synced (``refresh_mask``).
+
+The dual vector lives in a blocked ``(n_leaves, m_b)`` layout (``m_b`` = the
+largest leaf block, smaller leaves zero-padded); each leaf carries its own
+``w`` replica, so sibling subtrees evolve independent primal iterates between
+syncs -- the same semantics as the recursion and the mesh program.
+
+Aggregation weights are a plan knob (the CoCoA-style variants of
+arXiv:1409.1458): ``weighting="uniform"`` gives the paper's 1/K;
+``weighting="size"`` weights children by their data fraction.  Any convex
+combination preserves the ``w = A alpha`` invariant (paper eq. (13)).
+
+RNG: leaf coordinate choices replay the *legacy host recursion's* key
+derivation exactly (``jax.random.split(key, 1+K)`` per internal round,
+``jax.random.randint(leaf_key, (H,), 0, m_b)`` at each leaf solve), so the
+retained reference recursion in ``repro.core.treedual`` is a bit-comparable
+oracle for every backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tree import TreeNode
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelSpec:
+    """One internal depth of a level-homogeneous (mesh-compatible) plan."""
+    depth: int        # 0 = root
+    group_size: int   # K: children per node at this depth
+    rounds: int       # T: rounds every node at this depth runs
+
+
+@dataclasses.dataclass(frozen=True)
+class TreePlan:
+    """The lowered schedule.  All arrays are host numpy; executors convert."""
+    # ---- geometry ------------------------------------------------------
+    n_leaves: int
+    m_b: int                      # padded block size (max leaf data size)
+    m_total: int
+    n_ticks: int                  # S
+    depth: int                    # D: number of internal depths (0..D-1)
+    h_max: int
+    leaf_names: Tuple[str, ...]
+    leaf_sizes: np.ndarray        # (n,) int
+    leaf_offsets: np.ndarray      # (n,) int: start of each block in flat alpha
+    leaf_h: np.ndarray            # (n,) int: per-leaf H (leaf.rounds)
+    # ---- per-tick schedule --------------------------------------------
+    solve_mask: np.ndarray        # (S, n) f32: leaf solves at this tick
+    sync_mask: np.ndarray         # (S, D, n) f32: leaf's depth-d ancestor syncs
+    refresh_mask: np.ndarray      # (S, D, n) f32: re-snapshot depth d after tick
+    root_sync: np.ndarray         # (S,) bool: a root round ends at this tick
+    # ---- static per-(depth, leaf) aggregation --------------------------
+    alpha_scale: np.ndarray       # (D, n) f32: child weight at the sync
+    w_coeff: np.ndarray           # (D, n) f32: per-leaf weight in the w-average
+    group_ids: np.ndarray         # (D, n) int32: leaf -> depth-d ancestor id
+    n_groups: Tuple[int, ...]     # segments per depth
+    # ---- metadata ------------------------------------------------------
+    weighting: str
+    levels: Optional[Tuple[LevelSpec, ...]]  # set iff level-homogeneous
+    fingerprint: str = ""
+
+    def __post_init__(self):
+        if not self.fingerprint:
+            h = hashlib.sha1()
+            for a in (self.solve_mask, self.sync_mask, self.refresh_mask,
+                      self.alpha_scale, self.w_coeff, self.group_ids,
+                      self.leaf_sizes, self.leaf_offsets, self.leaf_h):
+                h.update(np.ascontiguousarray(a).tobytes())
+            h.update(repr((self.n_leaves, self.m_b, self.m_total,
+                           self.n_ticks, self.depth, self.h_max,
+                           self.weighting, self.n_groups)).encode())
+            object.__setattr__(self, "fingerprint", h.hexdigest())
+
+
+# ---------------------------------------------------------------------------
+# spans and child weights
+# ---------------------------------------------------------------------------
+def _span(node: TreeNode) -> int:
+    if node.is_leaf:
+        return 1
+    return node.rounds * max(_span(c) for c in node.children)
+
+
+def _child_weights(node: TreeNode, weighting: str) -> List[float]:
+    K = len(node.children)
+    if weighting == "uniform":
+        return [1.0 / K] * K
+    if weighting == "size":
+        tot = node.total_data()
+        return [c.total_data() / tot for c in node.children]
+    raise ValueError(f"unknown weighting {weighting!r}")
+
+
+# ---------------------------------------------------------------------------
+# the walk: shared between plan compilation and RNG replay
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _split_chain(key, T: int, K: int):
+    """The legacy per-round key threading, batched into one dispatch:
+    round t does ``key, *subkeys = jax.random.split(key, 1 + K)``.
+    Returns the (T, K) stacked subkeys."""
+    def step(k, _):
+        ks = jax.random.split(k, 1 + K)
+        return ks[0], ks[1:]
+    _, subs = jax.lax.scan(step, key, None, length=T)
+    return subs
+
+
+def _raw_key(key):
+    """Accept both legacy uint32 ``PRNGKey`` arrays and new-style typed
+    keys; the replay stores raw key data (same draws either way, since both
+    drive the same threefry impl)."""
+    arr = jnp.asarray(key)
+    if jnp.issubdtype(arr.dtype, jax.dtypes.prng_key):
+        return jax.random.key_data(arr)
+    return arr
+
+
+def _walk(tree: TreeNode, key, on_solve, on_sync):
+    """Drive the recursion symbolically.  ``on_solve(tick, leaf_path, key)``
+    is called for every leaf solve (key is None when ``key`` is None);
+    ``on_sync(tick, depth, path)`` for every internal-node aggregation.
+    Event order matches the legacy recursion exactly."""
+    def walk(node, path, t0, depth, k):
+        if node.is_leaf:
+            on_solve(t0, path, k)
+            return
+        K = len(node.children)
+        sub = max(_span(c) for c in node.children)
+        subkeys = None
+        if k is not None and node.rounds > 0:
+            subkeys = np.asarray(_split_chain(k, node.rounds, K))
+        for t in range(node.rounds):
+            start = t0 + t * sub
+            for ci, c in enumerate(node.children):
+                ck = None if subkeys is None else subkeys[t, ci]
+                walk(c, path + (ci,), start, depth + 1, ck)
+            on_sync(start + sub - 1, depth, path)
+    walk(tree, (), 0, 0, key)
+
+
+# ---------------------------------------------------------------------------
+# plan compilation
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=64)
+def compile_tree(tree: TreeNode, *, weighting: str = "uniform") -> TreePlan:
+    """Lower ``tree`` into a :class:`TreePlan`.
+
+    Memoized on the (frozen, hashable) tree so sweep workloads that re-solve
+    the same topology skip plan construction; treat the returned plan's
+    arrays as read-only."""
+    assert not tree.is_leaf, "the root must be an internal node"
+    leaves = tree.leaves()
+    names = tuple(l.name for l in leaves)
+    assert len(set(names)) == len(names), "leaf names must be unique"
+    n = len(leaves)
+    sizes = np.array([l.data_size for l in leaves], dtype=np.int64)
+    offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    m_total = int(sizes.sum())
+    m_b = int(sizes.max())
+    leaf_h = np.array([l.rounds for l in leaves], dtype=np.int64)
+    h_max = int(leaf_h.max())
+
+    # leaf path -> index, node path -> (node, depth, leaf index range)
+    leaf_of_path: Dict[tuple, int] = {}
+    node_info: Dict[tuple, tuple] = {}
+    counter = [0]
+
+    def index(node, path, depth):
+        if node.is_leaf:
+            leaf_of_path[path] = counter[0]
+            counter[0] += 1
+            return
+        lo = counter[0]
+        for ci, c in enumerate(node.children):
+            index(c, path + (ci,), depth + 1)
+        node_info[path] = (node, depth, lo, counter[0])
+    index(tree, (), 0)
+
+    D = max(depth for (_, depth, _, _) in node_info.values()) + 1
+    S = _span(tree)
+
+    solve_mask = np.zeros((S, n), np.float32)
+    sync_mask = np.zeros((S, D, n), np.float32)
+    alpha_scale = np.ones((D, n), np.float32)
+    w_coeff = np.zeros((D, n), np.float32)
+    group_ids = np.zeros((D, n), np.int32)
+    gid_of: List[Dict[tuple, int]] = [dict() for _ in range(D)]
+
+    # static per-(depth, leaf) aggregation coefficients
+    for path, (node, depth, lo, hi) in node_info.items():
+        if path not in gid_of[depth]:
+            gid_of[depth][path] = len(gid_of[depth])
+        gid = gid_of[depth][path]
+        group_ids[depth, lo:hi] = gid
+        omegas = _child_weights(node, weighting)
+        for ci, c in enumerate(node.children):
+            if c.is_leaf:
+                clo = leaf_of_path[path + (ci,)]
+                chi = clo + 1
+            else:
+                _, _, clo, chi = node_info[path + (ci,)]
+            alpha_scale[depth, clo:chi] = omegas[ci]
+            w_coeff[depth, clo:chi] = omegas[ci] / (chi - clo)
+
+    def on_solve(tick, path, _key):
+        solve_mask[tick, leaf_of_path[path]] = 1.0
+
+    def on_sync(tick, depth, path):
+        _, _, lo, hi = node_info[path]
+        sync_mask[tick, depth, lo:hi] = 1.0
+
+    _walk(tree, None, on_solve, on_sync)
+
+    # refresh depth d when any ancestor at depth <= d synced this tick
+    refresh_mask = np.maximum.accumulate(sync_mask, axis=1)
+    root_sync = sync_mask[:, 0, :].max(axis=1) > 0.0
+
+    levels = _detect_levels(tree, leaves, D)
+    return TreePlan(
+        n_leaves=n, m_b=m_b, m_total=m_total, n_ticks=S, depth=D,
+        h_max=h_max, leaf_names=names, leaf_sizes=sizes,
+        leaf_offsets=offsets, leaf_h=leaf_h,
+        solve_mask=solve_mask, sync_mask=sync_mask,
+        refresh_mask=refresh_mask, root_sync=root_sync,
+        alpha_scale=alpha_scale, w_coeff=w_coeff, group_ids=group_ids,
+        n_groups=tuple(max(len(g), 1) for g in gid_of),
+        weighting=weighting, levels=levels,
+    )
+
+
+def _detect_levels(tree: TreeNode, leaves, D) -> Optional[Tuple[LevelSpec, ...]]:
+    """A plan is level-homogeneous (mesh-lowerable) when all internal nodes
+    at each depth share (rounds, fan-out), every leaf sits at depth D and
+    all leaves share (data_size, H)."""
+    by_depth: Dict[int, set] = {}
+    leaf_depths = set()
+
+    def visit(node, depth):
+        if node.is_leaf:
+            leaf_depths.add(depth)
+            return
+        by_depth.setdefault(depth, set()).add(
+            (node.rounds, len(node.children)))
+        for c in node.children:
+            visit(c, depth + 1)
+    visit(tree, 0)
+
+    if leaf_depths != {D}:
+        return None
+    if len({(l.data_size, l.rounds) for l in leaves}) != 1:
+        return None
+    if any(len(v) != 1 for v in by_depth.values()):
+        return None
+    return tuple(
+        LevelSpec(depth=d, rounds=next(iter(by_depth[d]))[0],
+                  group_size=next(iter(by_depth[d]))[1])
+        for d in range(D)
+    )
+
+
+# ---------------------------------------------------------------------------
+# RNG replay -> per-solve key arrays (draws happen inside the executors)
+# ---------------------------------------------------------------------------
+def key_plan(tree: TreeNode, plan: TreePlan, key=None) -> np.ndarray:
+    """Replay the legacy recursion's key derivation over ``tree`` and return
+    the (S, n_leaves, 2) uint32 per-solve key array: entry [s, l] is the
+    exact key the legacy recursion would hand ``local_sdca`` for leaf l's
+    solve at tick s (zeros at idle ticks -- those solves are masked out, so
+    their draws are never applied).
+
+    Executors draw ``randint(key, (H_l,), 0, m_b_l)`` *inside* the compiled
+    program, so only O(S x n) keys are materialized on the host, not the
+    O(S x n x H) coordinate choices themselves.  Accepts legacy uint32
+    ``PRNGKey`` arrays or new-style typed keys."""
+    key = jax.random.PRNGKey(0) if key is None else _raw_key(key)
+    leaf_of_path: Dict[tuple, int] = {}
+    counter = [0]
+
+    def index(node, path):
+        if node.is_leaf:
+            leaf_of_path[path] = counter[0]
+            counter[0] += 1
+            return
+        for ci, c in enumerate(node.children):
+            index(c, path + (ci,))
+    index(tree, ())
+
+    keys = np.zeros((plan.n_ticks, plan.n_leaves, 2), np.uint32)
+
+    def on_solve(tick, path, k):
+        keys[tick, leaf_of_path[path]] = np.asarray(k)
+
+    _walk(tree, key, on_solve, lambda *a: None)
+    return keys
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _batched_randint(keys, H: int, m_b: int):
+    return jax.vmap(lambda k: jax.random.randint(k, (H,), 0, m_b))(keys)
+
+
+def index_plan(tree: TreeNode, plan: TreePlan, key=None) -> np.ndarray:
+    """Materialize the (S, n_leaves, h_max) int32 coordinate choices the
+    executors will draw from :func:`key_plan` (debug/test helper; the
+    executors never build this array)."""
+    keys = key_plan(tree, plan, key)
+    idx = np.zeros((plan.n_ticks, plan.n_leaves, plan.h_max), np.int32)
+    for li in range(plan.n_leaves):
+        ticks = np.nonzero(plan.solve_mask[:, li])[0]
+        if len(ticks) == 0:
+            continue
+        h = int(plan.leaf_h[li])
+        mb = int(plan.leaf_sizes[li])
+        draws = np.asarray(_batched_randint(keys[ticks, li], h, mb))
+        idx[ticks, li, :h] = draws
+    return idx
+
+
+# ---------------------------------------------------------------------------
+# tree constructors for plan-driven workflows
+# ---------------------------------------------------------------------------
+def balanced_tree(
+    branching: Sequence[int],
+    rounds: Sequence[int],
+    *,
+    local_steps: int,
+    m_leaf: int,
+    t_lp: float = 0.0,
+) -> TreeNode:
+    """A level-homogeneous tree, top-down: ``branching[0]`` children at the
+    root running ``rounds[0]`` rounds, and so on; leaves run ``local_steps``
+    coordinate steps over ``m_leaf`` examples each."""
+    assert len(branching) == len(rounds) and len(branching) >= 1
+
+    def build(d, path):
+        tag = "-".join(str(p) for p in path)  # separator: fan-out >= 10 safe
+        if d == len(branching):
+            return TreeNode(name=f"L{tag}", rounds=local_steps,
+                            data_size=m_leaf, t_lp=t_lp)
+        kids = tuple(build(d + 1, path + (k,))
+                     for k in range(branching[d]))
+        name = "root" if d == 0 else f"N{tag}"
+        return TreeNode(name=name, children=kids, rounds=rounds[d])
+    return build(0, ())
+
+
+def tree_from_level_plan(
+    level_plan: Sequence[dict],
+    branching: Sequence[int],
+    *,
+    m_leaf: int,
+    root_rounds: int,
+    t_lp: float = 0.0,
+) -> TreeNode:
+    """Bridge from ``repro.core.delay.plan_hierarchical_h`` (paper eq. (12)
+    applied per level, innermost first) to an engine-runnable tree:
+    ``level_plan[0]["H"]`` becomes the leaf local-step count, higher levels'
+    H become the per-depth round counts, and the root runs ``root_rounds``.
+    ``branching`` is top-down (root fan-out first)."""
+    hs = [int(row["H"]) for row in level_plan]
+    assert len(branching) == len(hs), (len(branching), len(hs))
+    # top-down internal rounds: root, then H of the outer levels inward
+    rounds = [root_rounds] + list(reversed(hs[1:]))
+    return balanced_tree(branching, rounds, local_steps=hs[0],
+                         m_leaf=m_leaf, t_lp=t_lp)

@@ -1,0 +1,73 @@
+"""Instrumentation for solver runs, factored out of the solvers themselves
+so the compiled engine, the legacy reference recursion, the delay-planning
+tools (``repro.core.delay``) and the figure benchmarks all share one
+history/timing layer.
+
+* simulated wall-clock: the tree's own delay model (``TreeNode.solve_time``,
+  the generalization of paper eq. (9)) gives the per-root-round time;
+* history: a list of ``{round, time, dual, primal, gap}`` dicts wrapped in
+  :class:`SolveResult` (array accessors for plotting/benchmarks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.tree import TreeNode
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class SolveResult:
+    """A solver run: final iterates + per-root-round instrumentation."""
+    alpha: Array
+    w: Array
+    history: List[dict]  # per root round: round, time, dual, primal, gap
+
+    @property
+    def times(self) -> np.ndarray:
+        return np.array([h["time"] for h in self.history])
+
+    @property
+    def gaps(self) -> np.ndarray:
+        return np.array([h["gap"] for h in self.history])
+
+    @property
+    def duals(self) -> np.ndarray:
+        return np.array([h["dual"] for h in self.history])
+
+
+def per_round_time(tree: TreeNode) -> float:
+    """Simulated wall-clock of ONE root round (children in parallel,
+    synchronous barrier; paper eq. (9) when the tree is a star)."""
+    return tree.solve_time() / max(tree.rounds, 1)
+
+
+def round_times(tree: TreeNode) -> np.ndarray:
+    """Times of rounds 0..T (round 0 is the start-of-run record)."""
+    return np.arange(tree.rounds + 1) * per_round_time(tree)
+
+
+def history_from_series(
+    times: Sequence[float],
+    duals: Sequence[float],
+    primals: Sequence[float],
+) -> List[dict]:
+    """Assemble the legacy history-dict list from aligned series."""
+    out = []
+    for t, (tm, dv, pv) in enumerate(zip(times, duals, primals)):
+        out.append({"round": t, "time": float(tm), "dual": float(dv),
+                    "primal": float(pv), "gap": float(pv) - float(dv)})
+    return out
+
+
+def record_round(history: List[dict], t: int, time: float, dual: float,
+                 primal: float) -> None:
+    """Append one legacy-format history entry (used by the reference
+    recursion, which records on the host as it goes)."""
+    history.append({"round": t, "time": time, "dual": dual,
+                    "primal": primal, "gap": primal - dual})

@@ -1,8 +1,16 @@
-"""TreeDualMethod (paper Algorithms 1-3): recursive distributed dual
-coordinate ascent over an arbitrary tree network.
+"""TreeDualMethod (paper Algorithms 1-3): distributed dual coordinate ascent
+over an arbitrary tree network.
 
-The tree is a static Python structure (repro.core.tree.TreeNode); per-leaf
-LocalSDCA solves are jit-compiled. The recursion is exact Algorithm 2:
+:func:`tree_dual_solve` is a thin wrapper over the unified tree-schedule
+engine (``repro.core.engine``): the tree is lowered to a flat static plan
+and the whole nested recursion runs as ONE jit-compiled ``lax.scan``
+program (see ``docs/architecture.md``).
+
+The original host-side Python recursion is retained verbatim as
+:func:`tree_dual_solve_reference` -- it is the cross-check oracle in the
+tests (the engine replays its key derivation, so both produce the same
+iterates up to float reassociation) and the baseline in
+``benchmarks/bench_engine.py``.  The recursion is exact Algorithm 2:
 
     for t = 1..T:
         for children k = 1..K in parallel:
@@ -10,46 +18,78 @@ LocalSDCA solves are jit-compiled. The recursion is exact Algorithm 2:
             alpha_[k] += da_k / K
         w += (1/K) sum_k dw_k
 
-Leaves run Procedure P (repro.core.local_sdca). The root (Algorithm 3) starts
-from alpha = 0, w = 0 and records a (simulated_time, dual, gap) history using
-the tree's delay model (tree.solve_time).
+Leaves run Procedure P (repro.core.local_sdca).  The root (Algorithm 3)
+starts from alpha = 0, w = 0 and records a (simulated_time, dual, gap)
+history using the tree's delay model (``repro.core.instrument``).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import dual as dual_mod
 from repro.core.dual import Loss
+from repro.core.instrument import (SolveResult, per_round_time,  # noqa: F401
+                                   record_round)
 from repro.core.local_sdca import local_sdca
 from repro.core.tree import TreeNode
 
 Array = jax.Array
 
 
-@dataclasses.dataclass
-class SolveResult:
-    alpha: Array
-    w: Array
-    history: List[dict]  # per root round: time, dual, primal, gap
+def tree_dual_solve(
+    tree: TreeNode,
+    X: Array,
+    y: Array,
+    *,
+    loss: Loss,
+    lam: float,
+    key: Optional[Array] = None,
+    record_history: bool = True,
+    backend: str = "vmap",
+    weighting: str = "uniform",
+) -> SolveResult:
+    """Algorithm 3 at the root of ``tree`` over data X (m x d), labels y,
+    compiled and executed by the unified engine."""
+    from repro.core import engine
+    return engine.solve(
+        tree, X, y, loss=loss, lam=lam, key=key,
+        record_history=record_history, backend=backend, weighting=weighting)
 
-    @property
-    def times(self) -> np.ndarray:
-        return np.array([h["time"] for h in self.history])
 
-    @property
-    def gaps(self) -> np.ndarray:
-        return np.array([h["gap"] for h in self.history])
+def cocoa_star_solve(
+    X: Array,
+    y: Array,
+    n_workers: int,
+    *,
+    loss: Loss,
+    lam: float,
+    outer_rounds: int,
+    local_steps: int,
+    key: Optional[Array] = None,
+    t_lp: float = 0.0,
+    t_cp: float = 0.0,
+    t_delay: float = 0.0,
+) -> SolveResult:
+    """Algorithm 1 (CoCoA) as the star special case: identical to running
+    the engine on a depth-1 star tree (tested bit-for-bit)."""
+    from repro.core.tree import star
 
-    @property
-    def duals(self) -> np.ndarray:
-        return np.array([h["dual"] for h in self.history])
+    m = X.shape[0]
+    assert m % n_workers == 0, "even split expected (paper setup)"
+    tree = star(
+        n_workers, m // n_workers,
+        outer_rounds=outer_rounds, local_steps=local_steps,
+        t_lp=t_lp, t_cp=t_cp, t_delay=t_delay,
+    )
+    return tree_dual_solve(tree, X, y, loss=loss, lam=lam, key=key)
 
 
+# ---------------------------------------------------------------------------
+# Legacy host recursion: retained as the engine's cross-check oracle.
+# ---------------------------------------------------------------------------
 def _solve_node(
     node: TreeNode,
     slices: Dict[str, slice],
@@ -105,7 +145,7 @@ def _solve_node(
     return alpha, w
 
 
-def tree_dual_solve(
+def tree_dual_solve_reference(
     tree: TreeNode,
     X: Array,
     y: Array,
@@ -115,7 +155,7 @@ def tree_dual_solve(
     key: Optional[Array] = None,
     record_history: bool = True,
 ) -> SolveResult:
-    """Algorithm 3 at the root of ``tree`` over data X (m x d), labels y."""
+    """The original O(tree x rounds) Python-dispatch recursion (oracle)."""
     m = X.shape[0]
     assert tree.total_data() == m, (
         f"tree data sizes {tree.total_data()} != m={m}"
@@ -128,9 +168,9 @@ def tree_dual_solve(
     w = jnp.zeros((X.shape[1],), dtype=X.dtype)
 
     # one root round's simulated wall-clock (children in parallel, barrier)
-    per_round = tree.solve_time() / max(tree.rounds, 1)
+    per_round = per_round_time(tree)
 
-    history: List[dict] = []
+    history: list = []
 
     def record(t: int):
         if not record_history:
@@ -141,14 +181,10 @@ def tree_dual_solve(
                 dual_mod.w_of_alpha(alpha, X, lam), X, y, loss, lam
             )
         )
-        history.append(
-            {"round": t, "time": t * per_round, "dual": dv, "primal": pv,
-             "gap": pv - dv}
-        )
+        record_round(history, t, t * per_round, dv, pv)
 
     record(0)
     K = len(tree.children)
-    root_slice = slice(0, m)
     for t in range(1, tree.rounds + 1):
         key, *subkeys = jax.random.split(key, 1 + K)
         dws = []
@@ -173,30 +209,3 @@ def tree_dual_solve(
         record(t)
 
     return SolveResult(alpha=alpha, w=w, history=history)
-
-
-def cocoa_star_solve(
-    X: Array,
-    y: Array,
-    n_workers: int,
-    *,
-    loss: Loss,
-    lam: float,
-    outer_rounds: int,
-    local_steps: int,
-    key: Optional[Array] = None,
-    t_lp: float = 0.0,
-    t_cp: float = 0.0,
-    t_delay: float = 0.0,
-) -> SolveResult:
-    """Algorithm 1 (CoCoA) as the star special case."""
-    from repro.core.tree import star
-
-    m = X.shape[0]
-    assert m % n_workers == 0, "even split expected (paper setup)"
-    tree = star(
-        n_workers, m // n_workers,
-        outer_rounds=outer_rounds, local_steps=local_steps,
-        t_lp=t_lp, t_cp=t_cp, t_delay=t_delay,
-    )
-    return tree_dual_solve(tree, X, y, loss=loss, lam=lam, key=key)

@@ -1,6 +1,7 @@
 """TreeDualMethod ON THE MESH: the paper's Algorithms 1-3 executed as a
-sharded device program (shard_map + jax.lax collectives), with the leaf
-solver running the Pallas blocked-SDCA kernel on each shard.
+sharded device program, now expressed as the unified engine's ``shard_map``
+backend (``repro.core.engine.mesh``) with the leaf solver running the Pallas
+blocked-SDCA kernel on each shard.
 
 The tree is the mesh-axis hierarchy itself:
 
@@ -20,27 +21,24 @@ Math note: with disjoint coordinate blocks, averaging *delta_w* with weight
 1/K at every level while applying each worker's *own* delta_alpha scaled by
 the same product of 1/K factors keeps w = A alpha exactly -- this is the
 zero-padding argument in the paper's eq. (13).
+
+Because the mesh backend consumes the same compiled plan (and the same
+legacy-RNG coordinate replay) as the host backend, ``mesh_tree_dual_solve``
+produces the same iterates as ``tree_dual_solve`` on the equivalent
+balanced tree, up to float reassociation.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core.dual import Loss
-from repro.kernels.sdca.kernel import sdca_block_kernel
+from repro.core.engine.mesh import execute_plan_mesh, tree_from_mesh_axes
+from repro.core.engine.plan import compile_tree
 
 Array = jax.Array
-
-
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except RuntimeError:
-        return False
 
 
 def mesh_tree_dual_solve(
@@ -58,78 +56,17 @@ def mesh_tree_dual_solve(
 ) -> Tuple[Array, Array]:
     """Run the full nested schedule; returns (alpha (m,), w (d,))."""
     assert len(axes) == len(rounds)
-    m, d = X.shape
+    m, _ = X.shape
     sizes = [dict(mesh.shape)[a] for a in axes]
     n_leaves = 1
     for s in sizes:
         n_leaves *= s
     assert m % n_leaves == 0, (m, n_leaves)
     m_b = m // n_leaves
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    lm = lam * m
 
-    # block layout: leaf (i_outer, ..., i_inner) owns block index
-    # i_outer*inner_sizes + ... (row-major over reversed axes)
-    Xb = X.reshape(n_leaves, m_b, d)
-    yb = y.reshape(n_leaves, m_b)
-
-    spec_in = P(tuple(reversed(axes)))  # leading block dim over all levels
-
-    def leaf_solve(X_blk, y_blk, a_blk, w, k):
-        """One LocalSDCA call on this leaf's block (shapes (1, m_b, ...))."""
-        idx = jax.random.randint(k, (1, local_steps), 0, m_b)
-        if use_kernel:
-            da, dw = sdca_block_kernel(X_blk, y_blk, a_blk, w, idx,
-                                       loss=loss, lm=lm,
-                                       interpret=not _on_tpu())
-        else:
-            from repro.kernels.sdca.ref import sdca_block_ref
-            da, dw = sdca_block_ref(X_blk, y_blk, a_blk, w, idx,
-                                    loss=loss, lm=lm)
-        return da, dw[0]
-
-    def solve_level(level, X_blk, y_blk, a_blk, w, k):
-        """Run `rounds[level]` rounds at `level`; each round recurses below
-        then averages delta-w over this level's axis (Algorithm 2)."""
-        axis = axes[level]
-        K = sizes[level]
-        T = rounds[level]
-
-        def one_round(t, carry):
-            a_c, w_c = carry
-            kt = jax.random.fold_in(k, (level + 1) * 100003 + t)
-            if level == 0:
-                da, dw = leaf_solve(X_blk, y_blk, a_c, w_c, kt)
-            else:
-                a_lo, w_lo = solve_level(level - 1, X_blk, y_blk, a_c, w_c,
-                                         kt)
-                da, dw = a_lo - a_c, w_lo - w_c
-            # Algorithm 2 updates: alpha_[k] += da/K ; w += psum(dw)/K
-            a_c = a_c + da / K
-            w_c = w_c + jax.lax.psum(dw, axis) / K
-            return a_c, w_c
-
-        return jax.lax.fori_loop(0, T, one_round, (a_blk, w))
-
-    @functools.partial(
-        jax.shard_map, mesh=mesh,
-        in_specs=(spec_in, spec_in, spec_in, P()),
-        out_specs=(spec_in, P()),
-        check_vma=False,
-    )
-    def program(Xs, ys, a0, w0):
-        # per-leaf rng: fold in this leaf's linear index
-        lin = jnp.int32(0)
-        for a in reversed(axes):
-            lin = lin * dict(mesh.shape)[a] + jax.lax.axis_index(a)
-        k_leaf = jax.random.fold_in(key, lin)
-        a_end, w_end = solve_level(len(axes) - 1, Xs, ys, a0, w0, k_leaf)
-        return a_end, w_end
-
-    a0 = jnp.zeros((n_leaves, m_b), X.dtype)
-    w0 = jnp.zeros((d,), X.dtype)
-    Xs = jax.device_put(Xb, NamedSharding(mesh, spec_in))
-    ys = jax.device_put(yb, NamedSharding(mesh, spec_in))
-    alpha, w = jax.jit(program)(Xs, ys, a0, w0)
-    return alpha.reshape(m), w
+    tree = tree_from_mesh_axes(mesh, axes, rounds,
+                               local_steps=local_steps, m_leaf=m_b)
+    plan = compile_tree(tree, weighting="uniform")
+    return execute_plan_mesh(
+        plan, tree, X, y, mesh, axes=axes, loss=loss, lam=lam, key=key,
+        use_kernel=use_kernel)

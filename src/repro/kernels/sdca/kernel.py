@@ -33,15 +33,9 @@ from jax.experimental import pallas as pl
 from repro.core.dual import Loss
 
 
-def _sdca_kernel(X_ref, y_ref, a_ref, w_ref, xsq_ref, idx_ref,
-                 da_ref, dw_ref, *, lm: float, loss: Loss, H: int):
-    X = X_ref[...]          # (m_b, d) resident
-    y = y_ref[...]
-    a0 = a_ref[...]
-    w0 = w_ref[...]         # (d,) shared input iterate
-    xsq = xsq_ref[...]      # ||x_i||^2 / (lam m)
-    idx = idx_ref[...]      # (H,)
-
+def _sdca_steps(X, y, a0, w0, xsq, idx, mask, *, lm: float, loss: Loss,
+                H: int):
+    """The H sequential coordinate maximizations (VMEM/VREG resident)."""
     def body(h, carry):
         a_c, w_c = carry
         i = idx[h]
@@ -51,44 +45,83 @@ def _sdca_kernel(X_ref, y_ref, a_ref, w_ref, xsq_ref, idx_ref,
         x2_i = jax.lax.dynamic_slice_in_dim(xsq, i, 1, axis=0)[0]
         wx = jnp.sum(w_c * x_i)                                # VPU dot
         dlt = loss.coord_delta(wx, a_i, y_i, x2_i)
+        if mask is not None:  # engine schedules: idle ticks / padded steps
+            dlt = dlt * jax.lax.dynamic_slice_in_dim(mask, h, 1, axis=0)[0]
         a_c = jax.lax.dynamic_update_slice_in_dim(
             a_c, (a_i + dlt)[None], i, axis=0)
         w_c = w_c + (dlt / lm) * x_i                           # rank-1, VREG
         return a_c, w_c
 
-    a_end, w_end = jax.lax.fori_loop(0, H, body, (a0, w0))
-    da_ref[...] = a_end - a0
-    dw_ref[...] = w_end - w0
+    return jax.lax.fori_loop(0, H, body, (a0, w0))
+
+
+def _sdca_kernel(X_ref, y_ref, a_ref, w_ref, xsq_ref, idx_ref,
+                 da_ref, dw_ref, *, lm: float, loss: Loss, H: int):
+    a_end, w_end = _sdca_steps(
+        X_ref[...], y_ref[...], a_ref[...], w_ref[...], xsq_ref[...],
+        idx_ref[...], None, lm=lm, loss=loss, H=H)
+    da_ref[...] = a_end - a_ref[...]
+    dw_ref[...] = w_end - w_ref[...]
+
+
+def _sdca_kernel_masked(X_ref, y_ref, a_ref, w_ref, xsq_ref, idx_ref,
+                        mask_ref, da_ref, dw_ref, *, lm: float, loss: Loss,
+                        H: int):
+    a_end, w_end = _sdca_steps(
+        X_ref[...], y_ref[...], a_ref[...], w_ref[...], xsq_ref[...],
+        idx_ref[...], mask_ref[...], lm=lm, loss=loss, H=H)
+    da_ref[...] = a_end - a_ref[...]
+    dw_ref[...] = w_end - w_ref[...]
 
 
 def sdca_block_kernel(
     X: jax.Array,      # (K, m_b, d)
     y: jax.Array,      # (K, m_b)
     alpha: jax.Array,  # (K, m_b)
-    w: jax.Array,      # (d,)
+    w: jax.Array,      # (d,) shared, or (K, d) per-block (engine schedules)
     idx: jax.Array,    # (K, H)
     *,
     loss: Loss,
     lm: float,
+    step_mask: jax.Array = None,  # optional (K, H) 0/1 per-step gating
     interpret: bool = True,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Returns (delta_alpha (K, m_b), delta_w (K, d))."""
+    """Returns (delta_alpha (K, m_b), delta_w (K, d)).
+
+    ``w`` may be the classic shared (d,) iterate (every program reads the
+    same block) or a per-worker (K, d) batch -- the unified engine gives
+    each leaf its own w replica between syncs.  ``step_mask`` zeroes the
+    coordinate delta of masked steps, which is how the engine runs leaves
+    with heterogeneous H (padded to H_max) and idle ticks inside one grid.
+    """
     K, m_b, d = X.shape
     H = idx.shape[1]
     xsq = jnp.sum(X * X, axis=2) / lm
 
-    kernel = functools.partial(_sdca_kernel, lm=lm, loss=loss, H=H)
+    if w.ndim == 2:
+        w_spec = pl.BlockSpec((None, d), lambda k: (k, 0))
+    else:
+        w_spec = pl.BlockSpec((d,), lambda k: (0,))           # shared w
+    in_specs = [
+        pl.BlockSpec((None, m_b, d), lambda k: (k, 0, 0)),
+        pl.BlockSpec((None, m_b), lambda k: (k, 0)),
+        pl.BlockSpec((None, m_b), lambda k: (k, 0)),
+        w_spec,
+        pl.BlockSpec((None, m_b), lambda k: (k, 0)),
+        pl.BlockSpec((None, H), lambda k: (k, 0)),
+    ]
+    operands = [X, y, alpha, w, xsq, idx]
+    if step_mask is not None:
+        kernel = functools.partial(_sdca_kernel_masked, lm=lm, loss=loss, H=H)
+        in_specs.append(pl.BlockSpec((None, H), lambda k: (k, 0)))
+        operands.append(step_mask)
+    else:
+        kernel = functools.partial(_sdca_kernel, lm=lm, loss=loss, H=H)
+
     da, dw = pl.pallas_call(
         kernel,
         grid=(K,),
-        in_specs=[
-            pl.BlockSpec((None, m_b, d), lambda k: (k, 0, 0)),
-            pl.BlockSpec((None, m_b), lambda k: (k, 0)),
-            pl.BlockSpec((None, m_b), lambda k: (k, 0)),
-            pl.BlockSpec((d,), lambda k: (0,)),       # shared w
-            pl.BlockSpec((None, m_b), lambda k: (k, 0)),
-            pl.BlockSpec((None, H), lambda k: (k, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((None, m_b), lambda k: (k, 0)),
             pl.BlockSpec((None, d), lambda k: (k, 0)),
@@ -98,5 +131,5 @@ def sdca_block_kernel(
             jax.ShapeDtypeStruct((K, d), X.dtype),
         ],
         interpret=interpret,
-    )(X, y, alpha, w, xsq, idx)
+    )(*operands)
     return da, dw

@@ -8,15 +8,9 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import on_tpu as _on_tpu
 from repro.core.dual import Loss
 from repro.kernels.sdca.kernel import sdca_block_kernel
-
-
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except RuntimeError:
-        return False
 
 
 @functools.partial(jax.jit, static_argnames=("loss", "num_steps", "m_total",

@@ -15,28 +15,36 @@ def sdca_block_ref(
     X: jax.Array,       # (K, m_b, d) per-worker data blocks
     y: jax.Array,       # (K, m_b)
     alpha: jax.Array,   # (K, m_b) current dual blocks
-    w: jax.Array,       # (d,) shared primal iterate (w = A alpha)
+    w: jax.Array,       # (d,) shared primal iterate, or (K, d) per-worker
     idx: jax.Array,     # (K, H) int32 coordinate choices
     *,
     loss: Loss,
     lm: float,          # lambda * m_total
+    step_mask: jax.Array = None,  # optional (K, H) 0/1 per-step gating
 ) -> Tuple[jax.Array, jax.Array]:
     """Returns (delta_alpha (K, m_b), delta_w (K, d))."""
     K, m_b, d = X.shape
     H = idx.shape[1]
     xsq_over_lm = jnp.sum(X * X, axis=2) / lm  # (K, m_b)
 
-    def worker(Xk, yk, ak, idxk, xsqk):
+    def worker(Xk, yk, ak, wk, idxk, mk, xsqk):
         def body(h, carry):
             a_c, w_c = carry
             i = idxk[h]
             x_i = Xk[i]
-            wx = jnp.dot(w_c, x_i)
+            wx = jnp.sum(w_c * x_i)  # same accumulation as the kernel's VPU dot
             dlt = loss.coord_delta(wx, a_c[i], yk[i], xsqk[i])
+            if mk is not None:
+                dlt = dlt * mk[h]
             return a_c.at[i].add(dlt), w_c + (dlt / lm) * x_i
 
-        a_end, w_end = jax.lax.fori_loop(0, H, body, (ak, w))
-        return a_end - ak, w_end - w
+        a_end, w_end = jax.lax.fori_loop(0, H, body, (ak, wk))
+        return a_end - ak, w_end - wk
 
-    da, dw = jax.vmap(worker)(X, y, alpha, idx, xsq_over_lm)
+    da, dw = jax.vmap(
+        worker,
+        in_axes=(0, 0, 0,
+                 0 if w.ndim == 2 else None,
+                 0, 0 if step_mask is not None else None, 0),
+    )(X, y, alpha, w, idx, step_mask, xsq_over_lm)
     return da, dw

@@ -28,6 +28,20 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     return jax.make_mesh(shape, axes)
 
 
+def make_abstract_mesh(shape: Tuple[int, ...],
+                       axes: Tuple[str, ...]) -> "jax.sharding.AbstractMesh":
+    """Version-portable ``AbstractMesh`` construction.
+
+    Newer jax takes ``AbstractMesh(axis_sizes, axis_names)``; jax 0.4.37
+    takes a single ``shape_tuple`` of ``(name, size)`` pairs.  Accepts the
+    modern ``(shape, axes)`` calling convention either way."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))
+
+
 def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over whatever devices exist (tests / smoke runs)."""
     n = len(jax.devices())

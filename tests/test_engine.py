@@ -1,0 +1,226 @@
+"""Unified tree-schedule engine vs the legacy recursion oracle.
+
+The engine replays the legacy key derivation, so for ANY topology the
+compiled scan must reproduce the reference iterates up to float
+reassociation -- star, chain, multi-level, and imbalanced/heterogeneous
+trees alike -- while preserving the w = A alpha invariant and keeping
+``cocoa_star_solve`` bit-equivalent to the engine on the depth-1 star.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dual as D
+from repro.core import engine
+from repro.core.engine.plan import balanced_tree, compile_tree, index_plan
+from repro.core.tree import TreeNode, star, two_level
+from repro.core.treedual import (cocoa_star_solve, tree_dual_solve,
+                                 tree_dual_solve_reference)
+from repro.data.synthetic import gaussian_regression
+
+LAM = 0.1
+TOL = dict(rtol=1e-4, atol=1e-5)
+
+
+def _imbalanced_tree():
+    """Mixed depth (1..3), heterogeneous per-leaf H and block sizes, and
+    heterogeneous internal rounds -- the case the legacy mesh path could
+    never express."""
+    la = TreeNode(name="A", rounds=40, data_size=24)
+    lb = TreeNode(name="B", rounds=30, data_size=16)
+    lc = TreeNode(name="C", rounds=50, data_size=8)
+    g = TreeNode(name="g", children=(lb, lc), rounds=2)
+    ld = TreeNode(name="Dd", rounds=20, data_size=12)
+    le = TreeNode(name="E", rounds=25, data_size=20)
+    h = TreeNode(name="h", children=(ld, le), rounds=3)
+    mid = TreeNode(name="mid", children=(g, h), rounds=2)
+    return TreeNode(name="root", children=(la, mid), rounds=6)
+
+
+def _chain_tree():
+    """A deep path: root -> mid -> group -> 2 leaves."""
+    leaves = (TreeNode(name="l0", rounds=60, data_size=30),
+              TreeNode(name="l1", rounds=60, data_size=30))
+    grp = TreeNode(name="grp", children=leaves, rounds=2)
+    mid = TreeNode(name="mid", children=(grp,), rounds=3)
+    return TreeNode(name="root", children=(mid,), rounds=4)
+
+
+CASES = {
+    "star": lambda: star(4, 60, outer_rounds=8, local_steps=120),
+    "chain": _chain_tree,
+    "two_level": lambda: two_level(2, 2, 60, root_rounds=5, group_rounds=3,
+                                   local_steps=100),
+    "imbalanced": _imbalanced_tree,
+}
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_engine_matches_reference_recursion(case):
+    tree = CASES[case]()
+    m = tree.total_data()
+    X, y = gaussian_regression(m=m, d=16)
+    key = jax.random.PRNGKey(5)
+    ref = tree_dual_solve_reference(tree, X, y, loss=D.squared, lam=LAM,
+                                    key=key)
+    eng = tree_dual_solve(tree, X, y, loss=D.squared, lam=LAM, key=key)
+    np.testing.assert_allclose(np.asarray(eng.alpha), np.asarray(ref.alpha),
+                               **TOL)
+    np.testing.assert_allclose(np.asarray(eng.w), np.asarray(ref.w), **TOL)
+    # same history semantics: aligned rounds, times, and objective values
+    assert len(eng.history) == len(ref.history) == tree.rounds + 1
+    np.testing.assert_allclose(eng.times, ref.times, rtol=1e-9)
+    np.testing.assert_allclose(eng.duals, ref.duals, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(eng.gaps, ref.gaps, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_engine_preserves_w_invariant(case):
+    tree = CASES[case]()
+    m = tree.total_data()
+    X, y = gaussian_regression(m=m, d=12)
+    res = tree_dual_solve(tree, X, y, loss=D.squared, lam=LAM)
+    w_expect = D.w_of_alpha(res.alpha, X, LAM)
+    np.testing.assert_allclose(np.asarray(res.w), np.asarray(w_expect),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_cocoa_star_bit_equivalent_to_engine_star():
+    """Algorithm 1 is the engine's depth-1 special case, bit-for-bit."""
+    X, y = gaussian_regression(m=240, d=20)
+    key = jax.random.PRNGKey(9)
+    res = cocoa_star_solve(X, y, 4, loss=D.squared, lam=LAM,
+                           outer_rounds=10, local_steps=80, key=key)
+    tree = star(4, 60, outer_rounds=10, local_steps=80)
+    eng = engine.solve(tree, X, y, loss=D.squared, lam=LAM, key=key)
+    np.testing.assert_array_equal(np.asarray(res.alpha),
+                                  np.asarray(eng.alpha))
+    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(eng.w))
+
+
+def test_pallas_leaf_backend_matches_vmap():
+    tree = _imbalanced_tree()
+    X, y = gaussian_regression(m=tree.total_data(), d=12)
+    key = jax.random.PRNGKey(2)
+    a = tree_dual_solve(tree, X, y, loss=D.squared, lam=LAM, key=key)
+    b = tree_dual_solve(tree, X, y, loss=D.squared, lam=LAM, key=key,
+                        backend="pallas")
+    np.testing.assert_allclose(np.asarray(a.alpha), np.asarray(b.alpha),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(a.w), np.asarray(b.w),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_size_weighting_converges_and_keeps_invariant():
+    """CoCoA-style |block|-proportional aggregation: still a convex
+    combination, so w-consistency holds and the solve converges."""
+    tree = _imbalanced_tree()
+    X, y = gaussian_regression(m=tree.total_data(), d=12)
+    res = tree_dual_solve(tree, X, y, loss=D.squared, lam=LAM,
+                          weighting="size")
+    w_expect = D.w_of_alpha(res.alpha, X, LAM)
+    np.testing.assert_allclose(np.asarray(res.w), np.asarray(w_expect),
+                               rtol=1e-4, atol=1e-5)
+    assert res.gaps[-1] < 0.05 * res.gaps[0]
+
+
+def test_plan_geometry_and_levels():
+    """Plan IR sanity: tick counts, level detection, index replay shape."""
+    tree = two_level(2, 2, 16, root_rounds=4, group_rounds=3, local_steps=8)
+    plan = compile_tree(tree)
+    assert plan.n_ticks == 4 * 3 and plan.depth == 2
+    assert plan.n_leaves == 4 and plan.m_b == 16 and plan.h_max == 8
+    assert plan.levels is not None
+    assert [l.rounds for l in plan.levels] == [4, 3]
+    assert [l.group_size for l in plan.levels] == [2, 2]
+    assert int(plan.root_sync.sum()) == 4   # one per root round
+    # balanced leaves solve every tick; root sync at the end of each round
+    assert plan.solve_mask.all()
+    idx = index_plan(tree, plan, jax.random.PRNGKey(0))
+    assert idx.shape == (12, 4, 8)
+    assert (idx >= 0).all() and (idx < 16).all()
+
+    # imbalanced trees are not mesh-lowerable and say so
+    plan2 = compile_tree(_imbalanced_tree())
+    assert plan2.levels is None
+    # the shallow leaf ("A") idles while the deep subtree keeps solving
+    assert not plan2.solve_mask.all()
+
+
+def test_balanced_tree_constructor_roundtrip():
+    tree = balanced_tree([2, 2, 2], [4, 2, 3], local_steps=16, m_leaf=8)
+    assert tree.depth() == 3 and len(tree.leaves()) == 8
+    plan = compile_tree(tree)
+    assert plan.n_ticks == 4 * 2 * 3
+    assert plan.levels is not None and [l.rounds for l in plan.levels] == \
+        [4, 2, 3]
+
+
+def test_balanced_tree_names_unique_at_production_fanout():
+    """Fan-out >= 10 (e.g. a 16x16 pod mesh) must not collide leaf names
+    (digit concatenation would alias (1,15) / (11,5) / (1,1,5))."""
+    tree = balanced_tree([16, 16], [2, 2], local_steps=4, m_leaf=2)
+    names = [l.name for l in tree.leaves()]
+    assert len(set(names)) == 256
+    plan = compile_tree(tree)   # would raise on duplicate names
+    assert plan.n_leaves == 256 and plan.levels is not None
+
+
+def test_typed_prng_keys_accepted():
+    """New-style jax.random.key(...) keys work and match the legacy-format
+    PRNGKey (same threefry data -> same replayed draws)."""
+    tree = star(2, 20, outer_rounds=3, local_steps=10)
+    X, y = gaussian_regression(m=40, d=6)
+    a = tree_dual_solve(tree, X, y, loss=D.squared, lam=LAM,
+                        key=jax.random.key(5), record_history=False)
+    b = tree_dual_solve(tree, X, y, loss=D.squared, lam=LAM,
+                        key=jax.random.PRNGKey(5), record_history=False)
+    np.testing.assert_array_equal(np.asarray(a.alpha), np.asarray(b.alpha))
+
+
+def test_record_history_false_skips_history():
+    tree = star(2, 20, outer_rounds=3, local_steps=10)
+    X, y = gaussian_regression(m=40, d=6)
+    res = tree_dual_solve(tree, X, y, loss=D.squared, lam=LAM,
+                          record_history=False)
+    assert res.history == []
+    assert res.alpha.shape == (40,)
+
+
+def test_hinge_loss_through_engine():
+    """Non-smooth losses run through the same compiled program."""
+    from repro.data.synthetic import gaussian_classification
+    tree = two_level(2, 2, 32, root_rounds=8, group_rounds=2,
+                     local_steps=128)
+    X, y = gaussian_classification(m=128, d=10)
+    key = jax.random.PRNGKey(4)
+    loss = D.LOSSES["smooth_hinge_1"]
+    ref = tree_dual_solve_reference(tree, X, y, loss=loss, lam=0.05, key=key)
+    eng = tree_dual_solve(tree, X, y, loss=loss, lam=0.05, key=key)
+    np.testing.assert_allclose(np.asarray(eng.alpha), np.asarray(ref.alpha),
+                               **TOL)
+    assert eng.gaps[-1] < 0.2 * eng.gaps[0]
+
+
+def test_delay_plan_feeds_engine_rounds():
+    """Paper eq. (12) per-level planning (core.delay.plan_hierarchical_h)
+    flows into engine round counts via tree_from_level_plan."""
+    from repro.core.delay import ICI_LINK, DCI_LINK, SyncLevel, \
+        plan_hierarchical_h
+    from repro.core.engine.plan import tree_from_level_plan
+
+    levels = [
+        SyncLevel("ici", group_size=2, link=ICI_LINK, msg_bytes=4 * 64),
+        SyncLevel("dci", group_size=2, link=DCI_LINK, msg_bytes=4 * 64),
+    ]
+    lp = plan_hierarchical_h(levels, C=0.5, delta=1 / 64, t_total=0.5,
+                             t_lp=1e-6, h_max=10**4)
+    tree = tree_from_level_plan(lp, [2, 2], m_leaf=16, root_rounds=3)
+    assert tree.leaves()[0].rounds == lp[0]["H"]
+    assert tree.children[0].rounds == lp[1]["H"]
+    plan = compile_tree(tree)
+    assert plan.levels is not None
+    X, y = gaussian_regression(m=tree.total_data(), d=8)
+    res = tree_dual_solve(tree, X, y, loss=D.squared, lam=LAM)
+    assert np.isfinite(res.gaps).all()

@@ -85,9 +85,9 @@ def test_elastic_remesh_preserves_values():
 
 
 def test_fold_batch_invariance():
-    from jax.sharding import AbstractMesh
-    m1 = AbstractMesh((16, 16), ("data", "model"))
-    m2 = AbstractMesh((8, 16), ("data", "model"))
+    from repro.launch.mesh import make_abstract_mesh
+    m1 = make_abstract_mesh((16, 16), ("data", "model"))
+    m2 = make_abstract_mesh((8, 16), ("data", "model"))
     assert fold_batch(256, m1)["per_replica"] * 16 == 256
     assert fold_batch(256, m2)["per_replica"] * 8 == 256
     with pytest.raises(AssertionError):

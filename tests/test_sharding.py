@@ -12,7 +12,7 @@ from repro.configs.registry import ARCHS
 from repro.configs.shapes import SHAPES
 from repro.launch import sharding as sh
 from repro.launch import steps
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_abstract_mesh, make_host_mesh
 
 
 def _flat(tree):
@@ -33,7 +33,7 @@ def mesh():
 def test_qwen3_full_specs_2d():
     """On the production mesh shapes, qwen3 weights are FSDP x TP sharded."""
     cfg = ARCHS["qwen3-32b"].FULL
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
     pshape = steps.params_shape(cfg)
     specs = _flat(sh.param_specs(cfg, pshape, mesh))
     assert specs["blocks/sub0/mix/wq"] == P(None, "data", "model")
@@ -49,7 +49,7 @@ def test_qwen3_full_specs_2d():
 def test_head_alignment_guard_yi():
     """yi-34b: 56 q-heads don't divide 16 -> heads dim replicated."""
     cfg = ARCHS["yi-34b"].FULL
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
     specs = _flat(sh.param_specs(cfg, steps.params_shape(cfg), mesh))
     assert specs["blocks/sub0/mix/wq"] == P(None, "data", None)
     # but the FFN still gets TP
@@ -58,7 +58,7 @@ def test_head_alignment_guard_yi():
 
 def test_moe_expert_parallel():
     cfg = ARCHS["arctic-480b"].FULL
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
     specs = _flat(sh.param_specs(cfg, steps.params_shape(cfg), mesh))
     assert specs["blocks/sub0/ffn/w_gate"] == P(None, "model", "data", None)
     assert specs["blocks/sub0/ffn/w_down"] == P(None, "model", None, "data")
@@ -70,7 +70,7 @@ def test_moe_expert_parallel():
 def test_opt_state_inherits_param_specs():
     from repro.optim import make_adamw
     cfg = ARCHS["qwen3-32b"].SMOKE
-    mesh = jax.sharding.AbstractMesh((4, 2), ("data", "model"))
+    mesh = make_abstract_mesh((4, 2), ("data", "model"))
     pshape = steps.params_shape(cfg)
     opt = make_adamw()
     oshape = jax.eval_shape(opt.init, pshape)
@@ -84,7 +84,7 @@ def test_opt_state_inherits_param_specs():
 def test_adafactor_factored_state_specs():
     from repro.optim import make_adafactor
     cfg = ARCHS["arctic-480b"].FULL
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
     pshape = steps.params_shape(cfg)
     opt = make_adafactor()
     oshape = jax.eval_shape(opt.init, pshape)
@@ -97,7 +97,7 @@ def test_adafactor_factored_state_specs():
 def test_divisibility_fallback():
     """A dim that doesn't divide the axis falls back to replication."""
     cfg = dataclasses.replace(ARCHS["qwen3-32b"].SMOKE, d_model=60)
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
     dropped = []
     specs = _flat(sh.param_specs(cfg, steps.params_shape(cfg), mesh, dropped=dropped))
     assert specs["blocks/sub0/mix/wq"][1] is None  # 60 % 16 != 0

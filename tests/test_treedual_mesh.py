@@ -74,7 +74,7 @@ def test_mesh_matches_host_reference_quality(data):
 
 def test_kernel_vs_ref_leaf_same_result(data):
     """use_kernel=False (pure-jnp leaves) and True agree bit-for-bit given
-    the same fold_in randomness."""
+    the same replayed per-solve keys (engine key_plan)."""
     X, y = data
     n = len(jax.devices())
     mesh = jax.make_mesh((n,), ("data",))
