@@ -2,23 +2,29 @@
 recursion on a depth-3, 8-leaf tree (the acceptance target is a >= 5x
 host-path speedup; in practice the gap is much larger because the legacy
 path pays one jit dispatch + full-vector alpha copies per leaf solve per
-round, while the engine is ONE lax.scan program).
+round, while the engine runs ONE compiled chunk program per root round).
+
+Also splits cold compile time (plan lowering + trace + XLA compile on the
+first run) from steady-state run time, and records the numbers in
+``BENCH_engine.json`` so the perf trajectory is tracked across commits.
 
     PYTHONPATH=src python benchmarks/bench_engine.py
 """
 from __future__ import annotations
 
+import json
 import time
 from typing import Dict
 
 import jax
 
-from repro.core.dual import LOSSES
-from repro.core.engine.plan import balanced_tree
-from repro.core.treedual import tree_dual_solve, tree_dual_solve_reference
+from repro.api import Problem, Session, Topology
+from repro.core.engine import host as host_mod
+from repro.core.treedual import tree_dual_solve_reference
 from repro.data.synthetic import gaussian_regression
 
 LAM = 0.1
+BENCH_JSON = "BENCH_engine.json"
 
 
 def _time(fn, repeats: int = 3) -> float:
@@ -33,30 +39,58 @@ def _time(fn, repeats: int = 3) -> float:
 
 def run(verbose: bool = True) -> Dict[str, float]:
     # depth-3, 8-leaf balanced tree: 10 root x 2 x 2 rounds, H=128
-    tree = balanced_tree([2, 2, 2], [10, 2, 2], local_steps=128, m_leaf=32)
-    m = tree.total_data()
+    topo = Topology.balanced([2, 2, 2], m_leaf=32, local_steps=128,
+                             level_rounds=[10, 2, 2])
+    m = topo.m_total
     X, y = gaussian_regression(m=m, d=32)
-    loss = LOSSES["squared"]
+    problem = Problem.ridge(X, y, lam=LAM)
     key = jax.random.PRNGKey(0)
-    kw = dict(loss=loss, lam=LAM, key=key, record_history=False)
 
-    legacy = lambda: tree_dual_solve_reference(tree, X, y, **kw)  # noqa: E731
-    engine = lambda: tree_dual_solve(tree, X, y, **kw)            # noqa: E731
+    legacy = lambda: tree_dual_solve_reference(   # noqa: E731
+        topo.tree, X, y, loss=problem.loss, lam=LAM, key=key,
+        record_history=False)
+
+    # cold path: executor cache emptied -> compile + trace + first run
+    host_mod._EXEC_CACHE.clear()
+    t0 = time.perf_counter()
+    sess = Session.compile(problem, topo)
+    t_compile_py = time.perf_counter() - t0          # plan lowering + bind
+    t0 = time.perf_counter()
+    out = sess.run(key=key, record_history=False)
+    jax.block_until_ready((out.alpha, out.w))
+    t_first_run = time.perf_counter() - t0           # includes XLA compile
+
+    engine = lambda: sess.run(key=key, record_history=False)  # noqa: E731
 
     # warm both paths (compile + trace caches), then time steady-state
-    legacy(); engine()
+    legacy()
     t_legacy = _time(legacy)
     t_engine = _time(engine)
+    t_compile = t_compile_py + (t_first_run - t_engine)
     speedup = t_legacy / t_engine
 
+    results = {
+        "t_legacy_s": t_legacy,
+        "t_engine_s": t_engine,
+        "t_compile_s": t_compile,
+        "t_first_run_s": t_first_run,
+        "speedup": speedup,
+    }
     if verbose:
         print("bench_engine: depth-3, 8-leaf tree "
               f"(m={m}, 40 ticks x H=128), host path")
         print(f"  legacy recursion : {t_legacy * 1e3:9.2f} ms")
-        print(f"  compiled engine  : {t_engine * 1e3:9.2f} ms")
+        print(f"  compiled engine  : {t_engine * 1e3:9.2f} ms  (steady-state)")
+        print(f"  compile overhead : {t_compile * 1e3:9.2f} ms  "
+              "(plan + trace + XLA, first solve only)")
         print(f"  speedup          : {speedup:9.1f}x")
+    with open(BENCH_JSON, "w") as f:
+        json.dump(results, f, indent=2)
+        f.write("\n")
+    if verbose:
+        print(f"  wrote {BENCH_JSON}")
     assert speedup >= 5.0, f"engine speedup {speedup:.1f}x < 5x target"
-    return {"t_legacy": t_legacy, "t_engine": t_engine, "speedup": speedup}
+    return results
 
 
 def main() -> Dict[str, float]:

@@ -13,9 +13,7 @@ from typing import Dict
 import jax
 import numpy as np
 
-from repro.core.dual import LOSSES
-from repro.core.tree import star, two_level
-from repro.core.treedual import tree_dual_solve
+from repro.api import Problem, Schedule, Session, Topology
 from repro.data.synthetic import wine_like
 
 T_LP = 1e-5          # measured-scale per-coordinate-step cost (paper §7)
@@ -26,24 +24,25 @@ LAM = 1e-2
 def run(verbose: bool = True) -> Dict[str, Dict[str, np.ndarray]]:
     X, y = wine_like(m=1536)
     m = X.shape[0]
-    loss = LOSSES["squared"]
+    problem = Problem.ridge(X, y, lam=LAM)
     t_delay = R_DELAY * T_LP
     H = 512  # local steps per round (same compute budget per leaf round)
+    key = jax.random.PRNGKey(0)
 
     # star: 4 workers, each round pays the delayed center hop
-    star_tree = star(4, m // 4, outer_rounds=24, local_steps=H,
-                     t_lp=T_LP, t_cp=3e-5, t_delay=t_delay)
-    res_star = tree_dual_solve(star_tree, X, y, loss=loss, lam=LAM,
-                               key=jax.random.PRNGKey(0))
+    star_topo = Topology.star(4, m // 4, t_lp=T_LP, t_cp=3e-5,
+                              t_delay=t_delay)
+    res_star = Session.compile(
+        problem, star_topo, Schedule(rounds=24, local_steps=H)).run(key=key)
 
     # tree: 2 sub-centers x 2 workers; only the sub-center<->root hop is
     # slow, and each root round amortizes it over `group_rounds` local
     # rounds of intra-group averaging.
-    tree = two_level(2, 2, m // 4, root_rounds=8, group_rounds=3,
-                     local_steps=H, t_lp=T_LP, t_cp=3e-5,
-                     root_delay=t_delay, group_delay=0.0)
-    res_tree = tree_dual_solve(tree, X, y, loss=loss, lam=LAM,
-                               key=jax.random.PRNGKey(0))
+    tree_topo = Topology.two_level(2, 2, m // 4, t_lp=T_LP, t_cp=3e-5,
+                                   root_delay=t_delay, group_delay=0.0)
+    res_tree = Session.compile(
+        problem, tree_topo,
+        Schedule(rounds=8, level_rounds=[3], local_steps=H)).run(key=key)
 
     out = {
         "star": {"time": res_star.times, "gap": res_star.gaps},

@@ -12,10 +12,8 @@ from __future__ import annotations
 from typing import Dict
 
 import jax
-import numpy as np
 
-from repro.core.dual import LOSSES
-from repro.core.treedual import cocoa_star_solve
+from repro.api import Problem, Schedule, Session, Topology
 from repro.data.synthetic import gaussian_regression
 
 T_LP = 4e-5
@@ -29,20 +27,21 @@ def run(verbose: bool = True) -> Dict:
     # paper: A (d x m) = 100 x 600 -> X (m x d) = 600 x 100
     X, y = gaussian_regression(m=600, d=100)
     m = X.shape[0]
-    loss = LOSSES["squared"]
+    problem = Problem.ridge(X, y, lam=LAM)
     out: Dict = {}
     for r in (10, 1e5):
         t_delay = r * T_LP
         budget = T_BUDGET[r]
+        topo = Topology.star(3, m // 3, t_lp=T_LP, t_cp=T_CP,
+                             t_delay=t_delay)
         out[r] = {}
         for H in HS:
             per_round = T_LP * H + t_delay + T_CP
             rounds = max(int(budget / per_round), 1)
             rounds = min(rounds, 4000)  # cap the sim cost
-            res = cocoa_star_solve(
-                X, y, 3, loss=loss, lam=LAM, outer_rounds=rounds,
-                local_steps=H, key=jax.random.PRNGKey(0),
-                t_lp=T_LP, t_cp=T_CP, t_delay=t_delay)
+            res = Session.compile(
+                problem, topo, Schedule(rounds=rounds, local_steps=H)
+            ).run(key=jax.random.PRNGKey(0))
             out[r][H] = {"time": res.times, "gap": res.gaps,
                          "rounds": rounds}
     if verbose:

@@ -5,10 +5,9 @@ trees that localize communication converge faster in wall-clock terms.
     PYTHONPATH=src python examples/svm_tree_network.py
 """
 import jax
+import numpy as np
 
-from repro.core.dual import LOSSES, duality_gap
-from repro.core.tree import star, two_level
-from repro.core.treedual import tree_dual_solve
+from repro.api import Problem, Schedule, Session, Topology
 from repro.data.synthetic import gaussian_classification
 
 LAM = 0.02
@@ -18,27 +17,28 @@ SLOW = 1e5 * T_LP   # root-link delay (paper Fig. 3 regime)
 
 def main():
     X, y = gaussian_classification(m=1024, d=64)
-    loss = LOSSES["smooth_hinge_1"]
+    problem = Problem.svm(X, y, lam=LAM, smoothing=1.0)
     key = jax.random.PRNGKey(1)
 
     topologies = {
-        "star-8 (CoCoA)": star(
-            8, 128, outer_rounds=12, local_steps=384,
-            t_lp=T_LP, t_delay=SLOW),
-        "tree 2x4": two_level(
-            2, 4, 128, root_rounds=6, group_rounds=2, local_steps=384,
-            t_lp=T_LP, root_delay=SLOW, group_delay=1e-4),
-        "tree 4x2": two_level(
-            4, 2, 128, root_rounds=6, group_rounds=2, local_steps=384,
-            t_lp=T_LP, root_delay=SLOW, group_delay=1e-4),
+        "star-8 (CoCoA)": (
+            Topology.star(8, 128, t_lp=T_LP, t_delay=SLOW),
+            Schedule(rounds=12, local_steps=384)),
+        "tree 2x4": (
+            Topology.two_level(2, 4, 128, t_lp=T_LP, root_delay=SLOW,
+                               group_delay=1e-4),
+            Schedule(rounds=6, level_rounds=[2], local_steps=384)),
+        "tree 4x2": (
+            Topology.two_level(4, 2, 128, t_lp=T_LP, root_delay=SLOW,
+                               group_delay=1e-4),
+            Schedule(rounds=6, level_rounds=[2], local_steps=384)),
     }
 
     print(f"{'topology':<16}{'sim-time(s)':>12}{'final gap':>14}"
           f"{'gap @ t=13s':>14}")
-    for name, tree in topologies.items():
-        res = tree_dual_solve(tree, X, y, loss=loss, lam=LAM, key=key)
+    for name, (topo, sched) in topologies.items():
+        res = Session.compile(problem, topo, sched).run(key=key)
         # gap at a common wall-clock budget
-        import numpy as np
         t_common = 13.0
         i = max(int(np.searchsorted(res.times, t_common, "right")) - 1, 0)
         print(f"{name:<16}{res.times[-1]:>12.2f}{res.gaps[-1]:>14.3e}"

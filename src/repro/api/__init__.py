@@ -1,0 +1,31 @@
+"""Declarative, sessionized solver API (the user-facing surface).
+
+Four objects, one flow::
+
+    from repro.api import Problem, Topology, Schedule, Session
+
+    prob  = Problem(X, y, loss="squared", lam=0.05)
+    topo  = Topology.two_level(2, 2, 128, root_delay=1.0, t_lp=1e-5)
+    sched = Schedule.auto(t_total=8.0)          # eq.-(12) delay-aware H
+    sess  = Session.compile(prob, topo, sched, backend="vmap")
+    res   = sess.run()                          # SolveResult
+    more  = sess.run(rounds=5, warm_start=res)  # exact continuation
+
+``Problem`` is the data + loss (by registry name), ``Topology`` the
+serializable tree network, ``Schedule`` the per-level round counts (or
+``rounds="auto"`` to delegate to the paper's eq.-(12) planner), and
+``Session`` the compiled binding with ``backend=`` one of
+``"vmap" | "pallas" | "mesh"``.  :func:`solve` is the one-shot shorthand.
+
+The legacy entry points (``tree_dual_solve``, ``cocoa_star_solve``,
+``mesh_tree_dual_solve``, ``engine.solve``) are thin shims over this
+surface; see ``docs/api.md`` for the migration table.
+"""
+from repro.api.problem import Problem                       # noqa: F401
+from repro.api.schedule import DelayModel, Schedule         # noqa: F401
+from repro.api.session import Session, solve                # noqa: F401
+from repro.api.topology import Topology                     # noqa: F401
+from repro.core.instrument import SolveResult               # noqa: F401
+
+__all__ = ["Problem", "Topology", "Schedule", "DelayModel", "Session",
+           "SolveResult", "solve"]

@@ -1,0 +1,71 @@
+"""The :class:`Problem` object: data + loss + regularization (paper eq. (1)).
+
+A Problem is pure *what*: the (m, d) design matrix, labels, a loss (by name
+via the ``repro.core.dual`` registry, or a :class:`~repro.core.dual.Loss`
+instance), and the ridge parameter lambda.  *Where* it runs is a
+:class:`~repro.api.topology.Topology`, *how* is a
+:class:`~repro.api.schedule.Schedule`; the three meet in
+:class:`~repro.api.session.Session`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dual import Loss, get_loss
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """A regularized loss-minimization instance.
+
+    ``loss`` accepts a registry name (``"squared"``, ``"hinge"``,
+    ``"logistic"``, ``"smooth_hinge_1"``, parametric ``"smooth_hinge_<g>"``)
+    or a :class:`Loss`; it is resolved at construction.
+    """
+    X: Array
+    y: Array
+    loss: Union[Loss, str] = "squared"
+    lam: float = 0.1
+
+    def __post_init__(self):
+        object.__setattr__(self, "X", jnp.asarray(self.X))
+        object.__setattr__(self, "y", jnp.asarray(self.y))
+        object.__setattr__(self, "loss", get_loss(self.loss))
+        if self.X.ndim != 2:
+            raise ValueError(f"X must be (m, d), got shape {self.X.shape}")
+        if self.y.shape != (self.X.shape[0],):
+            raise ValueError(
+                f"y must be ({self.X.shape[0]},), got {self.y.shape}")
+        if not self.lam > 0:
+            raise ValueError(f"lam must be > 0, got {self.lam}")
+
+    @property
+    def m(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.X.shape[1]
+
+    # ---- common instantiations -----------------------------------------
+    @classmethod
+    def ridge(cls, X, y, *, lam: float = 0.1) -> "Problem":
+        return cls(X, y, loss="squared", lam=lam)
+
+    @classmethod
+    def svm(cls, X, y, *, lam: float = 0.1, smoothing: float = 1.0
+            ) -> "Problem":
+        """Smoothed-hinge SVM (``smoothing=0`` selects the non-smooth
+        hinge)."""
+        name = "hinge" if smoothing == 0 else f"smooth_hinge_{smoothing:g}"
+        return cls(X, y, loss=name, lam=lam)
+
+    @classmethod
+    def logistic(cls, X, y, *, lam: float = 0.1) -> "Problem":
+        return cls(X, y, loss="logistic", lam=lam)

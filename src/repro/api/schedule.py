@@ -1,0 +1,163 @@
+"""The :class:`Schedule` object: *how many* rounds at every tree level.
+
+The paper's central knob is the local/global iteration trade-off (eq.
+(9)-(12)): more local steps H amortize a slow link but dilute each
+aggregation.  A Schedule either pins the knob explicitly (``rounds``,
+``level_rounds``, ``local_steps``) or delegates it to the paper's eq.-(12)
+planner with ``rounds="auto"``: at compile time
+``repro.core.delay.plan_hierarchical_h`` is run over the topology's
+link-delay structure (:meth:`Topology.sync_levels`) and picks the
+per-level H, with the root round count set by the :class:`DelayModel`'s
+simulated-time budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Union
+
+from repro.core.delay import plan_hierarchical_h
+from repro.core.tree import TreeNode
+
+from repro.api.topology import Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayModel:
+    """Parameters of the paper's SS6 delay-aware bound (eq. (11)-(12)).
+
+    ``t_total`` is the simulated wall-clock budget the auto-planner
+    optimizes for; ``delta`` defaults to 1/m_leaf (one coordinate's share of
+    a leaf block); ``t_cp`` defaults to the topology's own per-aggregation
+    cost (``Topology.internal_t_cp``); ``h_max`` caps the per-level H
+    search."""
+    t_total: float
+    C: float = 0.5
+    delta: Optional[float] = None
+    t_cp: Optional[float] = None
+    h_max: int = 10**6
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedSchedule:
+    """A Schedule bound to one Topology: concrete per-depth round counts.
+
+    ``chunk_tree`` is the full tree with the root pinned to ONE round --
+    the unit :class:`~repro.api.session.Session` compiles and then iterates
+    ``rounds`` times (warm restarts and streaming fall out of the same
+    program)."""
+    chunk_tree: TreeNode
+    rounds: int                      # default root-round count for run()
+    weighting: str
+    per_round_time: float            # simulated seconds per root round
+    level_plan: Optional[List[dict]]  # eq.-(12) output when rounds="auto"
+
+    @property
+    def full_tree(self) -> TreeNode:
+        """The equivalent monolithic tree (root runs all ``rounds``)."""
+        return dataclasses.replace(self.chunk_tree, rounds=self.rounds)
+
+
+def _apply_rounds(
+    node: TreeNode, depth: int, *,
+    local_steps: Optional[int],
+    rounds_of_depth,  # callable depth -> Optional[int]
+) -> TreeNode:
+    if node.is_leaf:
+        if local_steps is None:
+            return node
+        return dataclasses.replace(node, rounds=local_steps)
+    kids = tuple(
+        _apply_rounds(c, depth + 1, local_steps=local_steps,
+                      rounds_of_depth=rounds_of_depth)
+        for c in node.children)
+    r = rounds_of_depth(depth)
+    return dataclasses.replace(node, children=kids,
+                               rounds=node.rounds if r is None else r)
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Round counts per tree level.
+
+    * ``rounds``: root rounds -- an int, ``None`` (use the topology's
+      default), or ``"auto"`` (eq.-(12) planning; requires ``delay``).
+    * ``level_rounds``: per-internal-depth rounds below the root, top-down
+      (depth 1, 2, ...); ``None`` keeps the topology's defaults.
+    * ``local_steps``: H at the leaves; ``None`` keeps the defaults.
+    * ``weighting``: ``"uniform"`` (paper 1/K) or ``"size"``
+      (|block|-proportional, CoCoA-style).
+    * ``delay``: the :class:`DelayModel` driving ``rounds="auto"``.
+    """
+    rounds: Union[int, str, None] = None
+    local_steps: Optional[int] = None
+    level_rounds: Optional[Sequence[int]] = None
+    weighting: str = "uniform"
+    delay: Optional[DelayModel] = None
+
+    @classmethod
+    def auto(cls, t_total: float, *, C: float = 0.5,
+             delta: Optional[float] = None, t_cp: Optional[float] = None,
+             h_max: int = 10**6, weighting: str = "uniform") -> "Schedule":
+        """Shorthand for ``Schedule(rounds="auto", delay=DelayModel(...))``."""
+        return cls(rounds="auto", weighting=weighting,
+                   delay=DelayModel(t_total=t_total, C=C, delta=delta,
+                                    t_cp=t_cp, h_max=h_max))
+
+    # -----------------------------------------------------------------
+    def resolve(self, topology: Topology) -> ResolvedSchedule:
+        """Bind to ``topology``: produce concrete per-depth round counts."""
+        if self.rounds == "auto":
+            return self._resolve_auto(topology)
+        if isinstance(self.rounds, str):
+            raise ValueError(
+                f"rounds must be an int, None, or 'auto'; got {self.rounds!r}")
+
+        level = dict(enumerate(self.level_rounds or (), start=1))
+        tree = _apply_rounds(
+            topology.tree, 0, local_steps=self.local_steps,
+            rounds_of_depth=lambda d: None if d == 0 else level.get(d))
+        rounds = topology.tree.rounds if self.rounds is None else \
+            int(self.rounds)
+        if rounds < 0:
+            raise ValueError(f"rounds must be >= 0, got {rounds}")
+        chunk = dataclasses.replace(tree, rounds=1)
+        return ResolvedSchedule(
+            chunk_tree=chunk, rounds=rounds, weighting=self.weighting,
+            per_round_time=chunk.solve_time(), level_plan=None)
+
+    def _resolve_auto(self, topology: Topology) -> ResolvedSchedule:
+        if self.delay is None:
+            raise ValueError(
+                "Schedule(rounds='auto') needs delay=DelayModel(t_total=...)")
+        if self.local_steps is not None or self.level_rounds is not None:
+            raise ValueError(
+                "rounds='auto' plans local_steps/level_rounds itself; "
+                "don't pass them explicitly")
+        dm = self.delay
+        levels = topology.sync_levels()      # innermost first, length D
+        t_lp = topology.leaf_t_lp()
+        if not t_lp > 0:
+            raise ValueError(
+                "rounds='auto' needs leaf t_lp > 0 (the delay trade-off is "
+                "meaningless with free local iterations)")
+        m_leaf = topology.tree.leaves()[0].data_size
+        delta = dm.delta if dm.delta is not None else 1.0 / m_leaf
+        t_cp = dm.t_cp if dm.t_cp is not None else topology.internal_t_cp()
+        lp = plan_hierarchical_h(
+            levels, C=dm.C, delta=delta, t_total=dm.t_total, t_lp=t_lp,
+            t_cp=t_cp, h_max=dm.h_max)
+
+        D = len(levels)
+        # lp[0] plans the leaves' H; lp[i] (i >= 1) plans how many rounds of
+        # the level below one sync at internal depth D-1-i amortizes; the
+        # root's own count comes from the time budget.
+        local_steps = int(lp[0]["H"])
+        rounds_of = {D - i: int(lp[i]["H"]) for i in range(1, D)}
+        tree = _apply_rounds(
+            topology.tree, 0, local_steps=local_steps,
+            rounds_of_depth=lambda d: None if d == 0 else rounds_of.get(d))
+        root_rounds = max(1, int(dm.t_total / lp[-1]["round_time"]))
+        chunk = dataclasses.replace(tree, rounds=1)
+        return ResolvedSchedule(
+            chunk_tree=chunk, rounds=root_rounds, weighting=self.weighting,
+            per_round_time=chunk.solve_time(), level_plan=lp)

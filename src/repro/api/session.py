@@ -1,0 +1,278 @@
+"""The :class:`Session` object: Problem x Topology x Schedule -> executor.
+
+``Session.compile`` lowers the topology once (the chunk plan: the full tree
+with the root pinned to one round), fetches the memoized executor for the
+chosen backend, and validates everything up front.  ``Session.run`` then
+iterates that one compiled program:
+
+  * any number of root rounds without re-tracing,
+  * warm restarts (``warm_start=`` a previous result or an ``(alpha, w)``
+    pair) that bit-reproduce one longer run when continued with the
+    returned ``next_key``,
+  * streamed history (``on_round=`` fires after every root round, not just
+    at the end).
+
+All three backends sit behind ``backend=``: ``"vmap"`` (host XLA),
+``"pallas"`` (blocked-SDCA leaf kernel), ``"mesh"`` (``shard_map`` device
+program; level-homogeneous topologies).  Chunking is exact, not
+approximate: every root round ends with a root sync that refreshes every
+snapshot, so (state, RNG-chain) is a complete carry and the chunked
+iterates are bit-identical to the monolithic program's.
+"""
+from __future__ import annotations
+
+import functools
+from math import prod
+from typing import Callable, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dual as dual_mod
+from repro.core.engine import host as host_mod
+from repro.core.engine import mesh as mesh_mod
+from repro.core.engine import plan as plan_mod
+from repro.core.instrument import SolveResult, record_round
+from repro.api.problem import Problem
+from repro.api.schedule import ResolvedSchedule, Schedule
+from repro.api.topology import Topology
+
+Array = jax.Array
+
+BACKENDS = ("vmap", "pallas", "mesh")
+
+
+@functools.partial(jax.jit, static_argnames=("loss", "lam"))
+def _objective(alpha: Array, X: Array, y: Array, loss, lam):
+    w = dual_mod.w_of_alpha(alpha, X, lam)
+    return (dual_mod.dual_value(alpha, X, y, loss, lam),
+            dual_mod.primal_value(w, X, y, loss, lam))
+
+
+class Session:
+    """A compiled (problem, topology, schedule, backend) binding.
+
+    Construct with :meth:`compile`; executors are memoized at the engine
+    layer (plan fingerprint x loss x lambda x flags), so compiling the same
+    configuration twice reuses one jit program -- see :meth:`cache_stats`.
+    """
+
+    def __init__(self, problem: Problem, topology: Topology,
+                 resolved: ResolvedSchedule, backend: str, plan, fn,
+                 mesh=None, mesh_axes=None):
+        self.problem = problem
+        self.topology = topology
+        self.resolved = resolved
+        self.backend = backend
+        self.plan = plan
+        self._fn = fn
+        self._mesh = mesh
+        self._mesh_axes = mesh_axes
+        if backend == "mesh":
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            spec = P(tuple(reversed(mesh_axes)))
+            sh = NamedSharding(mesh, spec)
+            n, m_b = plan.n_leaves, plan.m_b
+            self._spec_sharding = sh
+            self._Xs = jax.device_put(
+                problem.X.reshape(n, m_b, problem.d), sh)
+            self._ys = jax.device_put(problem.y.reshape(n, m_b), sh)
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def compile(
+        cls,
+        problem: Problem,
+        topology: Topology,
+        schedule: Optional[Schedule] = None,
+        *,
+        backend: str = "vmap",
+        mesh=None,
+        mesh_axes: Optional[Sequence[str]] = None,
+        mesh_use_kernel: bool = True,
+    ) -> "Session":
+        """Lower ``topology`` under ``schedule`` and bind the ``backend``
+        executor.  ``mesh``/``mesh_axes`` (axes innermost-first, as in
+        ``engine.mesh``) and ``mesh_use_kernel`` (Pallas vs pure-jnp leaf
+        solver) apply to ``backend="mesh"`` only; when the mesh is omitted,
+        one matching the plan's per-depth fan-outs is built from the
+        available devices."""
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; use {BACKENDS}")
+        schedule = schedule or Schedule()
+        resolved = schedule.resolve(topology)
+        if problem.m != topology.m_total:
+            raise ValueError(
+                f"problem has m={problem.m} examples but the topology "
+                f"assigns {topology.m_total}")
+        plan = plan_mod.compile_tree(resolved.chunk_tree,
+                                     weighting=resolved.weighting)
+
+        if backend in ("vmap", "pallas"):
+            fn = host_mod.get_host_executor(
+                plan, loss=problem.loss, lam=problem.lam,
+                record_history=False, backend=backend)
+            return cls(problem, topology, resolved, backend, plan, fn)
+
+        # ---- mesh backend -------------------------------------------
+        if plan.levels is None:
+            raise ValueError(
+                "backend='mesh' needs a level-homogeneous topology "
+                "(uniform per-depth fan-out/rounds, congruent leaves)")
+        if resolved.weighting != "uniform":
+            raise ValueError("backend='mesh' supports weighting='uniform'")
+        D = plan.depth
+        if mesh is None:
+            sizes = [plan.levels[d].group_size for d in range(D)]  # top-down
+            names = tuple(f"lvl{d}" for d in range(D))
+            need = prod(sizes)
+            have = len(jax.devices())
+            if have < need:
+                raise RuntimeError(
+                    f"backend='mesh' needs {need} devices for fan-outs "
+                    f"{sizes}, have {have} (set "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=N on "
+                    "CPU, or pass mesh=)")
+            mesh = jax.make_mesh(tuple(sizes), names,
+                                 devices=jax.devices()[:need])
+            mesh_axes = tuple(reversed(names))       # innermost first
+        elif mesh_axes is None:
+            raise ValueError("pass mesh_axes (innermost level first) "
+                             "together with an explicit mesh")
+        fn = mesh_mod.get_mesh_executor(
+            plan, mesh, axes=tuple(mesh_axes), loss=problem.loss,
+            lam=problem.lam, use_kernel=mesh_use_kernel)
+        return cls(problem, topology, resolved, backend, plan, fn,
+                   mesh=mesh, mesh_axes=tuple(mesh_axes))
+
+    # ------------------------------------------------------------------
+    @property
+    def level_plan(self):
+        """The eq.-(12) planner output when the schedule was ``"auto"``."""
+        return self.resolved.level_plan
+
+    @property
+    def default_rounds(self) -> int:
+        return self.resolved.rounds
+
+    @staticmethod
+    def cache_stats() -> dict:
+        """Engine-layer executor-cache counters (hits/misses/size)."""
+        return host_mod.executor_cache_stats()
+
+    # ------------------------------------------------------------------
+    def run(
+        self,
+        rounds: Optional[int] = None,
+        *,
+        key: Optional[Array] = None,
+        warm_start: Union[SolveResult, Tuple[Array, Array], None] = None,
+        record_history: bool = True,
+        on_round: Optional[Callable[[dict], None]] = None,
+    ) -> SolveResult:
+        """Run ``rounds`` root rounds (default: the schedule's).
+
+        ``warm_start`` continues from a previous state; passing the previous
+        :class:`SolveResult` also continues its RNG chain (``next_key``)
+        unless ``key`` overrides it, making split runs bit-identical to one
+        long run.  ``on_round(entry)`` streams each history entry as it is
+        produced (requires ``record_history=True``)."""
+        T = self.resolved.rounds if rounds is None else int(rounds)
+        if T < 0:
+            raise ValueError(f"rounds must be >= 0, got {T}")
+        X, y = self.problem.X, self.problem.y
+        loss, lam = self.problem.loss, self.problem.lam
+        m = self.problem.m
+
+        alpha, w, k = self._start_state(warm_start, key)
+        K_root = len(self.resolved.chunk_tree.children)
+        chunk_tree, plan = self.resolved.chunk_tree, self.plan
+        dt = self.resolved.per_round_time
+
+        mesh = self.backend == "mesh"
+        if mesh:
+            a_carry = jnp.asarray(alpha, X.dtype).reshape(
+                plan.n_leaves, plan.m_b)
+        else:
+            a_carry = jnp.asarray(alpha, X.dtype)
+        w = jnp.asarray(w, X.dtype)
+
+        history: list = []
+
+        def record(t: int, a_flat: Array):
+            if not record_history:
+                return
+            dv, pv = _objective(a_flat, X, y, loss, float(lam))
+            record_round(history, t, t * dt, float(dv), float(pv))
+            if on_round is not None:
+                on_round(history[-1])
+
+        # all rounds' keys in one walk of the equivalent monolithic tree
+        # (the legacy chain), so the chunk loop does no host RNG work
+        keys_all = plan_mod.chunked_key_plan(chunk_tree, plan, k, T)
+        record(0, a_carry.reshape(m) if mesh else a_carry)
+        for t in range(1, T + 1):
+            keys = keys_all[t - 1]
+            if mesh:
+                kys = jax.device_put(
+                    jnp.asarray(keys.transpose(1, 0, 2)),
+                    self._spec_sharding)
+                a_carry, wrows = self._fn(self._Xs, self._ys, a_carry, w,
+                                          kys)
+                w = wrows[0]
+                record(t, a_carry.reshape(m))
+            else:
+                a_carry, w = self._fn(X, y, jnp.asarray(keys), a_carry, w)
+                record(t, a_carry)
+        k = plan_mod.advance_root_key(k, T, K_root)
+
+        alpha_out = a_carry.reshape(m) if mesh else a_carry
+        return SolveResult(alpha=alpha_out, w=w, history=history, next_key=k)
+
+    # ------------------------------------------------------------------
+    def _start_state(self, warm_start, key):
+        X = self.problem.X
+        k = None if key is None else plan_mod._raw_key(key)
+        if warm_start is None:
+            alpha = jnp.zeros((self.problem.m,), X.dtype)
+            w = jnp.zeros((self.problem.d,), X.dtype)
+        elif isinstance(warm_start, SolveResult):
+            alpha, w = warm_start.alpha, warm_start.w
+            if k is None and warm_start.next_key is not None:
+                k = plan_mod._raw_key(warm_start.next_key)
+        else:
+            alpha, w = warm_start
+        if k is None:
+            k = plan_mod._raw_key(jax.random.PRNGKey(0))
+        alpha = jnp.asarray(alpha)
+        w = jnp.asarray(w)
+        if alpha.shape != (self.problem.m,):
+            raise ValueError(
+                f"warm-start alpha must be ({self.problem.m},), got "
+                f"{alpha.shape}")
+        if w.shape != (self.problem.d,):
+            raise ValueError(
+                f"warm-start w must be ({self.problem.d},), got {w.shape}")
+        return alpha, w, k
+
+
+def solve(
+    problem: Problem,
+    topology: Topology,
+    schedule: Optional[Schedule] = None,
+    *,
+    backend: str = "vmap",
+    key: Optional[Array] = None,
+    rounds: Optional[int] = None,
+    record_history: bool = True,
+    mesh=None,
+    mesh_axes: Optional[Sequence[str]] = None,
+    mesh_use_kernel: bool = True,
+    on_round: Optional[Callable[[dict], None]] = None,
+) -> SolveResult:
+    """One-shot convenience: ``Session.compile(...).run(...)``."""
+    sess = Session.compile(problem, topology, schedule, backend=backend,
+                           mesh=mesh, mesh_axes=mesh_axes,
+                           mesh_use_kernel=mesh_use_kernel)
+    return sess.run(rounds, key=key, record_history=record_history,
+                    on_round=on_round)

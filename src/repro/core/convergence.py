@@ -15,7 +15,7 @@ E[D* - D^(R)] <= Theta_root * (D* - D^(0)).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, Sequence
 
 import numpy as np
 

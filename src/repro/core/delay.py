@@ -133,6 +133,20 @@ class SyncLevel:
         return ring_allreduce_delay(self.link, self.msg_bytes, self.group_size)
 
 
+@dataclasses.dataclass(frozen=True)
+class FixedLevel:
+    """A sync level with an explicitly-given per-round delay (seconds), as
+    carried by ``TreeNode.up_delay`` -- interchangeable with
+    :class:`SyncLevel` wherever only ``group_size``/``round_delay`` are used
+    (``plan_hierarchical_h``)."""
+    name: str
+    group_size: int
+    delay_s: float
+
+    def round_delay(self) -> float:
+        return self.delay_s
+
+
 def plan_hierarchical_h(
     levels: Sequence[SyncLevel],
     *,

@@ -156,6 +156,35 @@ logistic = Loss("logistic", _log_value, _log_conj_neg, _log_coord_delta, gamma=0
 LOSSES = {l.name: l for l in (squared, hinge, smooth_hinge, logistic)}
 
 
+def register_loss(loss: Loss) -> Loss:
+    """Add ``loss`` to the by-name registry (idempotent for equal names)."""
+    LOSSES[loss.name] = loss
+    return loss
+
+
+def get_loss(loss) -> Loss:
+    """Resolve a loss from a :class:`Loss` instance or a registry name.
+
+    Names are the registry keys (``squared``, ``hinge``, ``logistic``,
+    ``smooth_hinge_1``); the parametric family ``smooth_hinge_<g>`` is
+    constructed (and registered) on demand, e.g. ``smooth_hinge_0.5``.
+    """
+    if isinstance(loss, Loss):
+        return loss
+    if not isinstance(loss, str):
+        raise TypeError(f"loss must be a Loss or a name, got {type(loss)}")
+    if loss in LOSSES:
+        return LOSSES[loss]
+    if loss.startswith("smooth_hinge_"):
+        g = float(loss[len("smooth_hinge_"):])
+        if g <= 0:
+            raise ValueError(f"smooth_hinge smoothing must be > 0, got {g}")
+        return register_loss(_make_smooth_hinge(g))
+    raise KeyError(
+        f"unknown loss {loss!r}; registered: {sorted(LOSSES)} "
+        "(or parametric 'smooth_hinge_<g>')")
+
+
 # -----------------------------------------------------------------------------
 # Objectives
 # -----------------------------------------------------------------------------

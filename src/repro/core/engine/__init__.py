@@ -7,7 +7,7 @@ imbalanced, heterogeneous per-node rounds) as a single compiled program:
     plan  = compile_tree(tree)          # flat static schedule (the IR)
     keys  = key_plan(tree, plan, key)   # legacy-RNG per-solve key replay
     run   = get_host_executor(plan, ...)  # ONE jit'd lax.scan
-    alpha, w, duals, primals = run(X, y, keys)
+    alpha, w[, duals, primals] = run(X, y, keys, alpha0, w0)
 
 Backends:
   * ``backend="vmap"``   -- host/XLA: batched leaf solves via vmapped
@@ -27,16 +27,15 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-import numpy as np
 
 from repro.core.dual import Loss
-from repro.core.engine.host import execute_plan, get_host_executor  # noqa: F401
+from repro.core.engine.host import (  # noqa: F401
+    execute_plan, executor_cache_stats, get_host_executor)
 from repro.core.engine.plan import (  # noqa: F401
     LevelSpec, TreePlan, balanced_tree, compile_tree, index_plan, key_plan,
     tree_from_level_plan,
 )
-from repro.core.instrument import (SolveResult, history_from_series,
-                                   round_times)
+from repro.core.instrument import SolveResult
 from repro.core.tree import TreeNode
 
 Array = jax.Array
@@ -54,23 +53,16 @@ def solve(
     backend: str = "vmap",
     weighting: str = "uniform",
 ) -> SolveResult:
-    """Algorithm 3 at the root of ``tree``, compiled: one jit/scan program."""
+    """Algorithm 3 at the root of ``tree`` -- a shim over the sessionized
+    surface (``repro.api``): the tree runs as per-root-round chunks of one
+    compiled program, which is also what every other entry point lowers
+    to."""
+    from repro import api  # local import: api is layered above the engine
     m = X.shape[0]
     assert tree.total_data() == m, (
         f"tree data sizes {tree.total_data()} != m={m}")
-    plan = compile_tree(tree, weighting=weighting)
-    keys = key_plan(tree, plan, key)
-    fn = get_host_executor(plan, loss=loss, lam=lam,
-                           record_history=record_history, backend=backend)
-    out = fn(X, y, keys)
-    if not record_history:
-        alpha, w = out
-        return SolveResult(alpha=alpha, w=w, history=[])
-    alpha, w, duals, primals = out
-    duals = np.asarray(duals)
-    primals = np.asarray(primals)
-    # duals[0] is the start-of-run record; entries 1.. align with ticks and
-    # carry NaN except at root-sync ticks.
-    sel = np.concatenate([[True], plan.root_sync])
-    history = history_from_series(round_times(tree), duals[sel], primals[sel])
-    return SolveResult(alpha=alpha, w=w, history=history)
+    return api.solve(
+        api.Problem(X, y, loss=loss, lam=lam),
+        api.Topology.from_tree(tree),
+        api.Schedule(weighting=weighting),
+        backend=backend, key=key, record_history=record_history)

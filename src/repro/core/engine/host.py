@@ -33,6 +33,12 @@ Array = jax.Array
 # because sweeps (fig4/fig5-style) generate a fresh plan per configuration.
 _EXEC_CACHE: OrderedDict = OrderedDict()
 _EXEC_CACHE_MAX = 32
+_EXEC_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def executor_cache_stats() -> dict:
+    """Cumulative executor-cache counters: {hits, misses, size}."""
+    return dict(_EXEC_CACHE_STATS, size=len(_EXEC_CACHE))
 
 
 def get_host_executor(
@@ -45,11 +51,12 @@ def get_host_executor(
 ):
     """Build (or fetch from cache) the jitted executor for ``plan``.
 
-    The executor has signature ``fn(X, y, keys) -> (alpha, w[, duals,
-    primals])`` with ``keys`` the (S, n, 2) per-solve key plan
-    (``plan.key_plan``); coordinate draws happen inside the compiled
-    program.  The executor is specialized to the plan structure but
-    re-usable across keys/data of the same shape."""
+    The executor has signature ``fn(X, y, keys, alpha0, w0) -> (alpha,
+    w[, duals, primals])`` with ``keys`` the (S, n, 2) per-solve key plan
+    (``plan.key_plan``) and ``(alpha0, w0)`` the flat (m,) / (d,) warm-start
+    state (zeros for a cold start); coordinate draws happen inside the
+    compiled program.  The executor is specialized to the plan structure but
+    re-usable across keys/data/start-state of the same shape."""
     if backend not in ("vmap", "pallas"):
         raise ValueError(f"unknown backend {backend!r} (use 'vmap' or "
                          "'pallas'; the mesh backend is engine.mesh)")
@@ -59,6 +66,7 @@ def get_host_executor(
                  bool(record_history), backend)
     fn = _EXEC_CACHE.get(cache_key)
     if fn is None:
+        _EXEC_CACHE_STATS["misses"] += 1
         fn = _build_host_executor(plan, loss=loss, lam=lam,
                                   record_history=record_history,
                                   backend=backend)
@@ -66,6 +74,7 @@ def get_host_executor(
         while len(_EXEC_CACHE) > _EXEC_CACHE_MAX:
             _EXEC_CACHE.popitem(last=False)
     else:
+        _EXEC_CACHE_STATS["hits"] += 1
         _EXEC_CACHE.move_to_end(cache_key)
     return fn
 
@@ -113,7 +122,7 @@ def _build_host_executor(plan: TreePlan, *, loss, lam, record_history,
     else:
         from repro.kernels.sdca.ref import sdca_block_ref
 
-    def solve_fn(X: Array, y: Array, keys: Array):
+    def solve_fn(X: Array, y: Array, keys: Array, alpha0: Array, w0_in: Array):
         dtype = X.dtype
         vmask = valid_f.astype(dtype)
         Xb = X[gather_idx] * vmask[:, :, None]                # (n, m_b, d)
@@ -179,10 +188,13 @@ def _build_host_executor(plan: TreePlan, *, loss, lam, record_history,
                 out = None
             return (a, w, snapA, snapW), out
 
-        a0 = jnp.zeros((n, m_b), dtype)
-        w0 = jnp.zeros((n, d_feat), dtype)
-        carry0 = (a0, w0, jnp.zeros((D, n, m_b), dtype),
-                  jnp.zeros((D, n, d_feat), dtype))
+        # blocked warm-start state; snapshots start at the run-start state
+        # (for a cold start that is all-zeros, the pre-warm-start behavior)
+        a0 = jnp.zeros((n * m_b,), dtype).at[flat_map].set(
+            alpha0.astype(dtype)).reshape(n, m_b)
+        w0 = jnp.broadcast_to(w0_in.astype(dtype)[None], (n, d_feat))
+        carry0 = (a0, w0, jnp.broadcast_to(a0[None], (D, n, m_b)),
+                  jnp.broadcast_to(w0[None], (D, n, d_feat)))
         xs = (keys, solve_mask.astype(dtype), sync_mask.astype(dtype),
               refresh_mask.astype(dtype), root_sync)
         (a, w, _, _), hist = jax.lax.scan(tick, carry0, xs)
@@ -207,9 +219,16 @@ def execute_plan(
     lam: float,
     record_history: bool = True,
     backend: str = "vmap",
+    alpha0: Array = None,
+    w0: Array = None,
 ) -> Tuple:
     """Convenience: build/fetch the executor and run it once (``keys`` is
-    the (S, n, 2) per-solve key plan from ``plan.key_plan``)."""
+    the (S, n, 2) per-solve key plan from ``plan.key_plan``; ``alpha0``/
+    ``w0`` warm-start the run, defaulting to the cold all-zeros state)."""
     fn = get_host_executor(plan, loss=loss, lam=lam,
                            record_history=record_history, backend=backend)
-    return fn(X, y, jnp.asarray(keys))
+    if alpha0 is None:
+        alpha0 = jnp.zeros((plan.m_total,), X.dtype)
+    if w0 is None:
+        w0 = jnp.zeros((X.shape[1],), X.dtype)
+    return fn(X, y, jnp.asarray(keys), alpha0, w0)

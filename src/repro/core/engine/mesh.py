@@ -11,10 +11,16 @@ congruent), the flat tick schedule factors back into nested ``fori_loop``s
 with one ``psum`` per sync -- the natural lowering on a device mesh, and
 bit-compatible with the host backend because both consume the same
 per-solve key plan (the legacy-RNG replay from ``engine.plan``).
+
+Like the host backend, the compiled program is memoized on
+(plan fingerprint, mesh, axes, loss, lam, flags) and takes the warm-start
+state ``(alpha0, w0)`` as inputs, so ``repro.api.Session`` can run it in
+per-root-round chunks without retracing.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from collections import OrderedDict
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,21 +33,11 @@ from repro.core.tree import TreeNode
 
 Array = jax.Array
 
+_MESH_EXEC_CACHE: OrderedDict = OrderedDict()
+_MESH_EXEC_CACHE_MAX = 16
 
-def execute_plan_mesh(
-    plan: TreePlan,
-    tree: TreeNode,
-    X: Array,
-    y: Array,
-    mesh: Mesh,
-    *,
-    axes: Sequence[str],
-    loss: Loss,
-    lam: float,
-    key=None,
-    use_kernel: bool = True,
-) -> Tuple[Array, Array]:
-    """Run the plan on ``mesh``; returns (alpha (m,), w (d,))."""
+
+def _check_plan_mesh(plan: TreePlan, mesh: Mesh, axes: Sequence[str]):
     assert plan.levels is not None, (
         "the mesh backend needs a level-homogeneous plan (balanced tree, "
         "uniform per-depth rounds); use the host backend otherwise")
@@ -54,22 +50,41 @@ def execute_plan_mesh(
         assert plan.levels[d].group_size == sizes[L - 1 - d], (
             f"depth {d} fan-out {plan.levels[d].group_size} != mesh axis "
             f"{axes[L - 1 - d]} size {sizes[L - 1 - d]}")
-    n, m_b = plan.n_leaves, plan.m_b
-    m, d_feat = X.shape
-    assert int(plan.leaf_sizes.min()) == m_b, "mesh backend needs equal blocks"
-    assert n * m_b == m, (n, m_b, m)
-    lm = lam * m
+    assert int(plan.leaf_sizes.min()) == plan.m_b, \
+        "mesh backend needs equal blocks"
 
-    keys = key_plan(tree, plan, key)                        # (S, n, 2)
-    keys_leaf = jnp.asarray(keys.transpose(1, 0, 2))        # (n, S, 2)
+
+def get_mesh_executor(
+    plan: TreePlan,
+    mesh: Mesh,
+    *,
+    axes: Sequence[str],
+    loss: Loss,
+    lam: float,
+    use_kernel: bool = True,
+):
+    """Build (or fetch from cache) the jitted ``shard_map`` program for
+    ``plan`` on ``mesh``.
+
+    Signature: ``fn(Xs, ys, a0, w0, kys) -> (alpha_blocked, w_rows)`` with
+    ``Xs (n, m_b, d)``, ``a0 (n, m_b)`` sharded over the (reversed) axes,
+    ``w0 (d,)`` replicated, and ``kys (n, S, 2)`` the leaf-major per-solve
+    key plan."""
+    _check_plan_mesh(plan, mesh, axes)
+    cache_key = (plan.fingerprint, loss.name, loss.gamma, float(lam),
+                 tuple(axes), mesh, bool(use_kernel))
+    fn = _MESH_EXEC_CACHE.get(cache_key)
+    if fn is not None:
+        _MESH_EXEC_CACHE.move_to_end(cache_key)
+        return fn
+
+    L = len(axes)
+    m_b = plan.m_b
+    lm = lam * plan.m_total
     rounds = [plan.levels[d].rounds for d in range(L)]
     ks = [plan.levels[d].group_size for d in range(L)]
     axis_of_depth = [axes[L - 1 - d] for d in range(L)]
     H = plan.h_max
-
-    Xb = X.reshape(n, m_b, d_feat)
-    yb = y.reshape(n, m_b)
-    spec_in = P(tuple(reversed(axes)))
 
     def leaf_solve(Xs, ys, a, w, k_t):
         """One Procedure-P call on this shard's (1, m_b) block, drawing the
@@ -84,9 +99,9 @@ def execute_plan_mesh(
             da, dw = sdca_block_ref(Xs, ys, a, w, ix, loss=loss, lm=lm)
         return da, dw[0]
 
-    def program(Xs, ys, a0, kys):
-        # Xs (1, m_b, d), a0 (1, m_b), kys (1, S, 2) on this shard
-        w0 = jnp.zeros((d_feat,), X.dtype)
+    def program(Xs, ys, a0, w0, kys):
+        # Xs (1, m_b, d), a0 (1, m_b), w0 (d,), kys (1, S, 2) on this shard
+        d_feat = Xs.shape[-1]
 
         def run(depth, a, w, t):
             """One full solve of a depth-`depth` node: rounds[depth] rounds,
@@ -112,17 +127,54 @@ def execute_plan_mesh(
         a_end, w_end, _ = run(0, a0, w0, jnp.int32(0))
         return a_end, jnp.broadcast_to(w_end[None], (1, d_feat))
 
-    program = shard_map(
+    spec_in = P(tuple(reversed(axes)))
+    fn = jax.jit(shard_map(
         program, mesh=mesh,
-        in_specs=(spec_in, spec_in, spec_in, spec_in),
+        in_specs=(spec_in, spec_in, spec_in, P(), spec_in),
         out_specs=(spec_in, spec_in),
-    )
+    ))
+    _MESH_EXEC_CACHE[cache_key] = fn
+    while len(_MESH_EXEC_CACHE) > _MESH_EXEC_CACHE_MAX:
+        _MESH_EXEC_CACHE.popitem(last=False)
+    return fn
 
-    a0 = jnp.zeros((n, m_b), X.dtype)
-    Xs = jax.device_put(Xb, NamedSharding(mesh, spec_in))
-    ys = jax.device_put(yb, NamedSharding(mesh, spec_in))
+
+def execute_plan_mesh(
+    plan: TreePlan,
+    tree: TreeNode,
+    X: Array,
+    y: Array,
+    mesh: Mesh,
+    *,
+    axes: Sequence[str],
+    loss: Loss,
+    lam: float,
+    key=None,
+    use_kernel: bool = True,
+    alpha0: Array = None,
+    w0: Array = None,
+) -> Tuple[Array, Array]:
+    """Run the plan on ``mesh``; returns (alpha (m,), w (d,)).  ``alpha0``/
+    ``w0`` warm-start the run (cold all-zeros by default)."""
+    _check_plan_mesh(plan, mesh, axes)
+    n, m_b = plan.n_leaves, plan.m_b
+    m, d_feat = X.shape
+    assert n * m_b == m, (n, m_b, m)
+
+    fn = get_mesh_executor(plan, mesh, axes=axes, loss=loss, lam=lam,
+                           use_kernel=use_kernel)
+    keys = key_plan(tree, plan, key)                        # (S, n, 2)
+    keys_leaf = jnp.asarray(keys.transpose(1, 0, 2))        # (n, S, 2)
+
+    a0 = jnp.zeros((n, m_b), X.dtype) if alpha0 is None else \
+        jnp.asarray(alpha0, X.dtype).reshape(n, m_b)
+    w_start = jnp.zeros((d_feat,), X.dtype) if w0 is None else \
+        jnp.asarray(w0, X.dtype)
+    spec_in = P(tuple(reversed(axes)))
+    Xs = jax.device_put(X.reshape(n, m_b, d_feat), NamedSharding(mesh, spec_in))
+    ys = jax.device_put(y.reshape(n, m_b), NamedSharding(mesh, spec_in))
     kys = jax.device_put(keys_leaf, NamedSharding(mesh, spec_in))
-    alpha, w = jax.jit(program)(Xs, ys, a0, kys)
+    alpha, w = fn(Xs, ys, a0, w_start, kys)
     return alpha.reshape(m), w[0]
 
 

@@ -330,6 +330,52 @@ def key_plan(tree: TreeNode, plan: TreePlan, key=None) -> np.ndarray:
     return keys
 
 
+def chunked_key_plan(chunk_tree: TreeNode, plan: TreePlan, key,
+                     rounds: int) -> np.ndarray:
+    """The per-solve key arrays for ``rounds`` consecutive root rounds of
+    ``chunk_tree`` (whose root runs ONE round; ``plan`` is its compiled
+    plan), derived in a single walk of the equivalent monolithic tree --
+    exactly the keys a root-rounds=``rounds`` solve would use, shaped
+    ``(rounds, S_chunk, n, 2)`` so chunked executors index round ``t`` as
+    ``keys[t]``.  This keeps the per-round driver loop free of host-side
+    RNG re-derivation."""
+    assert chunk_tree.rounds == 1, chunk_tree.rounds
+    if rounds == 0:
+        return np.zeros((0, plan.n_ticks, plan.n_leaves, 2), np.uint32)
+    full = dataclasses.replace(chunk_tree, rounds=rounds)
+    key = jax.random.PRNGKey(0) if key is None else _raw_key(key)
+    leaf_of_path: Dict[tuple, int] = {}
+    counter = [0]
+
+    def index(node, path):
+        if node.is_leaf:
+            leaf_of_path[path] = counter[0]
+            counter[0] += 1
+            return
+        for ci, c in enumerate(node.children):
+            index(c, path + (ci,))
+    index(full, ())
+
+    keys = np.zeros((rounds * plan.n_ticks, plan.n_leaves, 2), np.uint32)
+
+    def on_solve(tick, path, k):
+        keys[tick, leaf_of_path[path]] = np.asarray(k)
+
+    _walk(full, key, on_solve, lambda *a: None)
+    return keys.reshape(rounds, plan.n_ticks, plan.n_leaves, 2)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def advance_root_key(key, rounds: int, K: int):
+    """The root RNG-chain state after ``rounds`` rounds of a K-child root
+    (each round consumes ``key, *_ = jax.random.split(key, 1 + K)``), in
+    one dispatch."""
+    def step(k, _):
+        return jax.random.split(k, 1 + K)[0], None
+    k_end, _ = jax.lax.scan(step, key, None, length=rounds)
+    return k_end
+
+
 @functools.partial(jax.jit, static_argnums=(1, 2))
 def _batched_randint(keys, H: int, m_b: int):
     return jax.vmap(lambda k: jax.random.randint(k, (H,), 0, m_b))(keys)

@@ -23,10 +23,15 @@ Array = jax.Array
 
 @dataclasses.dataclass
 class SolveResult:
-    """A solver run: final iterates + per-root-round instrumentation."""
+    """A solver run: final iterates + per-root-round instrumentation.
+
+    ``next_key`` (set by ``repro.api.Session.run``) is the root RNG chain
+    state after the run, so a warm-restarted continuation reproduces the
+    exact iterates of one longer run."""
     alpha: Array
     w: Array
     history: List[dict]  # per root round: round, time, dual, primal, gap
+    next_key: Array = None
 
     @property
     def times(self) -> np.ndarray:

@@ -13,7 +13,7 @@ whose sizes are given by ``data_size`` (leaf-only).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,10 +1,15 @@
 """TreeDualMethod (paper Algorithms 1-3): distributed dual coordinate ascent
 over an arbitrary tree network.
 
-:func:`tree_dual_solve` is a thin wrapper over the unified tree-schedule
-engine (``repro.core.engine``): the tree is lowered to a flat static plan
-and the whole nested recursion runs as ONE jit-compiled ``lax.scan``
-program (see ``docs/architecture.md``).
+:func:`tree_dual_solve` and :func:`cocoa_star_solve` are DEPRECATED thin
+shims over the sessionized API (``repro.api``): prefer
+
+    Session.compile(Problem(X, y, loss=..., lam=...),
+                    Topology.from_tree(tree)).run(key=...)
+
+which exposes the same compiled engine plus warm restarts, streamed
+history, and the ``rounds="auto"`` delay planner (``docs/api.md`` has the
+migration table).
 
 The original host-side Python recursion is retained verbatim as
 :func:`tree_dual_solve_reference` -- it is the cross-check oracle in the
@@ -24,6 +29,7 @@ history using the tree's delay model (``repro.core.instrument``).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -51,12 +57,18 @@ def tree_dual_solve(
     backend: str = "vmap",
     weighting: str = "uniform",
 ) -> SolveResult:
-    """Algorithm 3 at the root of ``tree`` over data X (m x d), labels y,
-    compiled and executed by the unified engine."""
-    from repro.core import engine
-    return engine.solve(
-        tree, X, y, loss=loss, lam=lam, key=key,
-        record_history=record_history, backend=backend, weighting=weighting)
+    """DEPRECATED shim: Algorithm 3 at the root of ``tree``, routed through
+    ``repro.api`` (Problem/Topology/Schedule/Session)."""
+    warnings.warn(
+        "tree_dual_solve is a legacy shim; use repro.api.Session "
+        "(Problem/Topology/Schedule) instead", DeprecationWarning,
+        stacklevel=2)
+    from repro import api
+    return api.solve(
+        api.Problem(X, y, loss=loss, lam=lam),
+        api.Topology.from_tree(tree),
+        api.Schedule(weighting=weighting),
+        backend=backend, key=key, record_history=record_history)
 
 
 def cocoa_star_solve(
@@ -73,18 +85,20 @@ def cocoa_star_solve(
     t_cp: float = 0.0,
     t_delay: float = 0.0,
 ) -> SolveResult:
-    """Algorithm 1 (CoCoA) as the star special case: identical to running
-    the engine on a depth-1 star tree (tested bit-for-bit)."""
-    from repro.core.tree import star
+    """DEPRECATED shim: Algorithm 1 (CoCoA) as the star special case --
+    identical to the sessionized API on a depth-1 star (tested
+    bit-for-bit).  Use ``Topology.star`` + ``Session`` instead."""
+    warnings.warn(
+        "cocoa_star_solve is a legacy shim; use repro.api.Session with "
+        "Topology.star instead", DeprecationWarning, stacklevel=2)
+    from repro import api
 
     m = X.shape[0]
     assert m % n_workers == 0, "even split expected (paper setup)"
-    tree = star(
-        n_workers, m // n_workers,
-        outer_rounds=outer_rounds, local_steps=local_steps,
-        t_lp=t_lp, t_cp=t_cp, t_delay=t_delay,
-    )
-    return tree_dual_solve(tree, X, y, loss=loss, lam=lam, key=key)
+    topo = api.Topology.star(
+        n_workers, m // n_workers, rounds=outer_rounds,
+        local_steps=local_steps, t_lp=t_lp, t_cp=t_cp, t_delay=t_delay)
+    return api.solve(api.Problem(X, y, loss=loss, lam=lam), topo, key=key)
 
 
 # ---------------------------------------------------------------------------

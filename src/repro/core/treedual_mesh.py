@@ -29,14 +29,14 @@ balanced tree, up to float reassociation.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional, Sequence, Tuple
 
 import jax
 from jax.sharding import Mesh
 
 from repro.core.dual import Loss
-from repro.core.engine.mesh import execute_plan_mesh, tree_from_mesh_axes
-from repro.core.engine.plan import compile_tree
+from repro.core.engine.mesh import tree_from_mesh_axes  # noqa: F401
 
 Array = jax.Array
 
@@ -54,7 +54,13 @@ def mesh_tree_dual_solve(
     key: Optional[Array] = None,
     use_kernel: bool = True,
 ) -> Tuple[Array, Array]:
-    """Run the full nested schedule; returns (alpha (m,), w (d,))."""
+    """DEPRECATED shim: the mesh program behind the sessionized surface --
+    ``Session.compile(..., backend="mesh", mesh=mesh)``.  Returns
+    (alpha (m,), w (d,))."""
+    warnings.warn(
+        "mesh_tree_dual_solve is a legacy shim; use repro.api.Session with "
+        "backend='mesh' instead", DeprecationWarning, stacklevel=2)
+    from repro import api
     assert len(axes) == len(rounds)
     m, _ = X.shape
     sizes = [dict(mesh.shape)[a] for a in axes]
@@ -66,7 +72,9 @@ def mesh_tree_dual_solve(
 
     tree = tree_from_mesh_axes(mesh, axes, rounds,
                                local_steps=local_steps, m_leaf=m_b)
-    plan = compile_tree(tree, weighting="uniform")
-    return execute_plan_mesh(
-        plan, tree, X, y, mesh, axes=axes, loss=loss, lam=lam, key=key,
-        use_kernel=use_kernel)
+    res = api.solve(
+        api.Problem(X, y, loss=loss, lam=lam),
+        api.Topology.from_tree(tree),
+        backend="mesh", mesh=mesh, mesh_axes=tuple(axes), key=key,
+        mesh_use_kernel=use_kernel, record_history=False)
+    return res.alpha, res.w

@@ -1,0 +1,363 @@
+"""Sessionized API (repro.api): Problem / Topology / Schedule / Session.
+
+The load-bearing claims:
+
+  * chunked Session execution is BIT-identical to the monolithic compiled
+    program (and hence to the legacy entry points, which are now shims)
+    on star / two-level / imbalanced trees for both host backends;
+  * Topology serialization round-trips every tree shape we use;
+  * ``Schedule(rounds="auto")`` reproduces the eq.-(12) planner's
+    per-level H and beats a naive fixed schedule on simulated
+    time-to-gap when links are slow;
+  * executors are cache-hits after the first compile;
+  * warm restarts continue the RNG chain exactly.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import DelayModel, Problem, Schedule, Session, Topology, solve
+from repro.core import dual as D
+from repro.core import engine
+from repro.core.delay import FixedLevel, optimal_h, plan_hierarchical_h
+from repro.core.engine.host import executor_cache_stats
+from repro.core.engine.plan import compile_tree, key_plan
+from repro.core.tree import TreeNode, star, two_level
+from repro.data.synthetic import gaussian_regression
+
+LAM = 0.1
+
+
+def _imbalanced_topology() -> Topology:
+    return Topology.groups(
+        [[24, 16], [12, 20, 8], 20],
+        root_rounds=5, group_rounds=2, local_steps=30)
+
+
+TOPOLOGIES = {
+    "star": lambda: Topology.star(4, 40, rounds=6, local_steps=80),
+    "two_level": lambda: Topology.two_level(
+        2, 2, 40, root_rounds=5, group_rounds=3, local_steps=60),
+    "imbalanced": _imbalanced_topology,
+}
+
+
+# ---------------------------------------------------------------------------
+# Session vs the monolithic program and the legacy shims
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["vmap", "pallas"])
+@pytest.mark.parametrize("case", sorted(TOPOLOGIES))
+def test_session_bit_identical_to_monolithic(case, backend):
+    """Chunked (per-root-round) execution == ONE monolithic compiled run,
+    bit for bit: the root-sync boundary is a complete carry."""
+    topo = TOPOLOGIES[case]()
+    X, y = gaussian_regression(m=topo.m_total, d=12)
+    key = jax.random.PRNGKey(3)
+    prob = Problem(X, y, loss="squared", lam=LAM)
+
+    sess = Session.compile(prob, topo, backend=backend)
+    res = sess.run(key=key, record_history=False)
+
+    full = topo.tree
+    plan = compile_tree(full)
+    keys = key_plan(full, plan, key)
+    alpha_m, w_m = engine.execute_plan(
+        plan, X, y, keys, loss=prob.loss, lam=LAM, record_history=False,
+        backend=backend)
+    np.testing.assert_array_equal(np.asarray(res.alpha), np.asarray(alpha_m))
+    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(w_m))
+
+
+@pytest.mark.parametrize("case", sorted(TOPOLOGIES))
+def test_session_bit_identical_to_legacy_entry_point(case):
+    """Acceptance: Session.compile + run == tree_dual_solve exactly."""
+    from repro.core.treedual import tree_dual_solve
+    topo = TOPOLOGIES[case]()
+    X, y = gaussian_regression(m=topo.m_total, d=10)
+    key = jax.random.PRNGKey(11)
+    res = Session.compile(Problem(X, y, lam=LAM), topo).run(key=key)
+    with pytest.deprecated_call():
+        leg = tree_dual_solve(topo.tree, X, y, loss=D.squared, lam=LAM,
+                              key=key)
+    np.testing.assert_array_equal(np.asarray(res.alpha),
+                                  np.asarray(leg.alpha))
+    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(leg.w))
+    assert [h["gap"] for h in res.history] == \
+        [h["gap"] for h in leg.history]
+
+
+def test_session_mesh_backend_behind_one_surface():
+    """backend='mesh' is reachable from Session.compile (auto-built mesh)
+    and agrees with the host backend on the same schedule."""
+    n = len(jax.devices())
+    topo = Topology.star(n, 256 // n, rounds=8, local_steps=64)
+    X, y = gaussian_regression(m=256, d=16)
+    prob = Problem(X, y, lam=LAM)
+    key = jax.random.PRNGKey(2)
+    res_m = Session.compile(prob, topo, backend="mesh").run(
+        key=key, record_history=False)
+    res_h = Session.compile(prob, topo, backend="vmap").run(
+        key=key, record_history=False)
+    np.testing.assert_allclose(np.asarray(res_m.alpha),
+                               np.asarray(res_h.alpha),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(res_m.w), np.asarray(res_h.w),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# warm restarts, streaming, cache
+# ---------------------------------------------------------------------------
+def test_warm_start_continuation_is_exact():
+    """run(3) then run(5, warm_start=...) == run(8): state AND RNG chain
+    are a complete carry."""
+    topo = TOPOLOGIES["two_level"]()
+    X, y = gaussian_regression(m=topo.m_total, d=8)
+    sess = Session.compile(Problem(X, y, lam=LAM), topo)
+    key = jax.random.PRNGKey(7)
+
+    once = sess.run(rounds=8, key=key, record_history=False)
+    first = sess.run(rounds=3, key=key, record_history=False)
+    rest = sess.run(rounds=5, warm_start=first, record_history=False)
+    np.testing.assert_array_equal(np.asarray(rest.alpha),
+                                  np.asarray(once.alpha))
+    np.testing.assert_array_equal(np.asarray(rest.w), np.asarray(once.w))
+
+    # a plain (alpha, w) pair is accepted too (fresh RNG chain)
+    pair = sess.run(rounds=2, warm_start=(first.alpha, first.w),
+                    key=first.next_key, record_history=False)
+    mid = sess.run(rounds=5, key=key, record_history=False)
+    np.testing.assert_array_equal(np.asarray(pair.alpha),
+                                  np.asarray(mid.alpha))
+
+
+def test_history_streams_mid_run():
+    topo = TOPOLOGIES["star"]()
+    X, y = gaussian_regression(m=topo.m_total, d=8)
+    sess = Session.compile(Problem(X, y, lam=LAM), topo)
+    seen = []
+    res = sess.run(rounds=4, on_round=seen.append)
+    assert len(seen) == 5 and seen == res.history          # 0..4 inclusive
+    assert [h["round"] for h in seen] == list(range(5))
+    # gaps decrease overall and every entry was delivered incrementally
+    assert seen[-1]["gap"] < seen[0]["gap"]
+
+
+def test_executor_cache_hits_on_repeated_solves():
+    """Satellite: repeated engine.solve / Session.compile on the same tree
+    must reuse ONE jit/scan program (cache hits, no rebuilds)."""
+    topo = Topology.star(3, 30, rounds=4, local_steps=50)
+    X, y = gaussian_regression(m=90, d=6)
+    prob = Problem(X, y, lam=0.07)
+
+    s1 = Session.compile(prob, topo)
+    before = executor_cache_stats()
+    s2 = Session.compile(prob, topo)
+    res1 = s1.run(record_history=False)
+    res2 = s2.run(record_history=False)
+    after = executor_cache_stats()
+    assert after["misses"] == before["misses"], "executor was rebuilt"
+    assert after["hits"] >= before["hits"] + 1
+    assert s1._fn is s2._fn
+    np.testing.assert_array_equal(np.asarray(res1.alpha),
+                                  np.asarray(res2.alpha))
+
+    # the legacy entry point rides the same cache
+    before = executor_cache_stats()
+    engine.solve(topo.tree, X, y, loss=prob.loss, lam=0.07,
+                 record_history=False)
+    after = executor_cache_stats()
+    assert after["misses"] == before["misses"]
+
+
+# ---------------------------------------------------------------------------
+# Topology: builders + serialization round-trip
+# ---------------------------------------------------------------------------
+def _legacy_trees():
+    la = TreeNode(name="A", rounds=40, data_size=24, t_lp=2e-5)
+    lb = TreeNode(name="B", rounds=30, data_size=16)
+    lc = TreeNode(name="C", rounds=50, data_size=8, up_delay=0.3)
+    g = TreeNode(name="g", children=(lb, lc), rounds=2)
+    mid = TreeNode(name="mid", children=(g, la), rounds=2, t_cp=1e-6)
+    ld = TreeNode(name="Dd", rounds=20, data_size=12)
+    return {
+        "star": star(4, 60, outer_rounds=8, local_steps=120, t_lp=1e-5,
+                     t_delay=0.4, t_cp=3e-5),
+        "two_level": two_level(2, 2, 60, root_rounds=5, group_rounds=3,
+                               local_steps=100, root_delay=1.0,
+                               group_delay=1e-3),
+        "imbalanced": TreeNode(name="root", children=(mid, ld), rounds=6),
+    }
+
+
+def test_topology_roundtrip_every_tree():
+    trees = dict(_legacy_trees())
+    trees["groups"] = _imbalanced_topology().tree
+    trees["balanced"] = Topology.balanced(
+        [2, 3], m_leaf=16, local_steps=32, level_rounds=[4, 2],
+        level_delays=[0.5, 1e-3], t_lp=1e-5, t_cp=1e-6).tree
+    for name, tree in trees.items():
+        topo = Topology.from_tree(tree)
+        assert Topology.from_dict(topo.to_dict()) == topo, name
+        assert Topology.from_json(topo.to_json()) == topo, name
+        # the round-trip preserves the *solver-relevant* lowering exactly
+        assert compile_tree(Topology.from_json(topo.to_json()).tree
+                            ).fingerprint == compile_tree(tree).fingerprint, \
+            name
+
+
+def test_topology_rejects_duplicate_leaves_and_leaf_root():
+    leaf = TreeNode(name="x", rounds=1, data_size=4)
+    with pytest.raises(ValueError):
+        Topology.from_tree(leaf)
+    with pytest.raises(ValueError):
+        Topology.from_tree(TreeNode(name="r", children=(leaf, leaf)))
+
+
+def test_topology_sync_levels_two_level():
+    topo = Topology.two_level(3, 4, 16, root_delay=2.0, group_delay=0.25,
+                              t_lp=1e-5)
+    lv = topo.sync_levels()      # innermost first
+    assert [l.group_size for l in lv] == [4, 3]
+    assert [l.round_delay() for l in lv] == [0.25, 2.0]
+    with pytest.raises(ValueError):
+        _imbalanced_topology().sync_levels()
+
+
+# ---------------------------------------------------------------------------
+# Schedule: explicit overrides and the eq.-(12) auto path
+# ---------------------------------------------------------------------------
+def test_schedule_overrides_topology_rounds():
+    topo = Topology.two_level(2, 2, 20, root_rounds=9, group_rounds=9,
+                              local_steps=9)
+    r = Schedule(rounds=4, level_rounds=[3], local_steps=17).resolve(topo)
+    assert r.rounds == 4
+    assert r.chunk_tree.rounds == 1
+    assert {c.rounds for c in r.chunk_tree.children} == {3}
+    assert {l.rounds for l in r.chunk_tree.leaves()} == {17}
+    # default: keep what the topology carries
+    r2 = Schedule().resolve(topo)
+    assert r2.rounds == 9
+    assert {c.rounds for c in r2.chunk_tree.children} == {9}
+
+
+def test_auto_rounds_reproduces_plan_hierarchical_h():
+    """Satellite: Schedule(rounds='auto') == plan_hierarchical_h per level,
+    wired end-to-end into Session.compile."""
+    t_lp, t_cp, budget = 1e-5, 2e-5, 2.0
+    topo = Topology.two_level(2, 2, 32, root_delay=0.05, group_delay=1e-4,
+                              t_lp=t_lp)
+    dm = DelayModel(t_total=budget, C=0.5, t_cp=t_cp, h_max=10**4)
+    sched = Schedule(rounds="auto", delay=dm)
+    X, y = gaussian_regression(m=topo.m_total, d=8)
+    sess = Session.compile(Problem(X, y, lam=LAM), topo, sched)
+
+    lp = plan_hierarchical_h(
+        [FixedLevel("depth1", 2, 1e-4), FixedLevel("depth0", 2, 0.05)],
+        C=0.5, delta=1.0 / 32, t_total=budget, t_lp=t_lp, t_cp=t_cp,
+        h_max=10**4)
+    assert [row["H"] for row in sess.level_plan] == [row["H"] for row in lp]
+    leaves = sess.resolved.chunk_tree.leaves()
+    assert {l.rounds for l in leaves} == {int(lp[0]["H"])}
+    assert {c.rounds for c in sess.resolved.chunk_tree.children} == \
+        {int(lp[1]["H"])}
+    assert sess.default_rounds == max(1, int(budget / lp[-1]["round_time"]))
+
+    res = sess.run(record_history=True)
+    assert np.isfinite(res.gaps).all()
+
+
+def test_auto_rounds_inherits_topology_t_cp():
+    """DelayModel.t_cp=None (default) takes the aggregation cost from the
+    topology instead of silently assuming 0."""
+    t_lp, t_cp = 4e-5, 3e-3
+    topo = Topology.star(3, 100, t_lp=t_lp, t_cp=t_cp, t_delay=0.1)
+    r = Schedule.auto(t_total=1.0, h_max=10**5).resolve(topo)
+    h_with = optimal_h(C=0.5, K=3, delta=1 / 100, t_total=1.0, t_lp=t_lp,
+                       t_delay=0.1, t_cp=t_cp, h_max=10**5)[0]
+    assert r.chunk_tree.leaves()[0].rounds == h_with
+    # explicit t_cp still wins over the topology's
+    r0 = Schedule.auto(t_total=1.0, t_cp=0.0, h_max=10**5).resolve(topo)
+    h0 = optimal_h(C=0.5, K=3, delta=1 / 100, t_total=1.0, t_lp=t_lp,
+                   t_delay=0.1, t_cp=0.0, h_max=10**5)[0]
+    assert r0.chunk_tree.leaves()[0].rounds == h0
+
+
+def test_optimal_h_monotone_in_delay_fig4b():
+    """Satellite sanity check: larger link delay => H* non-decreasing (the
+    paper's Fig. 4(b) trend), on a non-paper parameter set."""
+    base = dict(C=0.6, K=4, delta=1 / 64, t_total=0.5, t_lp=2e-5, t_cp=1e-5,
+                h_max=10**6)
+    hs = [optimal_h(t_delay=r * base["t_lp"], **base)[0]
+          for r in (0.0, 10.0, 1e3, 1e5, 1e7)]
+    assert all(b >= a for a, b in zip(hs, hs[1:])), hs
+    assert hs[-1] > hs[0]
+
+
+def test_auto_rounds_beats_fixed_default_time_to_gap():
+    """Acceptance regression: on a slow-rooted two-level topology the
+    eq.-(12) auto schedule reaches a strictly smaller duality gap than the
+    topology's fixed default within the same simulated-time budget."""
+    t_lp = 1e-5
+    budget = 8.0
+    topo = Topology.two_level(
+        2, 2, 32, root_rounds=10, group_rounds=2, local_steps=16,
+        t_lp=t_lp, root_delay=1e5 * t_lp, group_delay=1e-4)
+    X, y = gaussian_regression(m=topo.m_total, d=16)
+    prob = Problem(X, y, lam=0.05)
+
+    fixed = Schedule().resolve(topo)
+    t_fixed_rounds = max(1, int(budget / fixed.per_round_time))
+    res_fixed = Session.compile(prob, topo).run(
+        rounds=t_fixed_rounds, key=jax.random.PRNGKey(0))
+
+    sched = Schedule.auto(t_total=budget, t_cp=0.0, h_max=2**12)
+    sess = Session.compile(prob, topo, sched)
+    res_auto = sess.run(key=jax.random.PRNGKey(0))
+
+    # equal simulated budget on both sides
+    assert res_auto.times[-1] <= budget and res_fixed.times[-1] <= budget
+    assert res_auto.gaps[-1] < res_fixed.gaps[-1], (
+        res_auto.gaps[-1], res_fixed.gaps[-1])
+
+
+def test_auto_requires_delay_model_and_positive_tlp():
+    topo = Topology.two_level(2, 2, 8)     # t_lp defaults to 0
+    with pytest.raises(ValueError, match="DelayModel"):
+        Schedule(rounds="auto").resolve(topo)
+    with pytest.raises(ValueError, match="t_lp"):
+        Schedule.auto(t_total=1.0).resolve(topo)
+
+
+# ---------------------------------------------------------------------------
+# Problem / loss registry
+# ---------------------------------------------------------------------------
+def test_problem_resolves_losses_by_name():
+    X, y = gaussian_regression(m=12, d=3)
+    assert Problem(X, y, loss="squared").loss is D.squared
+    assert Problem(X, y, loss="logistic").loss is D.logistic
+    p = Problem(X, y, loss="smooth_hinge_0.25")
+    assert p.loss.gamma == 0.25
+    assert D.get_loss("smooth_hinge_0.25") is p.loss     # registered
+    assert Problem.svm(X, y, smoothing=0).loss is D.hinge
+    with pytest.raises(KeyError):
+        Problem(X, y, loss="no_such_loss")
+    with pytest.raises(ValueError):
+        Problem(X, y[:5])
+
+
+def test_solve_one_shot_matches_session():
+    topo = TOPOLOGIES["star"]()
+    X, y = gaussian_regression(m=topo.m_total, d=6)
+    prob = Problem(X, y, lam=LAM)
+    key = jax.random.PRNGKey(1)
+    a = solve(prob, topo, key=key, record_history=False)
+    b = Session.compile(prob, topo).run(key=key, record_history=False)
+    np.testing.assert_array_equal(np.asarray(a.alpha), np.asarray(b.alpha))
+
+
+def test_session_validates_data_topology_mismatch():
+    X, y = gaussian_regression(m=64, d=4)
+    topo = Topology.star(4, 8)              # 32 != 64
+    with pytest.raises(ValueError, match="assigns"):
+        Session.compile(Problem(X, y), topo)

@@ -1,7 +1,6 @@
 """Theorem 1/2 + Proposition 1 rate validation: the empirical gap must decay
 at least as fast as the theoretical bound (in expectation over seeds)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import convergence as conv

@@ -58,6 +58,54 @@ def test_coord_delta_is_argmax(name):
     assert float(obj(d_star)) >= float(best) - 1e-4
 
 
+@pytest.mark.parametrize("name", ["logistic", "smooth_hinge_1",
+                                  "smooth_hinge_0.3", "squared"])
+def test_coord_delta_matches_scipy_numeric_optimum(name):
+    """The analytic/Newton coordinate step must agree with a scipy numeric
+    optimizer of the same scalar subproblem (satellite check for the
+    logistic Newton solve and the smoothed-hinge closed form)."""
+    scipy_opt = pytest.importorskip("scipy.optimize")
+    loss = D.get_loss(name)
+    for y_ in (1.0, -1.0) if name != "squared" else (0.7,):
+        y = jnp.float32(y_)
+        for wx, alpha0, xsq in [(0.3, 0.35, 0.8), (-1.2, 0.6, 2.5),
+                                (0.05, 0.9, 0.1)]:
+            alpha = jnp.float32(alpha0 * y_ if name != "squared" else alpha0)
+
+            def obj(d):
+                return float(-0.5 * xsq * d * d - wx * d
+                             - loss.conj_neg(alpha + d, y))
+
+            if name == "squared":
+                lo, hi = -50.0, 50.0
+            else:
+                # feasible set: (alpha + d) y in [0, 1]
+                lo, hi = sorted((0.0 * y_ - float(alpha),
+                                 1.0 * y_ - float(alpha)))
+            r = scipy_opt.minimize_scalar(
+                lambda d: -obj(d), bounds=(lo, hi), method="bounded",
+                options={"xatol": 1e-10})
+            d_star = float(loss.coord_delta(jnp.float32(wx), alpha, y,
+                                            jnp.float32(xsq)))
+            assert obj(d_star) >= -r.fun - 5e-5, (
+                name, y_, wx, alpha0, xsq, d_star, r.x)
+
+
+def test_loss_registry_resolution():
+    assert D.get_loss("squared") is D.squared
+    assert D.get_loss(D.logistic) is D.logistic
+    g = D.get_loss("smooth_hinge_0.7")
+    assert g.gamma == 0.7 and D.get_loss("smooth_hinge_0.7") is g
+    custom = D.Loss("custom_sq", D.squared.value, D.squared.conj_neg,
+                    D.squared.coord_delta, gamma=1.0)
+    assert D.register_loss(custom) is custom
+    assert D.get_loss("custom_sq") is custom
+    with pytest.raises(KeyError):
+        D.get_loss("nope")
+    with pytest.raises(ValueError):
+        D.get_loss("smooth_hinge_-1")
+
+
 def test_weak_duality_and_ridge_optimum():
     key = jax.random.PRNGKey(0)
     X = jax.random.normal(key, (40, 8))

@@ -7,7 +7,6 @@ trees alike -- while preserving the w = A alpha invariant and keeping
 ``cocoa_star_solve`` bit-equivalent to the engine on the depth-1 star.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

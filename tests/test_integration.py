@@ -1,9 +1,6 @@
 """End-to-end integration: checkpoint/restart continuity, elastic remesh
 mid-training, hierarchical H planning, and the serve path."""
-import dataclasses
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -65,7 +62,7 @@ def test_elastic_shrink_grow_roundtrip():
     """Simulate losing half the mesh: state re-shards onto the smaller
     mesh, trains a step, grows back -- values preserved through hops."""
     from repro.launch import sharding as sh
-    from repro.launch.steps import make_train_step, params_shape
+    from repro.launch.steps import make_train_step
     from repro.models.transformer import init_params
     from repro.optim import get_optimizer
     from repro.runtime.elastic import remesh_state, to_host

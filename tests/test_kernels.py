@@ -6,7 +6,6 @@ import numpy as np
 import pytest
 
 from repro.core import dual as dual_mod
-from repro.core.local_sdca import local_sdca
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.sdca.kernel import sdca_block_kernel

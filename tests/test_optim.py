@@ -1,7 +1,6 @@
 """Optimizers: quadratic convergence, state shapes, Adafactor factoring."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.optim import make_adafactor, make_adamw, make_sgd

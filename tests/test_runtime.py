@@ -1,8 +1,5 @@
 """Fault-tolerance: checkpoint atomicity/retention/resume, elastic remesh,
 straggler policies."""
-import json
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np

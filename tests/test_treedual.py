@@ -1,6 +1,4 @@
 """TreeDualMethod (Algorithms 1-3) system tests."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,6 +1,5 @@
 """Device-level TreeDualMethod (shard_map + psum + Pallas leaf kernel)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
