@@ -8,9 +8,16 @@ iterates that one compiled program:
   * any number of root rounds without re-tracing,
   * warm restarts (``warm_start=`` a previous result or an ``(alpha, w)``
     pair) that bit-reproduce one longer run when continued with the
-    returned ``next_key``,
+    returned ``next_key``, with the history's round/time axes continuing
+    where the previous run stopped,
   * streamed history (``on_round=`` fires after every root round, not just
-    at the end).
+    at the end),
+  * straggler-adaptive async execution (``straggler=`` a
+    :class:`~repro.runtime.straggler.StragglerPolicy`): per chunk, sampled
+    per-leaf link delays decide which leaves the barrier drops; dropped
+    leaves keep solving on stale snapshots and re-join later (participation
+    masks, see ``repro.core.engine.plan``), and the history records the
+    simulated async wall-clock next to the synchronous-equivalent one.
 
 All three backends sit behind ``backend=``: ``"vmap"`` (host XLA),
 ``"pallas"`` (blocked-SDCA leaf kernel), ``"mesh"`` (``shard_map`` device
@@ -29,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dual as dual_mod
+from repro.core import tree as tree_mod
 from repro.core.engine import host as host_mod
 from repro.core.engine import mesh as mesh_mod
 from repro.core.engine import plan as plan_mod
@@ -42,7 +50,9 @@ Array = jax.Array
 BACKENDS = ("vmap", "pallas", "mesh")
 
 
-@functools.partial(jax.jit, static_argnames=("loss", "lam"))
+# lam is a TRACED scalar: lambda sweeps hit one compiled objective instead
+# of retracing per value (only the loss object stays static)
+@functools.partial(jax.jit, static_argnames=("loss",))
 def _objective(alpha: Array, X: Array, y: Array, loss, lam):
     w = dual_mod.w_of_alpha(alpha, X, lam)
     return (dual_mod.dual_value(alpha, X, y, loss, lam),
@@ -59,7 +69,7 @@ class Session:
 
     def __init__(self, problem: Problem, topology: Topology,
                  resolved: ResolvedSchedule, backend: str, plan, fn,
-                 mesh=None, mesh_axes=None):
+                 mesh=None, mesh_axes=None, mesh_use_kernel: bool = True):
         self.problem = problem
         self.topology = topology
         self.resolved = resolved
@@ -68,6 +78,7 @@ class Session:
         self._fn = fn
         self._mesh = mesh
         self._mesh_axes = mesh_axes
+        self._mesh_use_kernel = mesh_use_kernel
         if backend == "mesh":
             from jax.sharding import NamedSharding, PartitionSpec as P
             spec = P(tuple(reversed(mesh_axes)))
@@ -143,7 +154,8 @@ class Session:
             plan, mesh, axes=tuple(mesh_axes), loss=problem.loss,
             lam=problem.lam, use_kernel=mesh_use_kernel)
         return cls(problem, topology, resolved, backend, plan, fn,
-                   mesh=mesh, mesh_axes=tuple(mesh_axes))
+                   mesh=mesh, mesh_axes=tuple(mesh_axes),
+                   mesh_use_kernel=mesh_use_kernel)
 
     # ------------------------------------------------------------------
     @property
@@ -169,14 +181,30 @@ class Session:
         warm_start: Union[SolveResult, Tuple[Array, Array], None] = None,
         record_history: bool = True,
         on_round: Optional[Callable[[dict], None]] = None,
+        straggler=None,
     ) -> SolveResult:
         """Run ``rounds`` root rounds (default: the schedule's).
 
         ``warm_start`` continues from a previous state; passing the previous
         :class:`SolveResult` also continues its RNG chain (``next_key``)
         unless ``key`` overrides it, making split runs bit-identical to one
-        long run.  ``on_round(entry)`` streams each history entry as it is
-        produced (requires ``record_history=True``)."""
+        long run -- and continues the history's round/time axes, so split
+        histories concatenate into one monotone series.  ``on_round(entry)``
+        streams each history entry as it is produced (requires
+        ``record_history=True``).
+
+        ``straggler`` (a :class:`~repro.runtime.straggler.StragglerPolicy`)
+        switches the run to straggler-adaptive async execution: each chunk,
+        the policy samples per-leaf sync delays from the topology's nominal
+        link delays, drops straggling leaves from the barrier (bounded
+        consecutive skips; dropped leaves keep solving on stale snapshots
+        and re-join with renormalized weights), and the history's ``time``
+        axis accrues the simulated *async* wall-clock, with the
+        synchronous-equivalent time in ``time_sync`` and the participant
+        count in ``participants``.  The final chunk always runs a full
+        barrier so the returned iterates satisfy ``w = A alpha``.  An
+        always-participate policy is bit-identical to the synchronous
+        run."""
         T = self.resolved.rounds if rounds is None else int(rounds)
         if T < 0:
             raise ValueError(f"rounds must be >= 0, got {T}")
@@ -189,7 +217,36 @@ class Session:
         chunk_tree, plan = self.resolved.chunk_tree, self.plan
         dt = self.resolved.per_round_time
 
+        # warm restarts continue the history axes instead of resetting the
+        # clock to zero and duplicating the warm state as a round-0 entry
+        t0_round, t0_time = 0, 0.0
+        record_initial = True
+        if isinstance(warm_start, SolveResult) and warm_start.history:
+            t0_round = int(warm_start.history[-1]["round"])
+            t0_time = float(warm_start.history[-1]["time"])
+            record_initial = False
+
         mesh = self.backend == "mesh"
+        state_exec = None
+        if straggler is not None:
+            t_compute = tree_mod.strip_delays(chunk_tree).solve_time()
+            t_lp = max([l.t_lp for l in chunk_tree.leaves()])
+            straggler.bind(self.topology.leaf_sync_delays(), t_compute,
+                           t_lp=t_lp)
+            # the flat (alpha, w) pair is not a complete carry once leaves
+            # can skip syncs (absent leaves keep divergent replicas and
+            # stale snapshots), so async runs thread the executors' full
+            # blocked state across chunks instead
+            if mesh:
+                state_exec = mesh_mod.get_mesh_executor(
+                    plan, self._mesh, axes=self._mesh_axes,
+                    loss=self.problem.loss, lam=self.problem.lam,
+                    use_kernel=self._mesh_use_kernel, carry_state=True)
+            else:
+                state_exec = host_mod.get_host_executor(
+                    plan, loss=self.problem.loss, lam=self.problem.lam,
+                    record_history=False, backend=self.backend,
+                    carry_state=True)
         if mesh:
             a_carry = jnp.asarray(alpha, X.dtype).reshape(
                 plan.n_leaves, plan.m_b)
@@ -198,35 +255,82 @@ class Session:
         w = jnp.asarray(w, X.dtype)
 
         history: list = []
+        clock = {"async": t0_time, "sync": t0_time}
 
-        def record(t: int, a_flat: Array):
+        def record(t: int, a_flat: Array, extra: Optional[dict] = None):
             if not record_history:
                 return
             dv, pv = _objective(a_flat, X, y, loss, float(lam))
-            record_round(history, t, t * dt, float(dv), float(pv))
+            time = clock["async"] if straggler is not None else \
+                t0_time + t * dt
+            record_round(history, t0_round + t, time, float(dv), float(pv))
+            if extra:
+                history[-1].update(extra)
             if on_round is not None:
                 on_round(history[-1])
+
+        # the all-ones mask is loop-invariant: convert (and, on mesh,
+        # device_put) it once instead of per round
+        if mesh:
+            part_ones = jax.device_put(
+                jnp.asarray(plan_mod.full_participation(plan), X.dtype).T,
+                self._spec_sharding)
+        else:
+            part_ones = jnp.asarray(plan_mod.full_participation(plan))
+        state = None
+        if state_exec is not None:
+            state = state_exec.init(X, a_carry, w)
 
         # all rounds' keys in one walk of the equivalent monolithic tree
         # (the legacy chain), so the chunk loop does no host RNG work
         keys_all = plan_mod.chunked_key_plan(chunk_tree, plan, k, T)
-        record(0, a_carry.reshape(m) if mesh else a_carry)
+        if record_initial:
+            record(0, a_carry.reshape(m) if mesh else a_carry)
         for t in range(1, T + 1):
             keys = keys_all[t - 1]
+            extra = None
+            prt = part_ones
+            if straggler is not None:
+                step = straggler.step(final=(t == T))
+                part = plan_mod.chunk_participation(plan, step.mask)
+                prt = jax.device_put(
+                    jnp.asarray(part, X.dtype).T, self._spec_sharding) \
+                    if mesh else jnp.asarray(part)
+                clock["async"] += step.dt_async
+                clock["sync"] += step.dt_sync
+                extra = {"time_sync": clock["sync"],
+                         "participants": int(step.mask.sum())}
             if mesh:
                 kys = jax.device_put(
                     jnp.asarray(keys.transpose(1, 0, 2)),
                     self._spec_sharding)
-                a_carry, wrows = self._fn(self._Xs, self._ys, a_carry, w,
-                                          kys)
-                w = wrows[0]
-                record(t, a_carry.reshape(m))
+                if state_exec is None:
+                    a_carry, wrows = self._fn(self._Xs, self._ys, a_carry,
+                                              w, kys, prt)
+                    w = wrows[0]
+                    record(t, a_carry.reshape(m), extra)
+                else:
+                    state = state_exec.step(self._Xs, self._ys, *state,
+                                            kys, prt)
+                    if record_history:
+                        record(t, state[0].reshape(m), extra)
+            elif state_exec is None:
+                a_carry, w = self._fn(X, y, jnp.asarray(keys), a_carry, w,
+                                      prt)
+                record(t, a_carry, extra)
             else:
-                a_carry, w = self._fn(X, y, jnp.asarray(keys), a_carry, w)
-                record(t, a_carry)
+                state = state_exec.step(X, y, jnp.asarray(keys), state,
+                                        prt)
+                if record_history:
+                    record(t, state_exec.finalize(state)[0], extra)
         k = plan_mod.advance_root_key(k, T, K_root)
 
-        alpha_out = a_carry.reshape(m) if mesh else a_carry
+        if state_exec is not None:
+            alpha_out, w = state_exec.finalize(state)
+            if mesh:
+                alpha_out = alpha_out.reshape(m)
+        else:
+            alpha_out = a_carry.reshape(m) if mesh else a_carry
         return SolveResult(alpha=alpha_out, w=w, history=history, next_key=k)
 
     # ------------------------------------------------------------------

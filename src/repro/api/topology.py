@@ -120,6 +120,24 @@ class Topology:
             for d in range(D - 1, -1, -1)
         ]
 
+    def leaf_sync_delays(self) -> List[float]:
+        """Per-leaf nominal sync-path delay (seconds), leaf order: the sum
+        of ``up_delay`` along the leaf's path to the root -- what one root
+        round's barrier pays to hear from that leaf.  The base delays that
+        ``Session.run(straggler=...)`` hands the
+        :class:`~repro.core.delay.StragglerModel` sampler."""
+        out: List[float] = []
+
+        def visit(node: TreeNode, acc: float):
+            acc += node.up_delay
+            if node.is_leaf:
+                out.append(acc)
+                return
+            for c in node.children:
+                visit(c, acc)
+        visit(self.tree, -self.tree.up_delay)  # the root has no up-link
+        return out
+
     def leaf_t_lp(self) -> float:
         """The (homogeneous) per-coordinate-step cost at the leaves."""
         vals = {l.t_lp for l in self.tree.leaves()}

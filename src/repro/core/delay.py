@@ -26,6 +26,17 @@ def rounds_for_budget(t_total: float, H: float, t_lp: float, t_delay: float,
     return t_total / (t_lp * H + t_delay + t_cp)
 
 
+def _check_improvement_constant(C: float, K: int) -> None:
+    """eq. (11)'s per-round factor g(H) = 1 - (1 - (1-delta)^H) C/K is a
+    contraction only for 0 < C <= K; outside that range the "factor" goes
+    negative for large H and the log-space bound silently clamps it, so the
+    planners reject bad constants up front instead of optimizing garbage."""
+    if not 0 < C <= K:
+        raise ValueError(
+            f"the improvement constant must satisfy 0 < C <= K so eq. (11)'s "
+            f"per-round factor stays in (0, 1]; got C={C} with K={K}")
+
+
 def per_round_factor(H: float, C: float, K: int, delta: float) -> float:
     """eq. (11) base: g(H) = 1 - (1 - (1-delta)^H) * C/K."""
     return 1.0 - (1.0 - (1.0 - delta) ** H) * C / K
@@ -50,6 +61,7 @@ def optimal_h(
 
     Returns (H*, log_bound(H*)).
     """
+    _check_improvement_constant(C, K)
     # coarse: log-spaced candidates
     grid = sorted(
         {int(h) for h in np.unique(np.round(
@@ -166,6 +178,11 @@ def plan_hierarchical_h(
     This is the paper's SS6 applied recursively: each level treats the level
     below it as its LocalDualMethod.
     """
+    for lvl in levels:
+        try:
+            _check_improvement_constant(C, lvl.group_size)
+        except ValueError as e:
+            raise ValueError(f"level {lvl.name!r}: {e}") from None
     plan = []
     inner_iter_time = t_lp
     inner_delta = delta
@@ -183,3 +200,46 @@ def plan_hierarchical_h(
         inner_iter_time = round_time
         inner_delta = 1.0 - per_round_factor(h, C, lvl.group_size, inner_delta)
     return plan
+
+
+# ---------------------------------------------------------------------------
+# straggler delay sampling: randomized per-leaf sync-path delays
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class StragglerModel:
+    """Randomized per-leaf uplink delays around the topology's nominal ones.
+
+    The paper's SS6 model treats the link delay as a constant; real networks
+    have a heavy straggler tail on top.  Each round, a leaf's sync-path
+    delay is its nominal base (the topology's up-link delays, typically
+    derived from a :class:`LinkModel`'s ``delay(msg_bytes)``) with
+    log-normal ``jitter``, and with probability ``slow_prob`` the leaf
+    straggles: its delay is multiplied by ``slow_factor``.  This is the
+    observation side that feeds ``repro.runtime.straggler``'s decision
+    policies in simulated (containerized) runs."""
+    slow_prob: float = 0.1
+    slow_factor: float = 20.0
+    jitter: float = 0.05
+
+    def __post_init__(self):
+        if not 0.0 <= self.slow_prob <= 1.0:
+            raise ValueError(f"slow_prob must be in [0, 1]: {self.slow_prob}")
+        if self.slow_factor < 1.0:
+            raise ValueError(
+                f"slow_factor must be >= 1 (a straggler is slower, not "
+                f"faster): {self.slow_factor}")
+
+    def sample(self, base, rng: np.random.Generator) -> np.ndarray:
+        """One round's per-leaf delays: ``base`` is the (n,) nominal
+        sync-path delay per leaf (seconds)."""
+        base = np.asarray(base, dtype=np.float64)
+        d = base * np.exp(rng.normal(0.0, self.jitter, size=base.shape))
+        slow = rng.random(base.shape) < self.slow_prob
+        return np.where(slow, d * self.slow_factor, d)
+
+    @classmethod
+    def for_link(cls, link: LinkModel, msg_bytes: float, **kw) -> tuple:
+        """Convenience: (nominal delay of one message on ``link``, model) --
+        the base to hand :meth:`sample` when the topology's ``up_delay``
+        values came from this link."""
+        return link.delay(msg_bytes), cls(**kw)

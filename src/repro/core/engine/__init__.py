@@ -7,7 +7,13 @@ imbalanced, heterogeneous per-node rounds) as a single compiled program:
     plan  = compile_tree(tree)          # flat static schedule (the IR)
     keys  = key_plan(tree, plan, key)   # legacy-RNG per-solve key replay
     run   = get_host_executor(plan, ...)  # ONE jit'd lax.scan
-    alpha, w[, duals, primals] = run(X, y, keys, alpha0, w0)
+    alpha, w[, duals, primals] = run(X, y, keys, alpha0, w0, participation)
+
+``participation`` is the runtime (S, n) sync-attendance mask
+(``full_participation(plan)`` = the synchronous schedule, bit-identical
+to masks absent; see ``engine.plan`` for the async / stale-sync
+semantics and ``get_host_executor(..., carry_state=True)`` for the
+state-threading variant async sessions use).
 
 Backends:
   * ``backend="vmap"``   -- host/XLA: batched leaf solves via vmapped
@@ -32,8 +38,8 @@ from repro.core.dual import Loss
 from repro.core.engine.host import (  # noqa: F401
     execute_plan, executor_cache_stats, get_host_executor)
 from repro.core.engine.plan import (  # noqa: F401
-    LevelSpec, TreePlan, balanced_tree, compile_tree, index_plan, key_plan,
-    tree_from_level_plan,
+    LevelSpec, TreePlan, balanced_tree, chunk_participation, compile_tree,
+    full_participation, index_plan, key_plan, tree_from_level_plan,
 )
 from repro.core.instrument import SolveResult
 from repro.core.tree import TreeNode

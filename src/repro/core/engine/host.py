@@ -9,6 +9,17 @@ recursion therefore costs one compile and zero per-child Python dispatch --
 compare the legacy recursion's O(tree x rounds) jit calls and full-vector
 ``alpha.at[sl].add`` copies.
 
+Async / stale sync: the executor takes a runtime ``(S, n)`` participation
+mask (see ``engine.plan``).  A leaf whose mask is 0 at a tick is absent
+from that tick's syncs: present children's weights are renormalized, the
+absent leaf's state, snapshots, and pending delta are left untouched, and a
+per-depth *server* ``w`` carry (``srvW`` -- the post-sync aggregate each
+group last agreed on, kept group-coherent even for absent leaves) lets it
+re-join later: its delta since its last participation is folded into the
+CURRENT server state, exactly the bounded-staleness aggregation of delayed
+distributed methods.  With an all-ones mask every gate reduces to the
+synchronous path bit-for-bit (``x/1.0 == x``, ``srvW == snapW``).
+
 Optionally records the (dual, primal) series at root-sync ticks inside the
 same program (a ``lax.cond`` so the objective is only evaluated T_root
 times, as the legacy history recording did on the host).
@@ -16,7 +27,7 @@ times, as the legacy history recording did on the host).
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Tuple
+from typing import Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,28 +59,41 @@ def get_host_executor(
     lam: float,
     record_history: bool = True,
     backend: str = "vmap",
+    carry_state: bool = False,
 ):
     """Build (or fetch from cache) the jitted executor for ``plan``.
 
-    The executor has signature ``fn(X, y, keys, alpha0, w0) -> (alpha,
-    w[, duals, primals])`` with ``keys`` the (S, n, 2) per-solve key plan
-    (``plan.key_plan``) and ``(alpha0, w0)`` the flat (m,) / (d,) warm-start
-    state (zeros for a cold start); coordinate draws happen inside the
-    compiled program.  The executor is specialized to the plan structure but
-    re-usable across keys/data/start-state of the same shape."""
+    The default executor has signature ``fn(X, y, keys, alpha0, w0,
+    participation) -> (alpha, w[, duals, primals])`` with ``keys`` the
+    (S, n, 2) per-solve key plan (``plan.key_plan``), ``(alpha0, w0)`` the
+    flat (m,) / (d,) warm-start state (zeros for a cold start), and
+    ``participation`` the (S, n) 0/1 sync-attendance mask
+    (``plan.full_participation`` for the synchronous schedule); coordinate
+    draws happen inside the compiled program.  The executor is specialized
+    to the plan structure but re-usable across keys/data/start-state/masks
+    of the same shape.
+
+    ``carry_state=True`` instead returns a :class:`StateExecutor` whose
+    ``step(X, y, keys, state, participation) -> state`` threads the FULL
+    blocked carry ``(a, w, snapA, snapW, srvW)`` across invocations: with
+    participation masks the flat ``(alpha, w)`` pair is no longer a
+    complete chunk carry (absent leaves hold divergent replicas and stale
+    snapshots), so async sessions must thread this state instead.  Under
+    all-ones masks ``init -> step^T -> finalize`` is bit-identical to the
+    flat executor chunked the same way."""
     if backend not in ("vmap", "pallas"):
         raise ValueError(f"unknown backend {backend!r} (use 'vmap' or "
                          "'pallas'; the mesh backend is engine.mesh)")
     # loss keyed by (name, gamma): Loss names encode their parameters (e.g.
     # 'smooth_hinge_1'), so per-call constructed losses still hit the cache
     cache_key = (plan.fingerprint, loss.name, loss.gamma, float(lam),
-                 bool(record_history), backend)
+                 bool(record_history), backend, bool(carry_state))
     fn = _EXEC_CACHE.get(cache_key)
     if fn is None:
         _EXEC_CACHE_STATS["misses"] += 1
         fn = _build_host_executor(plan, loss=loss, lam=lam,
                                   record_history=record_history,
-                                  backend=backend)
+                                  backend=backend, carry_state=carry_state)
         _EXEC_CACHE[cache_key] = fn
         while len(_EXEC_CACHE) > _EXEC_CACHE_MAX:
             _EXEC_CACHE.popitem(last=False)
@@ -79,8 +103,17 @@ def get_host_executor(
     return fn
 
 
+class StateExecutor(NamedTuple):
+    """The state-threading executor triple (see ``get_host_executor``):
+    ``init(X, alpha0, w0) -> state``, ``step(X, y, keys, state,
+    participation) -> state``, ``finalize(state) -> (alpha, w)``."""
+    init: Callable
+    step: Callable
+    finalize: Callable
+
+
 def _build_host_executor(plan: TreePlan, *, loss, lam, record_history,
-                         backend):
+                         backend, carry_state=False):
     n, m_b, S, D = plan.n_leaves, plan.m_b, plan.n_ticks, plan.depth
     h_max, m = plan.h_max, plan.m_total
     lm = lam * m
@@ -110,6 +143,9 @@ def _build_host_executor(plan: TreePlan, *, loss, lam, record_history,
     wcoef = jnp.asarray(plan.w_coeff)                         # (D, n)
     gids = jnp.asarray(plan.group_ids)                        # (D, n)
     ngroups = plan.n_groups
+    cids = jnp.asarray(plan.child_ids)                        # (D, n)
+    csize = jnp.asarray(plan.child_sizes)                     # (D, n)
+    nchildren = plan.n_children
     # per-tick xs
     solve_mask = jnp.asarray(plan.solve_mask)                 # (S, n)
     sync_mask = jnp.asarray(plan.sync_mask)                   # (S, D, n)
@@ -122,12 +158,13 @@ def _build_host_executor(plan: TreePlan, *, loss, lam, record_history,
     else:
         from repro.kernels.sdca.ref import sdca_block_ref
 
-    def solve_fn(X: Array, y: Array, keys: Array, alpha0: Array, w0_in: Array):
+    def _scan(X: Array, y: Array, keys: Array, carry0, participation: Array):
+        """Trace the full tick scan from an explicit blocked carry; returns
+        (final carry, history stack, the objective closure)."""
         dtype = X.dtype
         vmask = valid_f.astype(dtype)
         Xb = X[gather_idx] * vmask[:, :, None]                # (n, m_b, d)
         yb = y[gather_idx] * vmask                            # (n, m_b)
-        d_feat = X.shape[1]
 
         def draw_idx(keys_s):
             """The tick's (n, h_max) coordinate draws, exactly as the legacy
@@ -161,23 +198,73 @@ def _build_host_executor(plan: TreePlan, *, loss, lam, record_history,
             return dv, pv
 
         def tick(carry, xs):
-            a, w, snapA, snapW = carry
-            keys_s, smask, sync_s, ref_s, hflag = xs
+            a, w, snapA, snapW, srvW = carry
+            keys_s, smask, sync_s, ref_s, hflag, part_s = xs
             da, dw = leaf_batch(a, w, keys_s, smask)
             a = a + da
             w = w + dw
+            # syncs bottom-up; a leaf with part_s == 0 is absent from every
+            # event of this tick.  `srvW[dd]` is the group's server state;
+            # it advances (and later rebases) GROUP-wide so an absent
+            # leaf's copy stays coherent with its group's.
+            act_of: list = [None] * D
             for dd in range(D - 1, -1, -1):
-                msk = sync_s[dd].astype(bool)[:, None]        # (n, 1)
-                a = jnp.where(msk, snapA[dd]
-                              + ascale[dd][:, None] * (a - snapA[dd]), a)
-                contrib = ((wcoef[dd] * sync_s[dd]).astype(dtype)[:, None]
-                           * (w - snapW[dd]))
+                ev = sync_s[dd]                               # (n,) event
+                e = ev * part_s                               # participants
+                wc = wcoef[dd].astype(dtype)
+                absent_g = jax.ops.segment_sum(
+                    (ev - e) * wc, gids[dd], num_segments=ngroups[dd])
+                present_g = jax.ops.segment_sum(
+                    e * wc, gids[dd], num_segments=ngroups[dd])
+                # exact 1.0 under full participation => x/denom is x/1.0,
+                # bit-identical to the synchronous path
+                denom_g = jnp.where(
+                    absent_g == 0, jnp.ones((), dtype),
+                    jnp.where(present_g > 0, present_g, jnp.ones((), dtype)))
+                denom = denom_g[gids[dd]]                     # (n,)
+                act = (ev > 0) & (present_g > 0)[gids[dd]]    # group live
+                eb = (e > 0)[:, None]                         # leaf attends
+                a = jnp.where(eb, snapA[dd]
+                              + (ascale[dd] / denom)[:, None]
+                              * (a - snapA[dd]), a)
+                # a partially-present child is represented by its surviving
+                # leaves (all carrying the child's full delta), so their
+                # per-leaf coefficients scale up by |child| / |present|;
+                # fully-present children multiply by exactly 1.0
+                cnt_c = jax.ops.segment_sum(e, cids[dd],
+                                            num_segments=nchildren[dd])
+                corr = (csize[dd]
+                        / jnp.maximum(cnt_c, 1.0)[cids[dd]]).astype(dtype)
+                contrib = ((((wcoef[dd] * e) / denom) * corr)
+                           .astype(dtype)[:, None] * (w - snapW[dd]))
                 tot = jax.ops.segment_sum(contrib, gids[dd],
                                           num_segments=ngroups[dd])
-                w = jnp.where(msk, snapW[dd] + tot[gids[dd]], w)
-            refb = ref_s.astype(bool)[..., None]              # (D, n, 1)
+                srv_new = srvW[dd] + tot[gids[dd]]
+                srvW = srvW.at[dd].set(
+                    jnp.where(act[:, None], srv_new, srvW[dd]))
+                w = jnp.where(eb, srv_new, w)
+                act_of[dd] = act
+            # rebase deeper servers onto the shallowest live sync's result
+            # (group-wide, absent leaves included): after a depth-dd pull
+            # the subtree's deeper groups restart from the pulled state
+            for dd in range(D - 1, -1, -1):                   # shallow wins
+                src = srvW[dd]
+                for d2 in range(dd + 1, D):
+                    srvW = srvW.at[d2].set(
+                        jnp.where(act_of[dd][:, None], src, srvW[d2]))
+            # snapshot refresh is per-leaf private state: participants only.
+            # Depths shallower than the leaf's shallowest attended sync
+            # fast-forward to the server baseline instead: the pulled group
+            # state embeds the CURRENT shallow servers (a re-joining leaf's
+            # next shallow delta must not re-deliver content the server
+            # already has).  Under full participation srvW == snapW, so the
+            # fast-forward is a bitwise no-op.
+            refb = ((ref_s * part_s[None, :]) > 0)[..., None]  # (D, n, 1)
+            attended = ((jnp.max(sync_s, axis=0) * part_s) > 0)  # (n,)
+            ffwd = jnp.logical_not(refb) & attended[None, :, None]
             snapA = jnp.where(refb, a[None], snapA)
-            snapW = jnp.where(refb, w[None], snapW)
+            snapW = jnp.where(refb, w[None],
+                             jnp.where(ffwd, srvW, snapW))
             if record_history:
                 out = jax.lax.cond(
                     hflag, lambda aw: objective(*aw),
@@ -186,26 +273,51 @@ def _build_host_executor(plan: TreePlan, *, loss, lam, record_history,
                     (a, w))
             else:
                 out = None
-            return (a, w, snapA, snapW), out
+            return (a, w, snapA, snapW, srvW), out
 
-        # blocked warm-start state; snapshots start at the run-start state
-        # (for a cold start that is all-zeros, the pre-warm-start behavior)
+        xs = (keys, solve_mask.astype(dtype), sync_mask.astype(dtype),
+              refresh_mask.astype(dtype), root_sync,
+              participation.astype(dtype))
+        carry, hist = jax.lax.scan(tick, carry0, xs)
+        return carry, hist, objective
+
+    def _init_carry(X: Array, alpha0: Array, w0_in: Array):
+        """The blocked run-start carry from flat state; snapshots and the
+        group servers start at the run-start state (for a cold start that
+        is all-zeros, the pre-warm-start behavior)."""
+        dtype = X.dtype
+        d_feat = X.shape[1]
         a0 = jnp.zeros((n * m_b,), dtype).at[flat_map].set(
             alpha0.astype(dtype)).reshape(n, m_b)
         w0 = jnp.broadcast_to(w0_in.astype(dtype)[None], (n, d_feat))
-        carry0 = (a0, w0, jnp.broadcast_to(a0[None], (D, n, m_b)),
-                  jnp.broadcast_to(w0[None], (D, n, d_feat)))
-        xs = (keys, solve_mask.astype(dtype), sync_mask.astype(dtype),
-              refresh_mask.astype(dtype), root_sync)
-        (a, w, _, _), hist = jax.lax.scan(tick, carry0, xs)
+        return (a0, w0, jnp.broadcast_to(a0[None], (D, n, m_b)),
+                jnp.broadcast_to(w0[None], (D, n, d_feat)),
+                jnp.broadcast_to(w0[None], (D, n, d_feat)))
+
+    def solve_fn(X: Array, y: Array, keys: Array, alpha0: Array, w0_in: Array,
+                 participation: Array):
+        carry0 = _init_carry(X, alpha0, w0_in)
+        (a, w, _, _, _), hist, objective = _scan(X, y, keys, carry0,
+                                                 participation)
         alpha = a.reshape(-1)[flat_map]
         if record_history:
-            d0, p0 = objective(a0, w0)
+            d0, p0 = objective(carry0[0], carry0[1])
             duals = jnp.concatenate([d0[None], hist[0]])
             primals = jnp.concatenate([p0[None], hist[1]])
             return alpha, w[0], duals, primals
         return alpha, w[0]
 
+    if carry_state:
+        def step_fn(X, y, keys, state, participation):
+            carry, _, _ = _scan(X, y, keys, state, participation)
+            return carry
+
+        def finalize(state):
+            return state[0].reshape(-1)[flat_map], state[1][0]
+
+        return StateExecutor(init=jax.jit(_init_carry),
+                             step=jax.jit(step_fn),
+                             finalize=jax.jit(finalize))
     return jax.jit(solve_fn)
 
 
@@ -221,14 +333,21 @@ def execute_plan(
     backend: str = "vmap",
     alpha0: Array = None,
     w0: Array = None,
+    participation: Array = None,
 ) -> Tuple:
     """Convenience: build/fetch the executor and run it once (``keys`` is
     the (S, n, 2) per-solve key plan from ``plan.key_plan``; ``alpha0``/
-    ``w0`` warm-start the run, defaulting to the cold all-zeros state)."""
+    ``w0`` warm-start the run, defaulting to the cold all-zeros state;
+    ``participation`` is the (S, n) sync-attendance mask, all-ones --
+    the synchronous schedule -- by default)."""
+    from repro.core.engine.plan import full_participation
     fn = get_host_executor(plan, loss=loss, lam=lam,
                            record_history=record_history, backend=backend)
     if alpha0 is None:
         alpha0 = jnp.zeros((plan.m_total,), X.dtype)
     if w0 is None:
         w0 = jnp.zeros((X.shape[1],), X.dtype)
-    return fn(X, y, jnp.asarray(keys), alpha0, w0)
+    if participation is None:
+        participation = full_participation(plan)
+    return fn(X, y, jnp.asarray(keys), alpha0, w0,
+              jnp.asarray(participation))

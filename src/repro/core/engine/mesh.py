@@ -16,9 +16,18 @@ Like the host backend, the compiled program is memoized on
 (plan fingerprint, mesh, axes, loss, lam, flags) and takes the warm-start
 state ``(alpha0, w0)`` as inputs, so ``repro.api.Session`` can run it in
 per-root-round chunks without retracing.
+
+Async / stale sync: the program also takes the ``(n, S)`` leaf-major
+participation mask (see ``engine.plan``).  Each depth's sync weights every
+*leaf* shard by ``p / prod(K_d..K_L-1)`` and psums over ALL axes at that
+depth and deeper (so partially-present subtrees renormalize exactly like
+the host backend), carrying explicit per-depth snapshots and the
+group-coherent server ``w`` (``srvW``) that bounded-staleness re-joins fold
+into.  An all-ones mask reduces every gate to the synchronous program.
 """
 from __future__ import annotations
 
+import math
 from collections import OrderedDict
 from typing import Sequence, Tuple
 
@@ -28,7 +37,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import on_tpu, shard_map
 from repro.core.dual import Loss
-from repro.core.engine.plan import TreePlan, key_plan
+from repro.core.engine.plan import TreePlan, full_participation, key_plan
 from repro.core.tree import TreeNode
 
 Array = jax.Array
@@ -62,17 +71,25 @@ def get_mesh_executor(
     loss: Loss,
     lam: float,
     use_kernel: bool = True,
+    carry_state: bool = False,
 ):
     """Build (or fetch from cache) the jitted ``shard_map`` program for
     ``plan`` on ``mesh``.
 
-    Signature: ``fn(Xs, ys, a0, w0, kys) -> (alpha_blocked, w_rows)`` with
-    ``Xs (n, m_b, d)``, ``a0 (n, m_b)`` sharded over the (reversed) axes,
-    ``w0 (d,)`` replicated, and ``kys (n, S, 2)`` the leaf-major per-solve
-    key plan."""
+    Signature: ``fn(Xs, ys, a0, w0, kys, part) -> (alpha_blocked, w_rows)``
+    with ``Xs (n, m_b, d)``, ``a0 (n, m_b)`` sharded over the (reversed)
+    axes, ``w0 (d,)`` replicated, ``kys (n, S, 2)`` the leaf-major
+    per-solve key plan, and ``part (n, S)`` the leaf-major participation
+    mask (all-ones for the synchronous schedule).
+
+    ``carry_state=True`` returns a :class:`~repro.core.engine.host.
+    StateExecutor` threading the full per-leaf state (replica ``w``,
+    per-depth snapshots, group servers) across chunk invocations -- the
+    complete carry async sessions need (the flat ``(alpha, w)`` pair drops
+    absent leaves' divergent replicas)."""
     _check_plan_mesh(plan, mesh, axes)
     cache_key = (plan.fingerprint, loss.name, loss.gamma, float(lam),
-                 tuple(axes), mesh, bool(use_kernel))
+                 tuple(axes), mesh, bool(use_kernel), bool(carry_state))
     fn = _MESH_EXEC_CACHE.get(cache_key)
     if fn is not None:
         _MESH_EXEC_CACHE.move_to_end(cache_key)
@@ -84,6 +101,12 @@ def get_mesh_executor(
     rounds = [plan.levels[d].rounds for d in range(L)]
     ks = [plan.levels[d].group_size for d in range(L)]
     axis_of_depth = [axes[L - 1 - d] for d in range(L)]
+    # a depth-d sync spans this axis and every deeper one: psum over the
+    # whole leaf set of the group, so partially-present subtrees weight
+    # per-LEAF exactly like the host backend's segment sums
+    axes_from = [tuple(axis_of_depth[d:]) for d in range(L)]
+    # uniform per-leaf w-weight at depth d: (1/K_d) / leaves-per-child
+    wcoef_leaf = [1.0 / math.prod(ks[d:]) for d in range(L)]
     H = plan.h_max
 
     def leaf_solve(Xs, ys, a, w, k_t):
@@ -99,40 +122,133 @@ def get_mesh_executor(
             da, dw = sdca_block_ref(Xs, ys, a, w, ix, loss=loss, lm=lm)
         return da, dw[0]
 
-    def program(Xs, ys, a0, w0, kys):
-        # Xs (1, m_b, d), a0 (1, m_b), w0 (d,), kys (1, S, 2) on this shard
-        d_feat = Xs.shape[-1]
+    def make_run(Xs, ys, kys, part):
+        """Build the recursive rounds-driver over this shard's inputs:
+        Xs (1, m_b, d), kys (1, S, 2), part (1, S)."""
+        dt = Xs.dtype
+        one = jnp.ones((), dt)
 
-        def run(depth, a, w, t):
+        def sync(depth, a, w, t_c, snapA, snapW, srvW, parent_sync):
+            """The depth-`depth` aggregation at tick ``t_c - 1`` with
+            participation-renormalized weights; absent shards keep their
+            state/snapshots, the group server stays coherent for them.
+            ``parent_sync`` flags that the parent also syncs at this tick
+            (its own call handles the shallower bookkeeping then)."""
+            K = ks[depth]
+            wc = jnp.asarray(wcoef_leaf[depth], dt)
+            p = jax.lax.dynamic_index_in_dim(part, t_c - 1, axis=1,
+                                             keepdims=False)[0].astype(dt)
+            absent = jax.lax.psum((one - p) * wc, axes_from[depth])
+            present = jax.lax.psum(p * wc, axes_from[depth])
+            denom = jnp.where(absent == 0, one,
+                              jnp.where(present > 0, present, one))
+            act = present > 0
+            attend = (p > 0) & act
+            # a partially-present child subtree is represented by its
+            # surviving shards (all carrying the child's full delta): their
+            # per-leaf weight scales up by |child| / |present in child|
+            if depth < L - 1:
+                cnt = jax.lax.psum(p, axes_from[depth + 1])
+                size = jnp.asarray(float(math.prod(ks[depth + 1:])), dt)
+                corr = size / jnp.maximum(cnt, one)
+            else:
+                corr = one
+            tot = jax.lax.psum((p * wc / denom) * corr * (w - snapW[depth]),
+                               axes_from[depth])
+            srv_new = srvW[depth] + tot
+            a = jnp.where(attend,
+                          snapA[depth] + (a - snapA[depth]) / (denom * K), a)
+            w = jnp.where(attend, srv_new, w)
+            # server advance at this depth + deeper rebase, group-wide
+            for d2 in range(depth, L):
+                srvW = srvW.at[d2].set(jnp.where(act, srv_new, srvW[d2]))
+            # snapshots are per-shard private state: participants only;
+            # depths shallower than this sync fast-forward to the server
+            # baseline the pulled state embeds -- unless the parent syncs
+            # at this very tick and refreshes them itself
+            for d2 in range(depth, L):
+                snapA = snapA.at[d2].set(jnp.where(attend, a, snapA[d2]))
+                snapW = snapW.at[d2].set(jnp.where(attend, w, snapW[d2]))
+            ff = attend & jnp.logical_not(parent_sync)
+            for d2 in range(depth):
+                snapW = snapW.at[d2].set(jnp.where(ff, srvW[d2], snapW[d2]))
+            return a, w, snapA, snapW, srvW
+
+        def run(depth, a, w, t, snapA, snapW, srvW):
             """One full solve of a depth-`depth` node: rounds[depth] rounds,
-            each recursing below then psum-averaging over this depth's
-            axis (Algorithm 2)."""
-            T, K, axis = rounds[depth], ks[depth], axis_of_depth[depth]
+            each recursing below then aggregating over this depth's group
+            (Algorithm 2)."""
+            T = rounds[depth]
 
-            def one_round(_, carry):
-                a_c, w_c, t_c = carry
+            def one_round(i, carry):
+                a_c, w_c, t_c, sA, sW, sV = carry
                 if depth == L - 1:
                     k_t = jax.lax.dynamic_index_in_dim(kys, t_c, axis=1,
                                                        keepdims=False)[0]
                     da, dw = leaf_solve(Xs, ys, a_c, w_c, k_t)
+                    a_c, w_c = a_c + da, w_c + dw
                     t_c = t_c + 1
                 else:
-                    a_lo, w_lo, t_c = run(depth + 1, a_c, w_c, t_c)
-                    da, dw = a_lo - a_c, w_lo - w_c
-                a_c = a_c + da / K
-                w_c = w_c + jax.lax.psum(dw, axis) / K
-                return a_c, w_c, t_c
-            return jax.lax.fori_loop(0, T, one_round, (a, w, t))
+                    a_c, w_c, t_c, sA, sW, sV = run(
+                        depth + 1, a_c, w_c, t_c, sA, sW, sV)
+                parent_sync = (i == T - 1) if depth > 0 else jnp.bool_(False)
+                a_c, w_c, sA, sW, sV = sync(depth, a_c, w_c, t_c, sA, sW,
+                                            sV, parent_sync)
+                return a_c, w_c, t_c, sA, sW, sV
+            return jax.lax.fori_loop(0, T, one_round,
+                                     (a, w, t, snapA, snapW, srvW))
 
-        a_end, w_end, _ = run(0, a0, w0, jnp.int32(0))
+        return run
+
+    def program(Xs, ys, a0, w0, kys, part):
+        # Xs (1, m_b, d), a0 (1, m_b), w0 (d,), kys (1, S, 2),
+        # part (1, S) on this shard
+        d_feat = Xs.shape[-1]
+        run = make_run(Xs, ys, kys, part)
+        snapA0 = jnp.broadcast_to(a0[None], (L,) + a0.shape)
+        snapW0 = jnp.broadcast_to(w0[None], (L, d_feat))
+        a_end, w_end, _, _, _, _ = run(0, a0, w0, jnp.int32(0),
+                                       snapA0, snapW0, snapW0)
         return a_end, jnp.broadcast_to(w_end[None], (1, d_feat))
 
+    def program_state(Xs, ys, a0, wrows, sA, sW, sV, kys, part):
+        # state is leaf-major: a0 (1, m_b), wrows (1, d), sA (1, L, m_b),
+        # sW/sV (1, L, d) on this shard
+        run = make_run(Xs, ys, kys, part)
+        a_end, w_end, _, sA2, sW2, sV2 = run(
+            0, a0, wrows[0], jnp.int32(0), sA[0][:, None, :], sW[0], sV[0])
+        return (a_end, w_end[None], sA2[:, 0, :][None], sW2[None],
+                sV2[None])
+
     spec_in = P(tuple(reversed(axes)))
-    fn = jax.jit(shard_map(
-        program, mesh=mesh,
-        in_specs=(spec_in, spec_in, spec_in, P(), spec_in),
-        out_specs=(spec_in, spec_in),
-    ))
+    if carry_state:
+        from repro.core.engine.host import StateExecutor
+        n = plan.n_leaves
+        sharding = NamedSharding(mesh, spec_in)
+        step = jax.jit(shard_map(
+            program_state, mesh=mesh,
+            in_specs=(spec_in,) * 9, out_specs=(spec_in,) * 5))
+
+        def init(X, alpha, w):
+            dt = X.dtype
+            d_feat = X.shape[1]
+            a0 = jnp.asarray(alpha, dt).reshape(n, m_b)
+            wr = jnp.broadcast_to(jnp.asarray(w, dt)[None], (n, d_feat))
+            sA = jnp.broadcast_to(a0[:, None, :], (n, L, m_b))
+            sW = jnp.broadcast_to(wr[:, None, :], (n, L, d_feat))
+            return tuple(jax.device_put(x, sharding)
+                         for x in (a0, wr, sA, sW, sW))
+
+        def finalize(state):
+            return state[0].reshape(-1), state[1][0]
+
+        fn = StateExecutor(init=init, step=step, finalize=finalize)
+    else:
+        fn = jax.jit(shard_map(
+            program, mesh=mesh,
+            in_specs=(spec_in, spec_in, spec_in, P(), spec_in, spec_in),
+            out_specs=(spec_in, spec_in),
+        ))
     _MESH_EXEC_CACHE[cache_key] = fn
     while len(_MESH_EXEC_CACHE) > _MESH_EXEC_CACHE_MAX:
         _MESH_EXEC_CACHE.popitem(last=False)
@@ -153,9 +269,12 @@ def execute_plan_mesh(
     use_kernel: bool = True,
     alpha0: Array = None,
     w0: Array = None,
+    participation: Array = None,
 ) -> Tuple[Array, Array]:
     """Run the plan on ``mesh``; returns (alpha (m,), w (d,)).  ``alpha0``/
-    ``w0`` warm-start the run (cold all-zeros by default)."""
+    ``w0`` warm-start the run (cold all-zeros by default);
+    ``participation`` is the (S, n) sync-attendance mask (all-ones -- the
+    synchronous schedule -- by default)."""
     _check_plan_mesh(plan, mesh, axes)
     n, m_b = plan.n_leaves, plan.m_b
     m, d_feat = X.shape
@@ -165,6 +284,9 @@ def execute_plan_mesh(
                            use_kernel=use_kernel)
     keys = key_plan(tree, plan, key)                        # (S, n, 2)
     keys_leaf = jnp.asarray(keys.transpose(1, 0, 2))        # (n, S, 2)
+    if participation is None:
+        participation = full_participation(plan)
+    part_leaf = jnp.asarray(participation, X.dtype).T       # (n, S)
 
     a0 = jnp.zeros((n, m_b), X.dtype) if alpha0 is None else \
         jnp.asarray(alpha0, X.dtype).reshape(n, m_b)
@@ -174,7 +296,8 @@ def execute_plan_mesh(
     Xs = jax.device_put(X.reshape(n, m_b, d_feat), NamedSharding(mesh, spec_in))
     ys = jax.device_put(y.reshape(n, m_b), NamedSharding(mesh, spec_in))
     kys = jax.device_put(keys_leaf, NamedSharding(mesh, spec_in))
-    alpha, w = fn(Xs, ys, a0, w_start, kys)
+    part = jax.device_put(part_leaf, NamedSharding(mesh, spec_in))
+    alpha, w = fn(Xs, ys, a0, w_start, kys, part)
     return alpha.reshape(m), w[0]
 
 

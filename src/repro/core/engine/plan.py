@@ -42,6 +42,23 @@ derivation exactly (``jax.random.split(key, 1+K)`` per internal round,
 ``jax.random.randint(leaf_key, (H,), 0, m_b)`` at each leaf solve), so the
 retained reference recursion in ``repro.core.treedual`` is a bit-comparable
 oracle for every backend.
+
+Participation masks (async / stale sync): the static plan says *when* syncs
+happen; a runtime ``(S, n)`` participation mask says *who shows up*.  At a
+tick where leaf ``l``'s mask is 0, ``l`` is absent from every sync event of
+that tick: its delta is dropped, the remaining children's aggregation
+weights are renormalized (``omega' = omega / sum_present omega``), and the
+absent leaf keeps solving on its stale snapshots -- the bounded-staleness
+regime of delayed distributed methods (arXiv:1708.03277) with CoCoA-style
+flexible aggregation (arXiv:1409.1458).  The masks are an executor *input*
+(an extra ``lax.scan`` xs), so ONE compiled program serves every skip
+pattern; an all-ones mask is bit-identical to the synchronous schedule.
+The ``w = A alpha`` invariant is preserved exactly for whole-chunk leaf
+masks (constant over each root-round chunk -- what
+``repro.api.Session.run(straggler=...)`` emits; on depth-1 stars any
+per-tick mask is safe), because then an absent leaf's pending work can
+never leak into a participant's delta; see :func:`full_participation` /
+:func:`chunk_participation`.
 """
 from __future__ import annotations
 
@@ -89,6 +106,12 @@ class TreePlan:
     w_coeff: np.ndarray           # (D, n) f32: per-leaf weight in the w-average
     group_ids: np.ndarray         # (D, n) int32: leaf -> depth-d ancestor id
     n_groups: Tuple[int, ...]     # segments per depth
+    # child segmentation: which depth-d CHILD subtree a leaf belongs to,
+    # and that subtree's leaf count -- participation masks renormalize a
+    # partially-present child's per-leaf w-weights by |child| / |present|
+    child_ids: np.ndarray         # (D, n) int32: leaf -> depth-d child id
+    child_sizes: np.ndarray       # (D, n) f32: leaves in that child
+    n_children: Tuple[int, ...]   # child segments per depth
     # ---- metadata ------------------------------------------------------
     weighting: str
     levels: Optional[Tuple[LevelSpec, ...]]  # set iff level-homogeneous
@@ -99,6 +122,7 @@ class TreePlan:
             h = hashlib.sha1()
             for a in (self.solve_mask, self.sync_mask, self.refresh_mask,
                       self.alpha_scale, self.w_coeff, self.group_ids,
+                      self.child_ids, self.child_sizes,
                       self.leaf_sizes, self.leaf_offsets, self.leaf_h):
                 h.update(np.ascontiguousarray(a).tobytes())
             h.update(repr((self.n_leaves, self.m_b, self.m_total,
@@ -220,7 +244,10 @@ def compile_tree(tree: TreeNode, *, weighting: str = "uniform") -> TreePlan:
     alpha_scale = np.ones((D, n), np.float32)
     w_coeff = np.zeros((D, n), np.float32)
     group_ids = np.zeros((D, n), np.int32)
+    child_ids = np.zeros((D, n), np.int32)
+    child_sizes = np.ones((D, n), np.float32)
     gid_of: List[Dict[tuple, int]] = [dict() for _ in range(D)]
+    cid_count = [0] * D
 
     # static per-(depth, leaf) aggregation coefficients
     for path, (node, depth, lo, hi) in node_info.items():
@@ -237,6 +264,9 @@ def compile_tree(tree: TreeNode, *, weighting: str = "uniform") -> TreePlan:
                 _, _, clo, chi = node_info[path + (ci,)]
             alpha_scale[depth, clo:chi] = omegas[ci]
             w_coeff[depth, clo:chi] = omegas[ci] / (chi - clo)
+            child_ids[depth, clo:chi] = cid_count[depth]
+            child_sizes[depth, clo:chi] = chi - clo
+            cid_count[depth] += 1
 
     def on_solve(tick, path, _key):
         solve_mask[tick, leaf_of_path[path]] = 1.0
@@ -260,6 +290,8 @@ def compile_tree(tree: TreeNode, *, weighting: str = "uniform") -> TreePlan:
         refresh_mask=refresh_mask, root_sync=root_sync,
         alpha_scale=alpha_scale, w_coeff=w_coeff, group_ids=group_ids,
         n_groups=tuple(max(len(g), 1) for g in gid_of),
+        child_ids=child_ids, child_sizes=child_sizes,
+        n_children=tuple(max(c, 1) for c in cid_count),
         weighting=weighting, levels=levels,
     )
 
@@ -396,6 +428,26 @@ def index_plan(tree: TreeNode, plan: TreePlan, key=None) -> np.ndarray:
         draws = np.asarray(_batched_randint(keys[ticks, li], h, mb))
         idx[ticks, li, :h] = draws
     return idx
+
+
+# ---------------------------------------------------------------------------
+# participation masks (async / stale-sync execution)
+# ---------------------------------------------------------------------------
+def full_participation(plan: TreePlan) -> np.ndarray:
+    """The all-ones ``(S, n)`` participation mask: every leaf attends every
+    sync -- the executors are bit-identical to the synchronous schedule
+    under this mask."""
+    return np.ones((plan.n_ticks, plan.n_leaves), np.float32)
+
+
+def chunk_participation(plan: TreePlan, leaf_mask) -> np.ndarray:
+    """Broadcast a per-leaf ``(n,)`` 0/1 decision over every tick of one
+    chunk: the whole-chunk granularity under which masked syncs preserve
+    ``w = A alpha`` exactly on any tree (a leaf absent for the whole chunk
+    never delivers work that a participant's delta could double-carry)."""
+    leaf_mask = np.asarray(leaf_mask, np.float32).reshape(plan.n_leaves)
+    return np.broadcast_to(
+        leaf_mask[None, :], (plan.n_ticks, plan.n_leaves)).copy()
 
 
 # ---------------------------------------------------------------------------

@@ -154,6 +154,14 @@ def two_level(
                     t_cp=t_cp)
 
 
+def strip_delays(node: TreeNode) -> TreeNode:
+    """A copy of the tree with every up-link delay zeroed: its
+    ``solve_time`` is the compute-only component of a round, the base the
+    straggler simulation adds sampled link delays on top of."""
+    kids = tuple(strip_delays(c) for c in node.children)
+    return dataclasses.replace(node, children=kids, up_delay=0.0)
+
+
 def with_rounds(node: TreeNode, *, leaf_steps: Optional[int] = None,
                 internal_rounds: Optional[int] = None) -> TreeNode:
     """Return a copy of the tree with round counts replaced."""

@@ -12,12 +12,13 @@ interface (`StepTimer.observe`) fed by the launcher; the *decision* side
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Deque, Optional
 
 import numpy as np
 
-from repro.core.delay import optimal_h
+from repro.core.delay import StragglerModel, optimal_h
 
 
 @dataclasses.dataclass
@@ -26,12 +27,12 @@ class StepTimer:
     window: int = 64
 
     def __post_init__(self):
-        self.samples: List[float] = []
+        # deque(maxlen=...) evicts the oldest sample in O(1); the previous
+        # list.pop(0) was O(window) per observation
+        self.samples: Deque[float] = collections.deque(maxlen=self.window)
 
     def observe(self, seconds: float) -> None:
         self.samples.append(seconds)
-        if len(self.samples) > self.window:
-            self.samples.pop(0)
 
     @property
     def median(self) -> float:
@@ -101,3 +102,99 @@ class BoundedSkip:
             return True
         self.skipped = 0
         return False
+
+
+@dataclasses.dataclass
+class StragglerStep:
+    """One chunk's straggler decisions and simulated timing."""
+    mask: np.ndarray        # (n,) float32 in {0,1}: 1 = leaf participates
+    dt_async: float         # simulated round time when stragglers are dropped
+    dt_sync: float          # simulated round time of the full barrier
+    delays: np.ndarray      # (n,) the sampled per-leaf sync-path delays
+    h_suggest: Optional[int]  # AdaptiveSchedule's replanned H (None if unset)
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Per-chunk straggler decisions for ``repro.api.Session.run``.
+
+    Each root-round chunk: sample per-leaf sync-path delays from ``model``
+    (around the topology's nominal link delays), classify stragglers
+    against the fleet :class:`StepTimer` window (median + MAD), let each
+    leaf's :class:`BoundedSkip` decide whether the barrier drops it (at
+    most ``max_consecutive`` consecutive skips, then a forced barrier), and
+    account the simulated wall-clock both ways:
+
+      * ``dt_sync``  = compute + max over ALL leaves' delays (the paper's
+        synchronous barrier, throttled by the slowest link), and
+      * ``dt_async`` = compute + max over PARTICIPATING leaves only (the
+        straggler's uplink no longer gates the round).
+
+    The emitted per-leaf mask covers the whole chunk -- the chunk boundary
+    is the staleness point, so a dropped leaf keeps solving on its stale
+    snapshots and re-joins with a bounded-staleness delta (see
+    ``docs/architecture.md``).  The final chunk always runs a full barrier
+    (``force_final_barrier``) so the run ends with every replica agreeing
+    with ``w = A alpha``.  ``adaptive`` (optional) is re-fed the observed
+    delay medians every chunk; its replanned H is reported in the step info
+    (re-compiling with it is a Schedule-level decision, not a per-chunk
+    one)."""
+    model: StragglerModel = dataclasses.field(default_factory=StragglerModel)
+    max_consecutive: int = 2
+    seed: int = 0
+    warmup: int = 1          # chunks before skip decisions kick in
+    k_mad: float = 5.0
+    rel_floor: float = 0.5
+    force_final_barrier: bool = True
+    adaptive: Optional[AdaptiveSchedule] = None
+
+    def bind(self, base_delays, t_compute: float, t_lp: float = 0.0) -> None:
+        """(Re)start per-run state: nominal per-leaf sync-path delays and
+        the compute-only per-chunk time.  Called by ``Session.run``.
+
+        Re-binding the same policy (a warm-restarted continuation run)
+        advances the delay stream instead of replaying it: the first run
+        is reproducible from ``seed``, and split runs sample a fresh
+        continuation of the simulated network process."""
+        self._base = np.asarray(base_delays, dtype=np.float64)
+        self._t_compute = float(t_compute)
+        self._t_lp = float(t_lp)
+        self._runs = getattr(self, "_runs", -1) + 1
+        self._rng = np.random.default_rng([self.seed, self._runs])
+        self._timer = StepTimer()
+        self._skips = [BoundedSkip(max_consecutive=self.max_consecutive)
+                       for _ in range(len(self._base))]
+        self._chunk = 0
+        self.last_h_suggest: Optional[int] = None
+
+    def step(self, final: bool = False) -> StragglerStep:
+        """Decide one chunk; ``final`` forces the closing full barrier."""
+        n = len(self._base)
+        d = self.model.sample(self._base, self._rng)
+        warm = self._chunk >= self.warmup
+        stall = np.array([
+            warm and self._timer.is_straggling(
+                float(d[i]), k=self.k_mad, rel_floor=self.rel_floor)
+            for i in range(n)
+        ])
+        if final and self.force_final_barrier:
+            for s in self._skips:
+                s.skipped = 0
+            skip = np.zeros(n, dtype=bool)
+        else:
+            skip = np.array([self._skips[i].decide(bool(stall[i]))
+                             for i in range(n)])
+        for i in range(n):
+            self._timer.observe(float(d[i]))
+        self._chunk += 1
+        mask = (~skip).astype(np.float32)
+        dt_sync = self._t_compute + float(d.max(initial=0.0))
+        part = d[~skip]
+        dt_async = self._t_compute + float(part.max(initial=0.0))
+        h = None
+        if self.adaptive is not None:
+            h = self.adaptive.replan(
+                t_lp=max(self._t_lp, 1e-9), t_delay=float(np.median(d)))
+            self.last_h_suggest = h
+        return StragglerStep(mask=mask, dt_async=dt_async, dt_sync=dt_sync,
+                             delays=d, h_suggest=h)

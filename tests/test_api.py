@@ -361,3 +361,22 @@ def test_session_validates_data_topology_mismatch():
     topo = Topology.star(4, 8)              # 32 != 64
     with pytest.raises(ValueError, match="assigns"):
         Session.compile(Problem(X, y), topo)
+
+
+def test_objective_does_not_retrace_per_lambda():
+    """Satellite regression: lam used to be a STATIC jit argument of the
+    session's objective, retracing once per lambda in sweep workloads; as
+    a traced scalar, two lambdas must share one compiled objective."""
+    from repro.api.session import _objective
+    topo = Topology.star(2, 16, rounds=2, local_steps=8)
+    X, y = gaussian_regression(m=32, d=4)
+    sess1 = Session.compile(Problem(X, y, lam=0.05), topo)
+    sess1.run(record_history=True)
+    before = _objective._cache_size()
+    sess2 = Session.compile(Problem(X, y, lam=0.2), topo)
+    res = sess2.run(record_history=True)
+    assert _objective._cache_size() == before, "objective retraced on lam"
+    # and the recorded objectives actually depend on the traced lam
+    assert np.isfinite(res.gaps).all()
+    direct = D.duality_gap(res.alpha, X, y, D.squared, 0.2)
+    assert res.gaps[-1] == pytest.approx(float(direct), rel=1e-4)

@@ -16,6 +16,28 @@ def test_rounds_for_budget_eq10():
     )
 
 
+def test_improvement_constant_validated():
+    """Satellite regression: C > K makes eq. (11)'s 'factor' negative for
+    large H (log_bound silently clamped it); the planners must reject it
+    up front instead of optimizing garbage."""
+    bad = dict(PAPER)
+    bad["C"] = 4.0          # > K = 3
+    with pytest.raises(ValueError, match="0 < C <= K"):
+        dl.optimal_h(t_delay=0.1, **bad)
+    with pytest.raises(ValueError, match="0 < C <= K"):
+        dl.optimal_h(t_delay=0.1, **{**PAPER, "C": 0.0})
+    with pytest.raises(ValueError, match="0 < C <= K"):
+        dl.optimal_h(t_delay=0.1, **{**PAPER, "C": -1.0})
+    # the hierarchical planner names the offending level
+    levels = [dl.FixedLevel("inner", 4, 1e-4), dl.FixedLevel("outer", 2, 0.1)]
+    with pytest.raises(ValueError, match="outer"):
+        dl.plan_hierarchical_h(levels, C=3.0, delta=1e-2, t_total=1.0,
+                               t_lp=1e-5)
+    # the boundary C == K is legal (factor hits 0 only at H -> inf)
+    h, _ = dl.optimal_h(t_delay=0.1, **{**PAPER, "C": 3.0})
+    assert h >= 1
+
+
 def test_per_round_factor_limits():
     # H -> 0: no local progress, factor -> 1
     assert dl.per_round_factor(0, 0.5, 3, 0.01) == pytest.approx(1.0)

@@ -1,0 +1,302 @@
+"""Async / stale-sync execution: participation masks in the plan IR and
+straggler-adaptive sessions.
+
+The load-bearing claims:
+
+  * all-ones participation masks are BIT-identical to the synchronous
+    schedule (star / two-level / imbalanced, vmap + pallas) -- the async
+    program is a strict superset;
+  * whole-chunk skip masks preserve the ``w = A alpha`` invariant exactly
+    on every tree shape (dropped leaves' weights renormalize, re-joins
+    fold bounded-staleness deltas into the group servers);
+  * ``Session.run(straggler=...)`` drops stragglers, accounts simulated
+    async vs synchronous wall-clock, forces the final barrier, and with an
+    always-participate policy reproduces the synchronous run bit-for-bit;
+  * ``BoundedSkip`` never exceeds ``max_consecutive`` skips,
+    ``AdaptiveSchedule`` hysteresis suppresses small replans, and the
+    ``StepTimer`` deque keeps exact median/MAD over its window.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Problem, Session, Topology
+from repro.core import dual as D
+from repro.core.delay import StragglerModel
+from repro.core.engine.host import execute_plan
+from repro.core.engine.plan import (chunk_participation, compile_tree,
+                                    full_participation, key_plan)
+from repro.core.tree import star
+from repro.data.synthetic import gaussian_regression
+from repro.runtime.straggler import (AdaptiveSchedule, BoundedSkip,
+                                     StepTimer, StragglerPolicy)
+
+LAM = 0.1
+
+TOPOLOGIES = {
+    "star": lambda: Topology.star(4, 32, rounds=6, local_steps=48),
+    "two_level": lambda: Topology.two_level(
+        2, 2, 32, root_rounds=5, group_rounds=2, local_steps=40),
+    "imbalanced": lambda: Topology.groups(
+        [[24, 16], [12, 20, 8], 20],
+        root_rounds=5, group_rounds=2, local_steps=30),
+}
+
+
+# ---------------------------------------------------------------------------
+# all-ones masks == the synchronous program, bit for bit
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["vmap", "pallas"])
+@pytest.mark.parametrize("case", sorted(TOPOLOGIES))
+def test_full_participation_bit_identical_to_sync(case, backend):
+    topo = TOPOLOGIES[case]()
+    X, y = gaussian_regression(m=topo.m_total, d=10)
+    key = jax.random.PRNGKey(7)
+    plan = compile_tree(topo.tree)
+    keys = key_plan(topo.tree, plan, key)
+    a_sync, w_sync = execute_plan(plan, X, y, keys, loss=D.squared, lam=LAM,
+                                  record_history=False, backend=backend)
+    a_mask, w_mask = execute_plan(plan, X, y, keys, loss=D.squared, lam=LAM,
+                                  record_history=False, backend=backend,
+                                  participation=full_participation(plan))
+    np.testing.assert_array_equal(np.asarray(a_sync), np.asarray(a_mask))
+    np.testing.assert_array_equal(np.asarray(w_sync), np.asarray(w_mask))
+
+
+@pytest.mark.parametrize("case", ["star", "two_level"])
+def test_always_participate_session_bit_identical(case):
+    """An always-participate policy (max_consecutive=0 never skips) routes
+    through the state-carrying async executor yet reproduces the
+    synchronous chunked run bit-for-bit."""
+    topo = TOPOLOGIES[case]()
+    X, y = gaussian_regression(m=topo.m_total, d=8)
+    sess = Session.compile(Problem(X, y, lam=LAM), topo)
+    key = jax.random.PRNGKey(3)
+    plain = sess.run(rounds=5, key=key, record_history=False)
+    pol = StragglerPolicy(
+        model=StragglerModel(slow_prob=0.9, slow_factor=50.0),
+        max_consecutive=0, seed=0)
+    async_ = sess.run(rounds=5, key=key, record_history=False, straggler=pol)
+    np.testing.assert_array_equal(np.asarray(plain.alpha),
+                                  np.asarray(async_.alpha))
+    np.testing.assert_array_equal(np.asarray(plain.w), np.asarray(async_.w))
+
+
+# ---------------------------------------------------------------------------
+# whole-chunk skips keep w = A alpha exactly
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("case", sorted(TOPOLOGIES))
+def test_chunk_masks_preserve_w_invariant(case):
+    topo = TOPOLOGIES[case]()
+    tree = topo.tree
+    X, y = gaussian_regression(m=topo.m_total, d=10)
+    plan = compile_tree(tree)
+    keys = key_plan(tree, plan, jax.random.PRNGKey(1))
+    rounds = tree.rounds
+    per = plan.n_ticks // rounds
+    part = np.ones((plan.n_ticks, plan.n_leaves), np.float32)
+    rng = np.random.default_rng(0)
+    for r in range(1, rounds - 1):          # final chunk: full barrier
+        drop = rng.random(plan.n_leaves) < 0.3
+        part[r * per:(r + 1) * per, drop] = 0.0
+    a, w = execute_plan(plan, X, y, keys, loss=D.squared, lam=LAM,
+                        record_history=False, participation=part)
+    w_expect = D.w_of_alpha(a, X, LAM)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w_expect),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_no_participants_sync_is_noop():
+    """A sync round where EVERY leaf is absent must be a no-op (and not
+    divide by zero): equivalent to never syncing at that round."""
+    tree = star(3, 16, outer_rounds=3, local_steps=20)
+    X, y = gaussian_regression(m=48, d=6)
+    plan = compile_tree(tree)
+    keys = key_plan(tree, plan, jax.random.PRNGKey(2))
+    part = np.ones((plan.n_ticks, plan.n_leaves), np.float32)
+    part[1, :] = 0.0
+    a, w = execute_plan(plan, X, y, keys, loss=D.squared, lam=LAM,
+                        record_history=False, participation=part)
+    assert np.isfinite(np.asarray(a)).all()
+    assert np.isfinite(np.asarray(w)).all()
+    w_expect = D.w_of_alpha(a, X, LAM)      # final round is a full barrier
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w_expect),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_chunk_participation_helper_shapes():
+    plan = compile_tree(star(4, 8, outer_rounds=3, local_steps=4))
+    ones = full_participation(plan)
+    assert ones.shape == (plan.n_ticks, plan.n_leaves) and ones.all()
+    mask = chunk_participation(plan, [1, 0, 1, 1])
+    assert mask.shape == ones.shape
+    assert (mask[:, 1] == 0).all() and mask[:, [0, 2, 3]].all()
+
+
+# ---------------------------------------------------------------------------
+# straggler-adaptive sessions
+# ---------------------------------------------------------------------------
+def test_straggler_session_drops_stragglers_and_stays_consistent():
+    topo = Topology.two_level(2, 2, 32, root_rounds=12, group_rounds=2,
+                              local_steps=32, t_lp=1e-5,
+                              root_delay=0.02, group_delay=1e-3)
+    X, y = gaussian_regression(m=topo.m_total, d=10)
+    sess = Session.compile(Problem(X, y, lam=LAM), topo)
+    pol = StragglerPolicy(
+        model=StragglerModel(slow_prob=0.3, slow_factor=30.0, jitter=0.02),
+        max_consecutive=2, seed=1)
+    res = sess.run(rounds=12, key=jax.random.PRNGKey(0), straggler=pol)
+
+    parts = [h["participants"] for h in res.history if "participants" in h]
+    assert any(p < topo.n_leaves for p in parts), parts
+    assert parts[-1] == topo.n_leaves          # forced final barrier
+    # the final barrier restores exact primal-dual consistency
+    w_expect = D.w_of_alpha(res.alpha, X, LAM)
+    np.testing.assert_allclose(np.asarray(res.w), np.asarray(w_expect),
+                               rtol=1e-4, atol=1e-6)
+    # simulated async clock beats the synchronous-equivalent one and both
+    # are monotone
+    times = [h["time"] for h in res.history]
+    sync_times = [h["time_sync"] for h in res.history if "time_sync" in h]
+    assert all(b > a for a, b in zip(times, times[1:]))
+    assert all(b > a for a, b in zip(sync_times, sync_times[1:]))
+    assert times[-1] < sync_times[-1]
+    # and the solve still converges
+    assert res.gaps[-1] < 0.05 * res.gaps[0]
+
+
+def test_straggler_session_warm_restart_continues_clock():
+    """Satellite regression: split async runs concatenate into one monotone
+    history (round and simulated-time axes both continue)."""
+    topo = Topology.star(4, 32, rounds=6, local_steps=48,
+                         t_lp=1e-5, t_delay=0.01)
+    X, y = gaussian_regression(m=topo.m_total, d=8)
+    sess = Session.compile(Problem(X, y, lam=LAM), topo)
+    key = jax.random.PRNGKey(5)
+    pol = StragglerPolicy(seed=2)
+    r1 = sess.run(rounds=3, key=key, straggler=pol)
+    pol2 = StragglerPolicy(seed=9)
+    r2 = sess.run(rounds=3, warm_start=r1, straggler=pol2)
+    hist = r1.history + r2.history
+    assert [h["round"] for h in hist] == list(range(7))
+    times = [h["time"] for h in hist]
+    assert all(b > a for a, b in zip(times, times[1:])), times
+
+
+def test_warm_restart_history_concatenates_sync():
+    """Satellite bugfix: warm-restarted synchronous runs no longer reset
+    the time axis nor duplicate the round-0 entry."""
+    topo = Topology.two_level(2, 2, 24, root_rounds=8, group_rounds=2,
+                              local_steps=24, t_lp=1e-5, root_delay=0.5)
+    X, y = gaussian_regression(m=topo.m_total, d=8)
+    sess = Session.compile(Problem(X, y, lam=LAM), topo)
+    key = jax.random.PRNGKey(11)
+    r1 = sess.run(rounds=3, key=key)
+    r2 = sess.run(rounds=5, warm_start=r1)
+    hist = r1.history + r2.history
+    assert [h["round"] for h in hist] == list(range(9))
+    times = [h["time"] for h in hist]
+    assert all(b > a for a, b in zip(times, times[1:])), times
+    # identical to one long run, entries included
+    full = sess.run(rounds=8, key=key)
+    np.testing.assert_array_equal(np.asarray(r2.alpha),
+                                  np.asarray(full.alpha))
+    assert [h["round"] for h in hist] == [h["round"] for h in full.history]
+    np.testing.assert_allclose(times, [h["time"] for h in full.history],
+                               rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# decision-layer properties (BoundedSkip / AdaptiveSchedule / StepTimer)
+# ---------------------------------------------------------------------------
+def test_bounded_skip_never_exceeds_max_consecutive():
+    """Property: over arbitrary stall sequences, at most `max_consecutive`
+    consecutive skips before a forced barrier."""
+    rng = np.random.default_rng(42)
+    for max_c in (0, 1, 3):
+        pol = BoundedSkip(max_consecutive=max_c)
+        streak = 0
+        for stall in rng.random(500) < 0.8:
+            if pol.decide(bool(stall)):
+                streak += 1
+                assert streak <= max_c, (max_c, streak)
+            else:
+                streak = 0
+
+
+def test_adaptive_schedule_hysteresis():
+    s = AdaptiveSchedule(C=0.5, delta=1 / 300, t_total=1.0, K=3,
+                         h_max=10**6, hysteresis=1.3)
+    h0 = s.replan(t_lp=4e-5, t_delay=4e-3, t_cp=3e-5)
+    # a small drift (well under 30%) must NOT move H
+    h1 = s.replan(t_lp=4e-5, t_delay=4.4e-3, t_cp=3e-5)
+    assert h1 == h0
+    # a large drift must
+    h2 = s.replan(t_lp=4e-5, t_delay=4e-1, t_cp=3e-5)
+    assert h2 != h0
+
+
+def test_step_timer_deque_window_and_exact_stats():
+    """Satellite: deque(maxlen) eviction keeps median/MAD exactly equal to
+    the list-based reference."""
+    t = StepTimer(window=8)
+    ref = []
+    rng = np.random.default_rng(0)
+    for x in rng.exponential(1.0, 50):
+        t.observe(float(x))
+        ref.append(float(x))
+        ref = ref[-8:]
+        assert len(t.samples) == len(ref)
+        assert t.median == pytest.approx(float(np.median(ref)), abs=0)
+        mad = float(np.median(np.abs(np.array(ref) - np.median(ref))))
+        assert t.mad == pytest.approx(mad, abs=0)
+
+
+def test_straggler_policy_feeds_adaptive_schedule():
+    pol = StragglerPolicy(adaptive=AdaptiveSchedule(C=0.5, delta=1 / 64,
+                                                    t_total=1.0, K=4),
+                          seed=0)
+    pol.bind(base_delays=[0.01] * 4, t_compute=1e-3, t_lp=1e-5)
+    step = pol.step()
+    assert step.h_suggest is not None and step.h_suggest >= 1
+    assert pol.last_h_suggest == step.h_suggest
+
+
+def test_straggler_model_validation_and_sampling():
+    with pytest.raises(ValueError):
+        StragglerModel(slow_prob=1.5)
+    with pytest.raises(ValueError):
+        StragglerModel(slow_factor=0.5)
+    m = StragglerModel(slow_prob=0.5, slow_factor=10.0, jitter=0.0)
+    d = m.sample(np.full(1000, 2.0), np.random.default_rng(0))
+    assert set(np.round(d, 6)) <= {2.0, 20.0}
+    frac = (d > 10).mean()
+    assert 0.4 < frac < 0.6
+
+
+def test_topology_leaf_sync_delays():
+    topo = Topology.two_level(2, 2, 8, root_delay=1.0, group_delay=0.25)
+    assert topo.leaf_sync_delays() == [1.25] * 4
+    mixed = Topology.groups([[8, 8], 8], root_delay=0.5, group_delay=0.1)
+    assert mixed.leaf_sync_delays() == [0.6, 0.6, 0.5]
+
+
+# ---------------------------------------------------------------------------
+# mesh backend: masks are lowered there too
+# ---------------------------------------------------------------------------
+def test_mesh_accepts_participation_masks():
+    from repro.core.engine.mesh import execute_plan_mesh
+    n = len(jax.devices())
+    tree = star(n, 64 // n, outer_rounds=6, local_steps=32)
+    X, y = gaussian_regression(m=64, d=8)
+    plan = compile_tree(tree)
+    mesh = jax.make_mesh((n,), ("data",))
+    a0, w0 = execute_plan_mesh(plan, tree, X, y, mesh, axes=("data",),
+                               loss=D.squared, lam=LAM,
+                               key=jax.random.PRNGKey(0))
+    a1, w1 = execute_plan_mesh(plan, tree, X, y, mesh, axes=("data",),
+                               loss=D.squared, lam=LAM,
+                               key=jax.random.PRNGKey(0),
+                               participation=full_participation(plan))
+    np.testing.assert_array_equal(np.asarray(a0), np.asarray(a1))
+    np.testing.assert_array_equal(np.asarray(w0), np.asarray(w1))
