@@ -5,8 +5,6 @@ runs of CoCoA (star sessions) on ridge regression.
 
     PYTHONPATH=src python examples/ridge_delay_sweep.py
 """
-import jax
-
 from repro.api import Problem, Schedule, Session, Topology
 from repro.core.delay import optimal_h
 from repro.core.dual import duality_gap
@@ -39,16 +37,21 @@ def main():
                              h_max=10**6)
         assert h_star == h_ref, (h_star, h_ref)
 
-        # simulate a small grid around H* and report the empirical best
-        gaps = {}
-        for H in sorted({max(h_star // 8, 1), max(h_star // 2, 1), h_star,
-                         h_star * 2, h_star * 8}):
-            rounds = max(int(BUDGET / (T_LP * H + t_delay + T_CP)), 1)
-            rounds = min(rounds, 2000)
-            res = Session.compile(
-                problem, topo, Schedule(rounds=rounds, local_steps=H)
-            ).run(key=jax.random.PRNGKey(0), record_history=False)
-            gaps[H] = float(duality_gap(res.alpha, X, y, problem.loss, LAM))
+        # simulate a small grid around H* -- one vectorized sweep over the
+        # schedule axis -- and report the empirical best
+        hs = sorted({max(h_star // 8, 1), max(h_star // 2, 1), h_star,
+                     h_star * 2, h_star * 8})
+        scheds = [
+            Schedule(rounds=min(max(int(
+                BUDGET / (T_LP * H + t_delay + T_CP)), 1), 2000),
+                local_steps=H)
+            for H in hs
+        ]
+        rs = auto.sweep(schedules=scheds, record_history=False)
+        gaps = {
+            H: float(duality_gap(res.alpha, X, y, problem.loss, LAM))
+            for H, res in zip(hs, rs)
+        }
         best = min(gaps, key=gaps.get)
         print(f"{r:>10.0f} {h_star:>12d} {best:>14d} {gaps[h_star]:>12.3e}")
         # the eq.-(12) pick is within ~4x of the empirical best

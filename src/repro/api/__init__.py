@@ -17,6 +17,15 @@ serializable tree network, ``Schedule`` the per-level round counts (or
 ``Session`` the compiled binding with ``backend=`` one of
 ``"vmap" | "pallas" | "mesh"``.  :func:`solve` is the one-shot shorthand.
 
+Grids are first-class: ``Session.sweep`` / :func:`sweep` run a
+:class:`Sweep` over (lambda, seed, schedule) axes as BATCHED device
+programs (lambda is a runtime executor input, so a whole regularization
+grid shares one compiled chunk program and vmaps into a single dispatch
+per round) and return a :class:`RunSet` of stacked results::
+
+    rs = sweep(prob, topo, lams=np.logspace(-3, 0, 8), seeds=[0, 1])
+    rs.best().w
+
 The legacy entry points (``tree_dual_solve``, ``cocoa_star_solve``,
 ``mesh_tree_dual_solve``, ``engine.solve``) are thin shims over this
 surface; see ``docs/api.md`` for the migration table.
@@ -24,8 +33,9 @@ surface; see ``docs/api.md`` for the migration table.
 from repro.api.problem import Problem                       # noqa: F401
 from repro.api.schedule import DelayModel, Schedule         # noqa: F401
 from repro.api.session import Session, solve                # noqa: F401
+from repro.api.sweep import RunSet, Sweep, sweep            # noqa: F401
 from repro.api.topology import Topology                     # noqa: F401
 from repro.core.instrument import SolveResult               # noqa: F401
 
 __all__ = ["Problem", "Topology", "Schedule", "DelayModel", "Session",
-           "SolveResult", "solve"]
+           "SolveResult", "Sweep", "RunSet", "solve", "sweep"]

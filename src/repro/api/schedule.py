@@ -29,12 +29,30 @@ class DelayModel:
     optimizes for; ``delta`` defaults to 1/m_leaf (one coordinate's share of
     a leaf block); ``t_cp`` defaults to the topology's own per-aggregation
     cost (``Topology.internal_t_cp``); ``h_max`` caps the per-level H
-    search."""
+    search.
+
+    ``C="auto"`` calibrates the improvement constant from a short pilot
+    run instead of taking it as given: ``Session.compile`` runs
+    ``pilot_rounds`` root rounds under the topology's default schedule on
+    the host backend, fits C from the observed per-round gap contractions
+    (:func:`repro.core.delay.fit_C`), and plans with the fitted value
+    (inspectable as ``session.fitted_C``)."""
     t_total: float
-    C: float = 0.5
+    C: Union[float, str] = 0.5
     delta: Optional[float] = None
     t_cp: Optional[float] = None
     h_max: int = 10**6
+    pilot_rounds: int = 8
+
+    def __post_init__(self):
+        if isinstance(self.C, str) and self.C != "auto":
+            raise ValueError(
+                f"C must be a float or the string 'auto', got {self.C!r}")
+        # pilot_rounds only matters when a pilot will actually run
+        if self.C == "auto" and self.pilot_rounds < 2:
+            raise ValueError(
+                f"pilot_rounds must be >= 2 (fit_C needs at least two "
+                f"observations), got {self.pilot_rounds}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,13 +113,16 @@ class Schedule:
     delay: Optional[DelayModel] = None
 
     @classmethod
-    def auto(cls, t_total: float, *, C: float = 0.5,
+    def auto(cls, t_total: float, *, C: Union[float, str] = 0.5,
              delta: Optional[float] = None, t_cp: Optional[float] = None,
-             h_max: int = 10**6, weighting: str = "uniform") -> "Schedule":
-        """Shorthand for ``Schedule(rounds="auto", delay=DelayModel(...))``."""
+             h_max: int = 10**6, weighting: str = "uniform",
+             pilot_rounds: int = 8) -> "Schedule":
+        """Shorthand for ``Schedule(rounds="auto", delay=DelayModel(...))``
+        (``C="auto"`` calibrates C from a pilot run at compile time)."""
         return cls(rounds="auto", weighting=weighting,
                    delay=DelayModel(t_total=t_total, C=C, delta=delta,
-                                    t_cp=t_cp, h_max=h_max))
+                                    t_cp=t_cp, h_max=h_max,
+                                    pilot_rounds=pilot_rounds))
 
     # -----------------------------------------------------------------
     def resolve(self, topology: Topology) -> ResolvedSchedule:
@@ -129,6 +150,12 @@ class Schedule:
         if self.delay is None:
             raise ValueError(
                 "Schedule(rounds='auto') needs delay=DelayModel(t_total=...)")
+        if isinstance(self.delay.C, str):
+            raise ValueError(
+                "DelayModel(C='auto') needs a pilot run to calibrate C, "
+                "which requires the problem data: resolve this schedule "
+                "through Session.compile(problem, topology, schedule) "
+                "instead of Schedule.resolve(topology)")
         if self.local_steps is not None or self.level_rounds is not None:
             raise ValueError(
                 "rounds='auto' plans local_steps/level_rounds itself; "

@@ -63,8 +63,10 @@ class Session:
     """A compiled (problem, topology, schedule, backend) binding.
 
     Construct with :meth:`compile`; executors are memoized at the engine
-    layer (plan fingerprint x loss x lambda x flags), so compiling the same
-    configuration twice reuses one jit program -- see :meth:`cache_stats`.
+    layer (plan fingerprint x loss x flags -- lambda is a RUNTIME input of
+    the compiled program, not a cache key), so compiling the same
+    configuration twice, or with a different lambda, reuses one jit
+    program -- see :meth:`cache_stats`.
     """
 
     def __init__(self, problem: Problem, topology: Topology,
@@ -76,6 +78,7 @@ class Session:
         self.backend = backend
         self.plan = plan
         self._fn = fn
+        self.fitted_C = None        # set when DelayModel(C="auto") calibrated
         self._mesh = mesh
         self._mesh_axes = mesh_axes
         self._mesh_use_kernel = mesh_use_kernel
@@ -111,19 +114,27 @@ class Session:
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; use {BACKENDS}")
         schedule = schedule or Schedule()
-        resolved = schedule.resolve(topology)
         if problem.m != topology.m_total:
             raise ValueError(
                 f"problem has m={problem.m} examples but the topology "
                 f"assigns {topology.m_total}")
+        fitted_C = None
+        if (schedule.rounds == "auto" and schedule.delay is not None
+                and getattr(schedule.delay, "C", None) == "auto"):
+            # only rounds="auto" consumes the DelayModel; an explicit-rounds
+            # schedule would ignore the fitted C, so don't pay the pilot
+            schedule, fitted_C = _calibrate_C(problem, topology, schedule)
+        resolved = schedule.resolve(topology)
         plan = plan_mod.compile_tree(resolved.chunk_tree,
                                      weighting=resolved.weighting)
 
         if backend in ("vmap", "pallas"):
             fn = host_mod.get_host_executor(
-                plan, loss=problem.loss, lam=problem.lam,
+                plan, loss=problem.loss,
                 record_history=False, backend=backend)
-            return cls(problem, topology, resolved, backend, plan, fn)
+            sess = cls(problem, topology, resolved, backend, plan, fn)
+            sess.fitted_C = fitted_C
+            return sess
 
         # ---- mesh backend -------------------------------------------
         if plan.levels is None:
@@ -152,10 +163,12 @@ class Session:
                              "together with an explicit mesh")
         fn = mesh_mod.get_mesh_executor(
             plan, mesh, axes=tuple(mesh_axes), loss=problem.loss,
-            lam=problem.lam, use_kernel=mesh_use_kernel)
-        return cls(problem, topology, resolved, backend, plan, fn,
+            use_kernel=mesh_use_kernel)
+        sess = cls(problem, topology, resolved, backend, plan, fn,
                    mesh=mesh, mesh_axes=tuple(mesh_axes),
                    mesh_use_kernel=mesh_use_kernel)
+        sess.fitted_C = fitted_C
+        return sess
 
     # ------------------------------------------------------------------
     @property
@@ -180,8 +193,10 @@ class Session:
         key: Optional[Array] = None,
         warm_start: Union[SolveResult, Tuple[Array, Array], None] = None,
         record_history: bool = True,
+        history_every: int = 1,
         on_round: Optional[Callable[[dict], None]] = None,
         straggler=None,
+        lam: Optional[float] = None,
     ) -> SolveResult:
         """Run ``rounds`` root rounds (default: the schedule's).
 
@@ -192,6 +207,20 @@ class Session:
         histories concatenate into one monotone series.  ``on_round(entry)``
         streams each history entry as it is produced (requires
         ``record_history=True``).
+
+        ``history_every=k`` records only every k-th root round (plus the
+        initial state and ALWAYS the final round), so very long runs don't
+        pay the per-round objective evaluation; the iterates are unaffected.
+
+        ``lam`` overrides the problem's regularization for THIS run:
+        lambda is a runtime input of the cached executors (not a compile
+        key), so running a whole regularization grid through one session
+        never retraces -- :meth:`sweep` batches exactly this.  Warm
+        starting from a :class:`SolveResult` produced under a DIFFERENT
+        lambda rebuilds the primal from the dual (``w = X^T alpha /
+        (lam m)``, the eq.-(13) invariant) automatically; a plain
+        ``(alpha, w)`` pair is taken as-is, so rebuild ``w`` yourself
+        when crossing lambdas.
 
         ``straggler`` (a :class:`~repro.runtime.straggler.StragglerPolicy`)
         switches the run to straggler-adaptive async execution: each chunk,
@@ -208,11 +237,16 @@ class Session:
         T = self.resolved.rounds if rounds is None else int(rounds)
         if T < 0:
             raise ValueError(f"rounds must be >= 0, got {T}")
+        every = int(history_every)
+        if every < 1:
+            raise ValueError(f"history_every must be >= 1, got {every}")
         X, y = self.problem.X, self.problem.y
-        loss, lam = self.problem.loss, self.problem.lam
+        loss = self.problem.loss
+        lam = self.problem.lam if lam is None else float(lam)
         m = self.problem.m
+        lm_in = host_mod.regularizer_scale(lam, m, X.dtype)
 
-        alpha, w, k = self._start_state(warm_start, key)
+        alpha, w, k = self._start_state(warm_start, key, lam)
         K_root = len(self.resolved.chunk_tree.children)
         chunk_tree, plan = self.resolved.chunk_tree, self.plan
         dt = self.resolved.per_round_time
@@ -240,11 +274,11 @@ class Session:
             if mesh:
                 state_exec = mesh_mod.get_mesh_executor(
                     plan, self._mesh, axes=self._mesh_axes,
-                    loss=self.problem.loss, lam=self.problem.lam,
+                    loss=self.problem.loss,
                     use_kernel=self._mesh_use_kernel, carry_state=True)
             else:
                 state_exec = host_mod.get_host_executor(
-                    plan, loss=self.problem.loss, lam=self.problem.lam,
+                    plan, loss=self.problem.loss,
                     record_history=False, backend=self.backend,
                     carry_state=True)
         if mesh:
@@ -290,6 +324,8 @@ class Session:
             keys = keys_all[t - 1]
             extra = None
             prt = part_ones
+            # history decimation: every k-th round, plus always the last
+            rec_now = record_history and (t % every == 0 or t == T)
             if straggler is not None:
                 step = straggler.step(final=(t == T))
                 part = plan_mod.chunk_participation(plan, step.mask)
@@ -306,22 +342,24 @@ class Session:
                     self._spec_sharding)
                 if state_exec is None:
                     a_carry, wrows = self._fn(self._Xs, self._ys, a_carry,
-                                              w, kys, prt)
+                                              w, kys, prt, lm_in)
                     w = wrows[0]
-                    record(t, a_carry.reshape(m), extra)
+                    if rec_now:
+                        record(t, a_carry.reshape(m), extra)
                 else:
                     state = state_exec.step(self._Xs, self._ys, *state,
-                                            kys, prt)
-                    if record_history:
+                                            kys, prt, lm_in)
+                    if rec_now:
                         record(t, state[0].reshape(m), extra)
             elif state_exec is None:
                 a_carry, w = self._fn(X, y, jnp.asarray(keys), a_carry, w,
-                                      prt)
-                record(t, a_carry, extra)
+                                      prt, lm_in)
+                if rec_now:
+                    record(t, a_carry, extra)
             else:
                 state = state_exec.step(X, y, jnp.asarray(keys), state,
-                                        prt)
-                if record_history:
+                                        prt, lm_in)
+                if rec_now:
                     record(t, state_exec.finalize(state)[0], extra)
         k = plan_mod.advance_root_key(k, T, K_root)
 
@@ -331,10 +369,52 @@ class Session:
                 alpha_out = alpha_out.reshape(m)
         else:
             alpha_out = a_carry.reshape(m) if mesh else a_carry
-        return SolveResult(alpha=alpha_out, w=w, history=history, next_key=k)
+        return SolveResult(alpha=alpha_out, w=w, history=history,
+                           next_key=k, lam=lam)
 
     # ------------------------------------------------------------------
-    def _start_state(self, warm_start, key):
+    def sweep(
+        self,
+        spec=None,
+        *,
+        lams=None,
+        seeds=None,
+        schedules=None,
+        mode: str = "grid",
+        continuation: bool = False,
+        rounds: Optional[int] = None,
+        record_history: bool = True,
+        history_every: int = 1,
+    ):
+        """Run a config grid through this session and return a
+        :class:`~repro.api.sweep.RunSet`.
+
+        Pass a :class:`~repro.api.sweep.Sweep` as ``spec``, or build one
+        inline from ``lams=`` / ``seeds=`` / ``schedules=`` (``mode`` is
+        ``"grid"`` -- the cartesian product -- or ``"zip"``;
+        ``continuation=True`` warm-starts a regularization path over the
+        lambda axis, solved in descending-lambda order).
+
+        On the host backends a (lambda x seed) grid within one schedule
+        runs as ONE vmapped device program per chunk (lambda is a runtime
+        executor input); schedule axes produce distinct plans but share
+        the lambda-free executor cache.  Each member is bit-identical to
+        the corresponding standalone :meth:`run`."""
+        from repro.api.sweep import Sweep, run_sweep
+        if spec is None:
+            spec = Sweep(lams=lams, seeds=seeds, schedules=schedules,
+                         mode=mode, continuation=continuation)
+        elif (any(a is not None for a in (lams, seeds, schedules))
+              or mode != "grid" or continuation):
+            raise ValueError(
+                "pass either a Sweep spec or inline axes/options (lams=/"
+                "seeds=/schedules=/mode=/continuation=), not both")
+        return run_sweep(self, spec, rounds=rounds,
+                         record_history=record_history,
+                         history_every=history_every)
+
+    # ------------------------------------------------------------------
+    def _start_state(self, warm_start, key, lam_run):
         X = self.problem.X
         k = None if key is None else plan_mod._raw_key(key)
         if warm_start is None:
@@ -342,6 +422,13 @@ class Session:
             w = jnp.zeros((self.problem.d,), X.dtype)
         elif isinstance(warm_start, SolveResult):
             alpha, w = warm_start.alpha, warm_start.w
+            if (warm_start.lam is not None
+                    and float(warm_start.lam) != float(lam_run)):
+                # the carried primal satisfies w = X^T a / (lam_old m);
+                # under a different lambda it must be rebuilt, or every
+                # subsequent coordinate step works against an inconsistent
+                # w and the run converges to wrong iterates
+                w = dual_mod.w_of_alpha(alpha, X, float(lam_run))
             if k is None and warm_start.next_key is not None:
                 k = plan_mod._raw_key(warm_start.next_key)
         else:
@@ -360,6 +447,37 @@ class Session:
         return alpha, w, k
 
 
+def _calibrate_C(problem: Problem, topology: Topology, schedule: Schedule):
+    """Resolve ``DelayModel(C="auto")``: run a short host-backend pilot
+    under the topology's default schedule, fit eq. (11)'s improvement
+    constant from the observed per-root-round gap contractions
+    (:func:`repro.core.delay.fit_C`), and return (schedule with the fitted
+    C, fitted C)."""
+    import dataclasses
+
+    from repro.core.delay import fit_C
+    dm = schedule.delay
+    pilot_sched = Schedule(weighting=schedule.weighting)
+    pilot = Session.compile(problem, topology, pilot_sched, backend="vmap")
+    res = pilot.run(rounds=int(dm.pilot_rounds),
+                    key=jax.random.PRNGKey(0))
+    plan = pilot.plan
+    # one root round of the pilot schedule, seen as eq. (11)'s star round:
+    # K = root fan-out, H = total coordinate passes one leaf runs per root
+    # round, delta = one coordinate's share of a leaf block (the planner's
+    # own delta when the DelayModel pins it).  The clip cap is the
+    # SMALLEST group size across the topology's sync levels: the planner
+    # checks the same C against every level's K.
+    K = len(topology.tree.children)
+    h_eff = int(plan.solve_mask[:, 0].sum()) * int(plan.leaf_h[0])
+    delta = (dm.delta if dm.delta is not None
+             else 1.0 / max(int(plan.leaf_sizes[0]), 1))
+    c_max = min(lvl.group_size for lvl in topology.sync_levels())
+    C = fit_C(res.history, K=K, H=h_eff, delta=delta, c_max=c_max)
+    return dataclasses.replace(
+        schedule, delay=dataclasses.replace(dm, C=C)), C
+
+
 def solve(
     problem: Problem,
     topology: Topology,
@@ -368,15 +486,24 @@ def solve(
     backend: str = "vmap",
     key: Optional[Array] = None,
     rounds: Optional[int] = None,
+    warm_start: Union[SolveResult, Tuple[Array, Array], None] = None,
     record_history: bool = True,
+    history_every: int = 1,
     mesh=None,
     mesh_axes: Optional[Sequence[str]] = None,
     mesh_use_kernel: bool = True,
     on_round: Optional[Callable[[dict], None]] = None,
+    straggler=None,
+    lam: Optional[float] = None,
 ) -> SolveResult:
-    """One-shot convenience: ``Session.compile(...).run(...)``."""
+    """One-shot convenience: ``Session.compile(...).run(...)``.  Forwards
+    the full ``run`` surface -- including ``warm_start``, ``straggler``
+    and the ``lam`` override -- so the one-shot path has feature parity
+    with a session."""
     sess = Session.compile(problem, topology, schedule, backend=backend,
                            mesh=mesh, mesh_axes=mesh_axes,
                            mesh_use_kernel=mesh_use_kernel)
-    return sess.run(rounds, key=key, record_history=record_history,
-                    on_round=on_round)
+    return sess.run(rounds, key=key, warm_start=warm_start,
+                    record_history=record_history,
+                    history_every=history_every, on_round=on_round,
+                    straggler=straggler, lam=lam)

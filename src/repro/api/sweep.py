@@ -1,0 +1,453 @@
+"""Vectorized sweeps: a declarative config grid over (lambda, seed,
+schedule) axes, executed as BATCHED device programs.
+
+The paper's experiments (Figs. 3-5) and its eq. (11)-(12) analysis are
+grids -- sweeps over regularization, H, and delay regimes -- and the same
+lambda/H trade-off study is the central workload of CoCoA-style methods.
+A :class:`Sweep` names the axes once; :meth:`repro.api.Session.sweep` (or
+the one-shot :func:`sweep`) runs every config and returns a
+:class:`RunSet`:
+
+    rs = Session.compile(prob, topo).sweep(
+        lams=np.logspace(-3, 0, 8), seeds=[0, 1, 2])
+    rs.gaps            # (B, T) batched history
+    best = rs.best()   # the member with the smallest final duality gap
+
+Execution model (why this is not a host loop):
+
+  * lambda is a RUNTIME input of the engine executors (see
+    ``engine.host.get_host_executor``), so every lambda shares one
+    compiled chunk program;
+  * on the host backends (``vmap``/``pallas``) the whole (lambda x seed)
+    batch within one schedule runs through the ``batched=True`` executor
+    -- ONE ``jax.vmap``-ed dispatch per root-round chunk for all B
+    configs, with per-config warm-start states and key plans;
+  * a ``schedules`` axis changes the plan, so each schedule compiles its
+    own program (the lambda-free executor cache still deduplicates), and
+    its (lambda x seed) sub-batch fuses as above;
+  * the mesh backend and ``continuation=True`` paths run members
+    sequentially through the SAME cached executors.
+
+Every member is bit-identical to the corresponding standalone
+``Session.run`` (asserted in ``tests/test_sweep.py``).  That guarantee
+extends to histories because each member's objective is evaluated by the
+SAME memoized jitted objective the single-run path uses -- B small
+dispatches per recorded round (a vmapped objective would be one dispatch
+but could reassociate reductions).  The one-dispatch-per-round fusion
+claim is therefore about the solve path; with ``record_history=True``
+use ``history_every=k`` to amortize the recording cost on long runs.
+
+``continuation=True`` turns the lambda axis into a warm-started
+regularization path: members are solved in descending-lambda order, each
+warm-started from the previous member's ``(alpha, w)`` (with its own RNG
+chain, so each member still reproduces as a standalone warm-started run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.schedule import Schedule
+from repro.core.engine import host as host_mod
+from repro.core.engine import plan as plan_mod
+from repro.core.instrument import (
+    SolveResult, history_row, record_round, stack_histories)
+
+Array = jax.Array
+
+_MAXIMIZE = {"dual"}          # every other metric is minimized
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One resolved config of a :class:`Sweep` (its position on each
+    axis); ``schedule`` is an index into ``Sweep.schedules`` (``None`` =
+    the session's own schedule), ``seed`` an int / PRNG key (``None`` =
+    the default key, as in ``Session.run``)."""
+    index: int
+    lam: float
+    seed: Optional[object] = None
+    schedule: Optional[int] = None
+
+    def key(self):
+        if self.seed is None:
+            return jax.random.PRNGKey(0)
+        if isinstance(self.seed, (int, np.integer)):
+            return jax.random.PRNGKey(int(self.seed))
+        return self.seed
+
+    def to_dict(self) -> dict:
+        seed = self.seed
+        if isinstance(seed, np.integer):
+            seed = int(seed)              # np.int64 is not JSON-serializable
+        elif seed is not None and not isinstance(seed, int):
+            seed = np.asarray(plan_mod._raw_key(seed)).tolist()
+        return {"lam": float(self.lam),
+                "seed": seed,
+                "schedule": self.schedule}
+
+
+@dataclasses.dataclass(frozen=True)
+class Sweep:
+    """A declarative config grid.
+
+    * ``lams`` -- regularization values (default: the problem's lambda);
+    * ``seeds`` -- RNG seeds (ints) or explicit PRNG keys (default: the
+      session default key);
+    * ``schedules`` -- :class:`~repro.api.schedule.Schedule` objects
+      (default: the session's schedule);
+    * ``mode`` -- ``"grid"`` takes the cartesian product of the provided
+      axes (schedules outermost, then lams, then seeds); ``"zip"`` pairs
+      them elementwise (all provided axes must share one length);
+    * ``continuation=True`` -- warm-started regularization path over the
+      lambda axis (descending lambda), per (schedule, seed) chain.
+    """
+    lams: Optional[Sequence[float]] = None
+    seeds: Optional[Sequence] = None
+    schedules: Optional[Sequence[Schedule]] = None
+    mode: str = "grid"
+    continuation: bool = False
+
+    def __post_init__(self):
+        if self.mode not in ("grid", "zip"):
+            raise ValueError(f"mode must be 'grid' or 'zip', got "
+                             f"{self.mode!r}")
+        if all(ax is None for ax in (self.lams, self.seeds,
+                                     self.schedules)):
+            raise ValueError("a Sweep needs at least one axis: lams=, "
+                             "seeds=, or schedules=")
+        for name, ax in (("lams", self.lams), ("seeds", self.seeds),
+                         ("schedules", self.schedules)):
+            if ax is not None and len(ax) == 0:
+                raise ValueError(f"{name} must be non-empty when given")
+        if self.mode == "zip":
+            sizes = {len(ax) for ax in (self.schedules, self.lams,
+                                        self.seeds) if ax is not None}
+            if len(sizes) > 1:
+                raise ValueError(
+                    f"mode='zip' needs equal-length axes, got lengths "
+                    f"{sorted(sizes)}")
+        if self.continuation:
+            if self.lams is None:
+                raise ValueError("continuation=True needs a lams= axis "
+                                 "to chain over")
+            if self.mode != "grid":
+                raise ValueError("continuation=True needs mode='grid' so "
+                                 "every (schedule, seed) chain covers the "
+                                 "full lambda path")
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        """Lengths of the PROVIDED axes, (schedules, lams, seeds) order
+        for ``"grid"``; the common (post-init-validated) length for
+        ``"zip"``."""
+        sizes = [len(ax) for ax in (self.schedules, self.lams, self.seeds)
+                 if ax is not None]
+        if self.mode == "zip":
+            return (sizes[0],)
+        return tuple(sizes)
+
+    def expand(self, default_lam: float) -> List[SweepPoint]:
+        """Resolve the axes into the flat config list (B points)."""
+        if self.mode == "zip":
+            B = self.shape[0]
+            return [
+                SweepPoint(
+                    index=i,
+                    lam=float(self.lams[i]) if self.lams is not None
+                    else float(default_lam),
+                    seed=self.seeds[i] if self.seeds is not None else None,
+                    schedule=i if self.schedules is not None else None)
+                for i in range(B)
+            ]
+        scheds = (range(len(self.schedules))
+                  if self.schedules is not None else [None])
+        lams = ([float(v) for v in self.lams]
+                if self.lams is not None else [float(default_lam)])
+        seeds = list(self.seeds) if self.seeds is not None else [None]
+        return [
+            SweepPoint(index=i, lam=lam, seed=seed, schedule=si)
+            for i, (si, lam, seed) in enumerate(
+                itertools.product(scheds, lams, seeds))
+        ]
+
+
+@dataclasses.dataclass
+class RunSet:
+    """The result of a sweep: stacked ``(B, ...)`` iterates, one batched
+    history (``(B, T)`` arrays, NaN-padded where schedules recorded fewer
+    rounds), and per-config :class:`SolveResult` views (``rs[i]``)."""
+    points: List[SweepPoint]
+    alphas: Array                             # (B, m)
+    ws: Array                                 # (B, d)
+    history: Optional[Dict[str, np.ndarray]]  # {field: (B, T)} or None
+    next_keys: List
+    shape: Tuple[int, ...]
+
+    def __len__(self) -> int:
+        return len(self.points)
+
+    def __iter__(self):
+        return (self[i] for i in range(len(self)))
+
+    def __getitem__(self, i: int) -> SolveResult:
+        """Member ``i`` as a standalone :class:`SolveResult` view."""
+        hist = [] if self.history is None else history_row(self.history, i)
+        return SolveResult(alpha=self.alphas[i], w=self.ws[i],
+                           history=hist, next_key=self.next_keys[i],
+                           lam=self.points[i].lam)
+
+    # ---- batched history accessors ----------------------------------
+    def _field(self, name: str) -> np.ndarray:
+        if self.history is None:
+            raise ValueError("this sweep ran with record_history=False")
+        return self.history[name]
+
+    @property
+    def times(self) -> np.ndarray:
+        return self._field("time")
+
+    @property
+    def duals(self) -> np.ndarray:
+        return self._field("dual")
+
+    @property
+    def primals(self) -> np.ndarray:
+        return self._field("primal")
+
+    @property
+    def gaps(self) -> np.ndarray:
+        return self._field("gap")
+
+    def final(self, metric: str = "gap") -> np.ndarray:
+        """Each member's last recorded value of ``metric`` (B,)."""
+        series = self._field(metric)
+        out = np.full((len(self),), np.nan)
+        for b in range(len(self)):
+            finite = np.nonzero(np.isfinite(series[b]))[0]
+            if len(finite):
+                out[b] = series[b, finite[-1]]
+        return out
+
+    def best_index(self, metric: str = "gap") -> int:
+        """Index of the best member by final ``metric`` (gap/primal/time
+        minimized, dual maximized)."""
+        vals = self.final(metric)
+        if not np.isfinite(vals).any():
+            raise ValueError(f"no member recorded a finite {metric!r}")
+        if metric in _MAXIMIZE:
+            return int(np.nanargmax(vals))
+        return int(np.nanargmin(vals))
+
+    def best(self, metric: str = "gap") -> SolveResult:
+        return self[self.best_index(metric)]
+
+    def to_dict(self) -> dict:
+        """JSON-serializable form: configs, final metrics, the batched
+        history (NaN -> None), and the stacked iterates."""
+        def _clean(arr):
+            return [[None if not np.isfinite(v) else float(v) for v in row]
+                    for row in np.asarray(arr)]
+        out = {
+            "shape": list(self.shape),
+            "configs": [p.to_dict() for p in self.points],
+            "alphas": np.asarray(self.alphas).tolist(),
+            "ws": np.asarray(self.ws).tolist(),
+        }
+        if self.history is not None:
+            out["history"] = {f: _clean(a) for f, a in self.history.items()}
+            out["final_gap"] = [None if not np.isfinite(v) else float(v)
+                                for v in self.final("gap")]
+        return out
+
+
+# ---------------------------------------------------------------------------
+# execution
+# ---------------------------------------------------------------------------
+def _session_for(session, spec: Sweep, schedule_index):
+    """The (sub)session a schedule-group runs through: the caller's own
+    session for ``None``, else a fresh compile of that Schedule -- the
+    lambda-free executor cache deduplicates the programs underneath."""
+    if schedule_index is None:
+        return session
+    from repro.api.session import Session
+    return Session.compile(
+        session.problem, session.topology, spec.schedules[schedule_index],
+        backend=session.backend, mesh=session._mesh,
+        mesh_axes=session._mesh_axes,
+        mesh_use_kernel=session._mesh_use_kernel)
+
+
+def _run_group_batched(gsess, pts: List[SweepPoint], rounds, record_history,
+                       history_every):
+    """The fused path: all of a schedule-group's (lambda x seed) configs
+    through ONE vmapped chunk program per root round."""
+    from repro.api.session import _objective
+    prob, plan, resolved = gsess.problem, gsess.plan, gsess.resolved
+    X, y, loss = prob.X, prob.y, prob.loss
+    m = prob.m
+    T = resolved.rounds if rounds is None else int(rounds)
+    every = int(history_every)
+    if every < 1:
+        raise ValueError(f"history_every must be >= 1, got {every}")
+    chunk = resolved.chunk_tree
+    K_root = len(chunk.children)
+    dt = resolved.per_round_time
+    B = len(pts)
+
+    fnb = host_mod.get_host_executor(
+        plan, loss=loss, record_history=False, backend=gsess.backend,
+        batched=True)
+    raw_keys = [plan_mod._raw_key(pt.key()) for pt in pts]
+    keys_all = jnp.asarray(np.stack([
+        plan_mod.chunked_key_plan(chunk, plan, k, T) for k in raw_keys]))
+    part = jnp.asarray(plan_mod.full_participation(plan))
+    lms = jnp.stack([host_mod.regularizer_scale(pt.lam, m, X.dtype)
+                     for pt in pts])
+    a = jnp.zeros((B, m), X.dtype)
+    w = jnp.zeros((B, prob.d), X.dtype)
+
+    # deferred history: queue the (tiny) objective dispatches inside the
+    # chunk loop and pull everything to the host ONCE at the end, so
+    # recording never forces a per-round device sync.  Values come from
+    # the SAME memoized jitted objective the single-run path records
+    # with, per config -- batched members' histories are bit-identical to
+    # their standalone runs'.
+    recorded: List[tuple] = []        # (t, [(dual, primal)] * B)
+
+    def rec(t, a_batch):
+        recorded.append((t, [
+            _objective(a_batch[b], X, y, loss, float(pt.lam))
+            for b, pt in enumerate(pts)]))
+
+    if record_history:
+        rec(0, a)
+    for t in range(1, T + 1):
+        a, w = fnb(X, y, keys_all[:, t - 1], a, w, part, lms)
+        if record_history and (t % every == 0 or t == T):
+            rec(t, a)
+    next_keys = [plan_mod.advance_root_key(k, T, K_root) for k in raw_keys]
+
+    histories: List[List[dict]] = [[] for _ in pts]
+    for t, vals in recorded:
+        for b, (dv, pv) in enumerate(vals):
+            record_round(histories[b], t, t * dt, float(dv), float(pv))
+    results = [
+        SolveResult(alpha=a[b], w=w[b], history=histories[b],
+                    next_key=next_keys[b], lam=pts[b].lam)
+        for b in range(B)
+    ]
+    return results
+
+
+def _run_group_sequential(gsess, pts: List[SweepPoint], rounds,
+                          record_history, history_every, continuation):
+    """Member-at-a-time fallback (mesh backend, continuation paths); every
+    member still reuses the group's one cached lambda-free executor."""
+    results = {}
+    if continuation:
+        # per-seed chains over the lambda path, strongest regularization
+        # first; each member is warm-started from the previous one's dual
+        # iterate with its OWN key, so it reproduces standalone.  The
+        # primal must be REBUILT under the new lambda (the invariant is
+        # w = X^T alpha / (lam m), so the previous w is inconsistent
+        # once lambda changes).
+        from repro.core.dual import w_of_alpha
+        X = gsess.problem.X
+        chains: Dict[object, List[SweepPoint]] = {}
+        for pt in pts:
+            chains.setdefault(repr(pt.seed), []).append(pt)
+        for chain in chains.values():
+            prev = None
+            for pt in sorted(chain, key=lambda p: -p.lam):
+                res = gsess.run(
+                    rounds, key=pt.key(), lam=pt.lam,
+                    warm_start=None if prev is None
+                    else (prev.alpha, w_of_alpha(prev.alpha, X, pt.lam)),
+                    record_history=record_history,
+                    history_every=history_every)
+                results[pt.index] = res
+                prev = res
+    else:
+        for pt in pts:
+            results[pt.index] = gsess.run(
+                rounds, key=pt.key(), lam=pt.lam,
+                record_history=record_history, history_every=history_every)
+    return [results[pt.index] for pt in pts]
+
+
+def run_sweep(session, spec: Sweep, *, rounds=None, record_history=True,
+              history_every=1) -> RunSet:
+    """Execute ``spec`` through ``session`` (the engine behind
+    ``Session.sweep``); see the module docstring for the batching
+    rules."""
+    points = spec.expand(float(session.problem.lam))
+    groups: Dict[Optional[int], List[SweepPoint]] = {}
+    for pt in points:
+        groups.setdefault(pt.schedule, []).append(pt)
+
+    results: List[Optional[SolveResult]] = [None] * len(points)
+    for sidx in sorted(groups, key=lambda s: (s is not None, s)):
+        pts = groups[sidx]
+        gsess = _session_for(session, spec, sidx)
+        fuse = (gsess.backend in ("vmap", "pallas")
+                and not spec.continuation)
+        group_res = (_run_group_batched(gsess, pts, rounds, record_history,
+                                        history_every) if fuse else
+                     _run_group_sequential(gsess, pts, rounds,
+                                           record_history, history_every,
+                                           spec.continuation))
+        for pt, res in zip(pts, group_res):
+            results[pt.index] = res
+
+    history = None
+    if record_history:
+        history = stack_histories([r.history for r in results])
+    return RunSet(
+        points=points,
+        alphas=jnp.stack([jnp.asarray(r.alpha) for r in results]),
+        ws=jnp.stack([jnp.asarray(r.w) for r in results]),
+        history=history,
+        next_keys=[r.next_key for r in results],
+        shape=spec.shape,
+    )
+
+
+def sweep(
+    problem,
+    topology,
+    spec: Optional[Sweep] = None,
+    schedule: Optional[Schedule] = None,
+    *,
+    backend: str = "vmap",
+    lams: Optional[Sequence[float]] = None,
+    seeds: Optional[Sequence] = None,
+    schedules: Optional[Sequence[Schedule]] = None,
+    mode: str = "grid",
+    continuation: bool = False,
+    rounds: Optional[int] = None,
+    record_history: bool = True,
+    history_every: int = 1,
+    mesh=None,
+    mesh_axes=None,
+    mesh_use_kernel: bool = True,
+) -> RunSet:
+    """One-shot convenience: ``Session.compile(...).sweep(...)``.
+
+    ``schedule`` is the baseline schedule configs default to; a
+    ``schedules`` axis (or ``spec.schedules``) overrides it per config."""
+    from repro.api.session import Session
+    sess = Session.compile(problem, topology, schedule, backend=backend,
+                           mesh=mesh, mesh_axes=mesh_axes,
+                           mesh_use_kernel=mesh_use_kernel)
+    # Session.sweep raises if a spec AND inline axes are both given --
+    # forward everything so the one-shot path validates identically
+    return sess.sweep(spec, lams=lams, seeds=seeds, schedules=schedules,
+                      mode=mode, continuation=continuation,
+                      rounds=rounds, record_history=record_history,
+                      history_every=history_every)

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterable, Sequence, Tuple
+from typing import Iterable, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -200,6 +200,45 @@ def plan_hierarchical_h(
         inner_iter_time = round_time
         inner_delta = 1.0 - per_round_factor(h, C, lvl.group_size, inner_delta)
     return plan
+
+
+# ---------------------------------------------------------------------------
+# eq. (11) calibration: estimate C from an observed run
+# ---------------------------------------------------------------------------
+def fit_C(history, *, K: int, H: float, delta: float,
+          floor: float = 1e-3, c_max: Optional[float] = None) -> float:
+    """Estimate eq. (11)'s improvement constant C from observed per-round
+    duality-gap contractions.
+
+    eq. (11) predicts ``gap_{t+1} / gap_t ~= g = 1 - (1 - (1-delta)^H) C/K``
+    per round; inverting with the (robust) median observed ratio gives
+    ``C = (1 - g) K / (1 - (1-delta)^H)``.  ``history`` is a solver history
+    (list of ``{..., "gap"}`` dicts, a :class:`~repro.core.instrument.
+    SolveResult`, or a plain gap sequence) with at least two entries.  The
+    estimate is clipped to ``[floor, c_max]`` (default ``c_max=K``) so
+    downstream planners (:func:`plan_hierarchical_h`) always receive an
+    admissible constant -- hierarchical planners must pass the SMALLEST
+    group size over their levels as ``c_max``, since the same C is checked
+    against every level's K."""
+    cap = float(K) if c_max is None else float(c_max)
+    if hasattr(history, "history"):
+        history = history.history
+    gaps = [float(h["gap"]) if isinstance(h, dict) else float(h)
+            for h in history]
+    gaps = [g for g in gaps if math.isfinite(g) and g > 0.0]
+    if len(gaps) < 2:
+        raise ValueError(
+            "fit_C needs at least two positive finite gap observations; "
+            f"got {len(gaps)} (record a longer pilot history)")
+    ratios = [b / a for a, b in zip(gaps, gaps[1:]) if b < a]
+    if not ratios:
+        return floor          # no contraction observed at all
+    g = float(np.median(ratios))
+    eff = 1.0 - (1.0 - delta) ** H          # -> 1 for large H
+    if eff <= 0.0:
+        raise ValueError(f"delta={delta}, H={H} give no per-round progress")
+    C = (1.0 - g) * K / eff
+    return float(min(max(C, floor), cap))
 
 
 # ---------------------------------------------------------------------------

@@ -39,12 +39,22 @@ from repro.core.engine.plan import TreePlan
 
 Array = jax.Array
 
-# Executors are cached per (plan structure, loss, lam, flags) so repeated
-# solves with the same topology reuse one compiled program; LRU-bounded
-# because sweeps (fig4/fig5-style) generate a fresh plan per configuration.
+# Executors are cached per (plan structure, loss, flags) so repeated solves
+# with the same topology reuse one compiled program; lambda is a RUNTIME
+# input (an entire regularization grid shares one executor).  LRU-bounded
+# because schedule sweeps (fig4/fig5-style) still generate a fresh plan per
+# configuration.
 _EXEC_CACHE: OrderedDict = OrderedDict()
 _EXEC_CACHE_MAX = 32
 _EXEC_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def regularizer_scale(lam: float, m_total: int, dtype) -> jnp.ndarray:
+    """The runtime regularization scalar the executors consume: lambda * m
+    computed in host double precision and THEN cast, so the traced value is
+    bit-identical to the one the legacy static-lambda executors closed
+    over (``lm = lam * m`` as a Python float)."""
+    return jnp.asarray(float(lam) * m_total, dtype)
 
 
 def executor_cache_stats() -> dict:
@@ -56,44 +66,55 @@ def get_host_executor(
     plan: TreePlan,
     *,
     loss: Loss,
-    lam: float,
     record_history: bool = True,
     backend: str = "vmap",
     carry_state: bool = False,
+    batched: bool = False,
 ):
     """Build (or fetch from cache) the jitted executor for ``plan``.
 
     The default executor has signature ``fn(X, y, keys, alpha0, w0,
-    participation) -> (alpha, w[, duals, primals])`` with ``keys`` the
+    participation, lm) -> (alpha, w[, duals, primals])`` with ``keys`` the
     (S, n, 2) per-solve key plan (``plan.key_plan``), ``(alpha0, w0)`` the
-    flat (m,) / (d,) warm-start state (zeros for a cold start), and
+    flat (m,) / (d,) warm-start state (zeros for a cold start),
     ``participation`` the (S, n) 0/1 sync-attendance mask
-    (``plan.full_participation`` for the synchronous schedule); coordinate
-    draws happen inside the compiled program.  The executor is specialized
-    to the plan structure but re-usable across keys/data/start-state/masks
-    of the same shape.
+    (``plan.full_participation`` for the synchronous schedule), and ``lm``
+    the RUNTIME regularization scalar lambda*m (:func:`regularizer_scale`)
+    -- a whole lambda grid shares one compiled program; coordinate draws
+    happen inside it.  The executor is specialized to the plan structure
+    but re-usable across keys/data/start-state/masks/lambdas of the same
+    shape.
 
     ``carry_state=True`` instead returns a :class:`StateExecutor` whose
-    ``step(X, y, keys, state, participation) -> state`` threads the FULL
-    blocked carry ``(a, w, snapA, snapW, srvW)`` across invocations: with
-    participation masks the flat ``(alpha, w)`` pair is no longer a
+    ``step(X, y, keys, state, participation, lm) -> state`` threads the
+    FULL blocked carry ``(a, w, snapA, snapW, srvW)`` across invocations:
+    with participation masks the flat ``(alpha, w)`` pair is no longer a
     complete chunk carry (absent leaves hold divergent replicas and stale
     snapshots), so async sessions must thread this state instead.  Under
     all-ones masks ``init -> step^T -> finalize`` is bit-identical to the
-    flat executor chunked the same way."""
+    flat executor chunked the same way.
+
+    ``batched=True`` returns the vmapped variant: one device program for a
+    leading config axis B over (keys, alpha0, w0, lm) -- a lambda grid,
+    an RNG-seed grid, and per-config warm-start states fuse into a single
+    dispatch per chunk (``fn(X, y, keys (B,S,n,2), alpha0 (B,m), w0 (B,d),
+    participation (S,n) shared, lm (B,))``).  Composes with
+    ``carry_state`` (init/step/finalize all carry the leading B axis)."""
     if backend not in ("vmap", "pallas"):
         raise ValueError(f"unknown backend {backend!r} (use 'vmap' or "
                          "'pallas'; the mesh backend is engine.mesh)")
     # loss keyed by (name, gamma): Loss names encode their parameters (e.g.
     # 'smooth_hinge_1'), so per-call constructed losses still hit the cache
-    cache_key = (plan.fingerprint, loss.name, loss.gamma, float(lam),
-                 bool(record_history), backend, bool(carry_state))
+    cache_key = (plan.fingerprint, loss.name, loss.gamma,
+                 bool(record_history), backend, bool(carry_state),
+                 bool(batched))
     fn = _EXEC_CACHE.get(cache_key)
     if fn is None:
         _EXEC_CACHE_STATS["misses"] += 1
-        fn = _build_host_executor(plan, loss=loss, lam=lam,
+        fn = _build_host_executor(plan, loss=loss,
                                   record_history=record_history,
-                                  backend=backend, carry_state=carry_state)
+                                  backend=backend, carry_state=carry_state,
+                                  batched=batched)
         _EXEC_CACHE[cache_key] = fn
         while len(_EXEC_CACHE) > _EXEC_CACHE_MAX:
             _EXEC_CACHE.popitem(last=False)
@@ -106,17 +127,16 @@ def get_host_executor(
 class StateExecutor(NamedTuple):
     """The state-threading executor triple (see ``get_host_executor``):
     ``init(X, alpha0, w0) -> state``, ``step(X, y, keys, state,
-    participation) -> state``, ``finalize(state) -> (alpha, w)``."""
+    participation, lm) -> state``, ``finalize(state) -> (alpha, w)``."""
     init: Callable
     step: Callable
     finalize: Callable
 
 
-def _build_host_executor(plan: TreePlan, *, loss, lam, record_history,
-                         backend, carry_state=False):
+def _build_host_executor(plan: TreePlan, *, loss, record_history,
+                         backend, carry_state=False, batched=False):
     n, m_b, S, D = plan.n_leaves, plan.m_b, plan.n_ticks, plan.depth
     h_max, m = plan.h_max, plan.m_total
-    lm = lam * m
 
     # ---- static layout maps (host numpy -> closed-over constants) ------
     j = np.arange(m_b)
@@ -158,10 +178,13 @@ def _build_host_executor(plan: TreePlan, *, loss, lam, record_history,
     else:
         from repro.kernels.sdca.ref import sdca_block_ref
 
-    def _scan(X: Array, y: Array, keys: Array, carry0, participation: Array):
+    def _scan(X: Array, y: Array, keys: Array, carry0, participation: Array,
+              lm: Array):
         """Trace the full tick scan from an explicit blocked carry; returns
-        (final carry, history stack, the objective closure)."""
+        (final carry, history stack, the objective closure).  ``lm`` is the
+        runtime lambda*m scalar (:func:`regularizer_scale`)."""
         dtype = X.dtype
+        lam = lm / m                     # only the in-program objective
         vmask = valid_f.astype(dtype)
         Xb = X[gather_idx] * vmask[:, :, None]                # (n, m_b, d)
         yb = y[gather_idx] * vmask                            # (n, m_b)
@@ -295,10 +318,10 @@ def _build_host_executor(plan: TreePlan, *, loss, lam, record_history,
                 jnp.broadcast_to(w0[None], (D, n, d_feat)))
 
     def solve_fn(X: Array, y: Array, keys: Array, alpha0: Array, w0_in: Array,
-                 participation: Array):
+                 participation: Array, lm: Array):
         carry0 = _init_carry(X, alpha0, w0_in)
         (a, w, _, _, _), hist, objective = _scan(X, y, keys, carry0,
-                                                 participation)
+                                                 participation, lm)
         alpha = a.reshape(-1)[flat_map]
         if record_history:
             d0, p0 = objective(carry0[0], carry0[1])
@@ -308,16 +331,27 @@ def _build_host_executor(plan: TreePlan, *, loss, lam, record_history,
         return alpha, w[0]
 
     if carry_state:
-        def step_fn(X, y, keys, state, participation):
-            carry, _, _ = _scan(X, y, keys, state, participation)
+        def step_fn(X, y, keys, state, participation, lm):
+            carry, _, _ = _scan(X, y, keys, state, participation, lm)
             return carry
 
         def finalize(state):
             return state[0].reshape(-1)[flat_map], state[1][0]
 
+        if batched:
+            # leading config axis B over (state, keys, lm); X/y and the
+            # participation mask are shared across the batch
+            return StateExecutor(
+                init=jax.jit(jax.vmap(_init_carry, in_axes=(None, 0, 0))),
+                step=jax.jit(jax.vmap(step_fn,
+                                      in_axes=(None, None, 0, 0, None, 0))),
+                finalize=jax.jit(jax.vmap(finalize)))
         return StateExecutor(init=jax.jit(_init_carry),
                              step=jax.jit(step_fn),
                              finalize=jax.jit(finalize))
+    if batched:
+        return jax.jit(jax.vmap(solve_fn,
+                                in_axes=(None, None, 0, 0, 0, None, 0)))
     return jax.jit(solve_fn)
 
 
@@ -339,9 +373,10 @@ def execute_plan(
     the (S, n, 2) per-solve key plan from ``plan.key_plan``; ``alpha0``/
     ``w0`` warm-start the run, defaulting to the cold all-zeros state;
     ``participation`` is the (S, n) sync-attendance mask, all-ones --
-    the synchronous schedule -- by default)."""
+    the synchronous schedule -- by default).  ``lam`` is a runtime input
+    of the (lambda-free) cached executor, not a cache key."""
     from repro.core.engine.plan import full_participation
-    fn = get_host_executor(plan, loss=loss, lam=lam,
+    fn = get_host_executor(plan, loss=loss,
                            record_history=record_history, backend=backend)
     if alpha0 is None:
         alpha0 = jnp.zeros((plan.m_total,), X.dtype)
@@ -350,4 +385,5 @@ def execute_plan(
     if participation is None:
         participation = full_participation(plan)
     return fn(X, y, jnp.asarray(keys), alpha0, w0,
-              jnp.asarray(participation))
+              jnp.asarray(participation),
+              regularizer_scale(lam, plan.m_total, X.dtype))

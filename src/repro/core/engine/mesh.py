@@ -13,9 +13,11 @@ bit-compatible with the host backend because both consume the same
 per-solve key plan (the legacy-RNG replay from ``engine.plan``).
 
 Like the host backend, the compiled program is memoized on
-(plan fingerprint, mesh, axes, loss, lam, flags) and takes the warm-start
-state ``(alpha0, w0)`` as inputs, so ``repro.api.Session`` can run it in
-per-root-round chunks without retracing.
+(plan fingerprint, mesh, axes, loss, flags) and takes the warm-start
+state ``(alpha0, w0)`` -- and the regularization scalar ``lm`` = lambda*m
+-- as runtime inputs, so ``repro.api.Session`` can run it in
+per-root-round chunks without retracing, and a lambda grid shares one
+device program.
 
 Async / stale sync: the program also takes the ``(n, S)`` leaf-major
 participation mask (see ``engine.plan``).  Each depth's sync weights every
@@ -69,18 +71,20 @@ def get_mesh_executor(
     *,
     axes: Sequence[str],
     loss: Loss,
-    lam: float,
     use_kernel: bool = True,
     carry_state: bool = False,
 ):
     """Build (or fetch from cache) the jitted ``shard_map`` program for
     ``plan`` on ``mesh``.
 
-    Signature: ``fn(Xs, ys, a0, w0, kys, part) -> (alpha_blocked, w_rows)``
-    with ``Xs (n, m_b, d)``, ``a0 (n, m_b)`` sharded over the (reversed)
-    axes, ``w0 (d,)`` replicated, ``kys (n, S, 2)`` the leaf-major
-    per-solve key plan, and ``part (n, S)`` the leaf-major participation
-    mask (all-ones for the synchronous schedule).
+    Signature: ``fn(Xs, ys, a0, w0, kys, part, lm) -> (alpha_blocked,
+    w_rows)`` with ``Xs (n, m_b, d)``, ``a0 (n, m_b)`` sharded over the
+    (reversed) axes, ``w0 (d,)`` replicated, ``kys (n, S, 2)`` the
+    leaf-major per-solve key plan, ``part (n, S)`` the leaf-major
+    participation mask (all-ones for the synchronous schedule), and ``lm``
+    the replicated RUNTIME regularization scalar lambda*m
+    (:func:`repro.core.engine.host.regularizer_scale`) -- lambda is not a
+    cache key, so a regularization grid reuses one device program.
 
     ``carry_state=True`` returns a :class:`~repro.core.engine.host.
     StateExecutor` threading the full per-leaf state (replica ``w``,
@@ -88,7 +92,7 @@ def get_mesh_executor(
     complete carry async sessions need (the flat ``(alpha, w)`` pair drops
     absent leaves' divergent replicas)."""
     _check_plan_mesh(plan, mesh, axes)
-    cache_key = (plan.fingerprint, loss.name, loss.gamma, float(lam),
+    cache_key = (plan.fingerprint, loss.name, loss.gamma,
                  tuple(axes), mesh, bool(use_kernel), bool(carry_state))
     fn = _MESH_EXEC_CACHE.get(cache_key)
     if fn is not None:
@@ -97,7 +101,6 @@ def get_mesh_executor(
 
     L = len(axes)
     m_b = plan.m_b
-    lm = lam * plan.m_total
     rounds = [plan.levels[d].rounds for d in range(L)]
     ks = [plan.levels[d].group_size for d in range(L)]
     axis_of_depth = [axes[L - 1 - d] for d in range(L)]
@@ -109,7 +112,7 @@ def get_mesh_executor(
     wcoef_leaf = [1.0 / math.prod(ks[d:]) for d in range(L)]
     H = plan.h_max
 
-    def leaf_solve(Xs, ys, a, w, k_t):
+    def leaf_solve(Xs, ys, a, w, k_t, lm):
         """One Procedure-P call on this shard's (1, m_b) block, drawing the
         tick's coordinates from the replayed per-solve key."""
         ix = jax.random.randint(k_t, (H,), 0, m_b)[None]  # legacy draw shape
@@ -122,9 +125,10 @@ def get_mesh_executor(
             da, dw = sdca_block_ref(Xs, ys, a, w, ix, loss=loss, lm=lm)
         return da, dw[0]
 
-    def make_run(Xs, ys, kys, part):
+    def make_run(Xs, ys, kys, part, lm):
         """Build the recursive rounds-driver over this shard's inputs:
-        Xs (1, m_b, d), kys (1, S, 2), part (1, S)."""
+        Xs (1, m_b, d), kys (1, S, 2), part (1, S); ``lm`` is the
+        replicated runtime lambda*m scalar."""
         dt = Xs.dtype
         one = jnp.ones((), dt)
 
@@ -185,7 +189,7 @@ def get_mesh_executor(
                 if depth == L - 1:
                     k_t = jax.lax.dynamic_index_in_dim(kys, t_c, axis=1,
                                                        keepdims=False)[0]
-                    da, dw = leaf_solve(Xs, ys, a_c, w_c, k_t)
+                    da, dw = leaf_solve(Xs, ys, a_c, w_c, k_t, lm)
                     a_c, w_c = a_c + da, w_c + dw
                     t_c = t_c + 1
                 else:
@@ -200,21 +204,21 @@ def get_mesh_executor(
 
         return run
 
-    def program(Xs, ys, a0, w0, kys, part):
+    def program(Xs, ys, a0, w0, kys, part, lm):
         # Xs (1, m_b, d), a0 (1, m_b), w0 (d,), kys (1, S, 2),
-        # part (1, S) on this shard
+        # part (1, S) on this shard; lm replicated scalar
         d_feat = Xs.shape[-1]
-        run = make_run(Xs, ys, kys, part)
+        run = make_run(Xs, ys, kys, part, lm)
         snapA0 = jnp.broadcast_to(a0[None], (L,) + a0.shape)
         snapW0 = jnp.broadcast_to(w0[None], (L, d_feat))
         a_end, w_end, _, _, _, _ = run(0, a0, w0, jnp.int32(0),
                                        snapA0, snapW0, snapW0)
         return a_end, jnp.broadcast_to(w_end[None], (1, d_feat))
 
-    def program_state(Xs, ys, a0, wrows, sA, sW, sV, kys, part):
+    def program_state(Xs, ys, a0, wrows, sA, sW, sV, kys, part, lm):
         # state is leaf-major: a0 (1, m_b), wrows (1, d), sA (1, L, m_b),
-        # sW/sV (1, L, d) on this shard
-        run = make_run(Xs, ys, kys, part)
+        # sW/sV (1, L, d) on this shard; lm replicated scalar
+        run = make_run(Xs, ys, kys, part, lm)
         a_end, w_end, _, sA2, sW2, sV2 = run(
             0, a0, wrows[0], jnp.int32(0), sA[0][:, None, :], sW[0], sV[0])
         return (a_end, w_end[None], sA2[:, 0, :][None], sW2[None],
@@ -227,7 +231,7 @@ def get_mesh_executor(
         sharding = NamedSharding(mesh, spec_in)
         step = jax.jit(shard_map(
             program_state, mesh=mesh,
-            in_specs=(spec_in,) * 9, out_specs=(spec_in,) * 5))
+            in_specs=(spec_in,) * 9 + (P(),), out_specs=(spec_in,) * 5))
 
         def init(X, alpha, w):
             dt = X.dtype
@@ -246,7 +250,8 @@ def get_mesh_executor(
     else:
         fn = jax.jit(shard_map(
             program, mesh=mesh,
-            in_specs=(spec_in, spec_in, spec_in, P(), spec_in, spec_in),
+            in_specs=(spec_in, spec_in, spec_in, P(), spec_in, spec_in,
+                      P()),
             out_specs=(spec_in, spec_in),
         ))
     _MESH_EXEC_CACHE[cache_key] = fn
@@ -280,7 +285,7 @@ def execute_plan_mesh(
     m, d_feat = X.shape
     assert n * m_b == m, (n, m_b, m)
 
-    fn = get_mesh_executor(plan, mesh, axes=axes, loss=loss, lam=lam,
+    fn = get_mesh_executor(plan, mesh, axes=axes, loss=loss,
                            use_kernel=use_kernel)
     keys = key_plan(tree, plan, key)                        # (S, n, 2)
     keys_leaf = jnp.asarray(keys.transpose(1, 0, 2))        # (n, S, 2)
@@ -297,7 +302,9 @@ def execute_plan_mesh(
     ys = jax.device_put(y.reshape(n, m_b), NamedSharding(mesh, spec_in))
     kys = jax.device_put(keys_leaf, NamedSharding(mesh, spec_in))
     part = jax.device_put(part_leaf, NamedSharding(mesh, spec_in))
-    alpha, w = fn(Xs, ys, a0, w_start, kys, part)
+    from repro.core.engine.host import regularizer_scale
+    alpha, w = fn(Xs, ys, a0, w_start, kys, part,
+                  regularizer_scale(lam, plan.m_total, X.dtype))
     return alpha.reshape(m), w[0]
 
 

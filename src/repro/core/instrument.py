@@ -6,12 +6,16 @@ history/timing layer.
 * simulated wall-clock: the tree's own delay model (``TreeNode.solve_time``,
   the generalization of paper eq. (9)) gives the per-root-round time;
 * history: a list of ``{round, time, dual, primal, gap}`` dicts wrapped in
-  :class:`SolveResult` (array accessors for plotting/benchmarks).
+  :class:`SolveResult` (array accessors for plotting/benchmarks);
+* batched histories: the sweep layer (``repro.api.sweep``) stores a config
+  batch's series as ``(B, T)`` arrays -- :func:`stack_histories` /
+  :func:`history_row` convert between that schema and the per-run dict
+  lists (NaN-padded where members recorded fewer rounds).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import Dict, List, Sequence
 
 import jax
 import numpy as np
@@ -20,6 +24,8 @@ from repro.core.tree import TreeNode
 
 Array = jax.Array
 
+HISTORY_FIELDS = ("round", "time", "dual", "primal", "gap")
+
 
 @dataclasses.dataclass
 class SolveResult:
@@ -27,11 +33,15 @@ class SolveResult:
 
     ``next_key`` (set by ``repro.api.Session.run``) is the root RNG chain
     state after the run, so a warm-restarted continuation reproduces the
-    exact iterates of one longer run."""
+    exact iterates of one longer run.  ``lam`` (also session-set) records
+    the regularization the run used, so a warm restart under a DIFFERENT
+    lambda knows to rebuild the primal (``w = X^T alpha / (lam m)``)
+    instead of carrying an inconsistent ``w``."""
     alpha: Array
     w: Array
     history: List[dict]  # per root round: round, time, dual, primal, gap
     next_key: Array = None
+    lam: float = None
 
     @property
     def times(self) -> np.ndarray:
@@ -44,6 +54,21 @@ class SolveResult:
     @property
     def duals(self) -> np.ndarray:
         return np.array([h["dual"] for h in self.history])
+
+    @property
+    def primals(self) -> np.ndarray:
+        return np.array([h["primal"] for h in self.history])
+
+    def to_dict(self) -> dict:
+        """JSON-serializable form (iterates as lists, history as-is)."""
+        return {
+            "alpha": np.asarray(self.alpha).tolist(),
+            "w": np.asarray(self.w).tolist(),
+            "history": [dict(h) for h in self.history],
+            "next_key": (None if self.next_key is None
+                         else np.asarray(self.next_key).tolist()),
+            "lam": None if self.lam is None else float(self.lam),
+        }
 
 
 def per_round_time(tree: TreeNode) -> float:
@@ -76,3 +101,39 @@ def record_round(history: List[dict], t: int, time: float, dual: float,
     recursion, which records on the host as it goes)."""
     history.append({"round": t, "time": time, "dual": dual,
                     "primal": primal, "gap": primal - dual})
+
+
+# ---------------------------------------------------------------------------
+# batched-history schema (the sweep layer's (B, T) representation)
+# ---------------------------------------------------------------------------
+def stack_histories(histories: Sequence[List[dict]]) -> Dict[str, np.ndarray]:
+    """Stack B per-run history dict-lists into ``{field: (B, T_max)}``
+    float arrays (one per :data:`HISTORY_FIELDS`), NaN-padding members that
+    recorded fewer rounds -- the :class:`~repro.api.sweep.RunSet` history
+    schema.  Extra per-entry keys (async instrumentation) are dropped."""
+    B = len(histories)
+    t_max = max((len(h) for h in histories), default=0)
+    out = {f: np.full((B, t_max), np.nan) for f in HISTORY_FIELDS}
+    for b, hist in enumerate(histories):
+        for t, entry in enumerate(hist):
+            for f in HISTORY_FIELDS:
+                out[f][b, t] = float(entry[f])
+    return out
+
+
+def history_row(stacked: Dict[str, np.ndarray], b: int) -> List[dict]:
+    """Reconstruct member ``b``'s history dict-list from a
+    :func:`stack_histories` batch (NaN padding rows are dropped)."""
+    out: List[dict] = []
+    rounds = stacked["round"]
+    for t in range(rounds.shape[1]):
+        if not np.isfinite(rounds[b, t]):
+            continue
+        out.append({
+            "round": int(rounds[b, t]),
+            "time": float(stacked["time"][b, t]),
+            "dual": float(stacked["dual"][b, t]),
+            "primal": float(stacked["primal"][b, t]),
+            "gap": float(stacked["gap"][b, t]),
+        })
+    return out

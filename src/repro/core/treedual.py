@@ -222,4 +222,4 @@ def tree_dual_solve_reference(
         w = w + sum(dws) / K
         record(t)
 
-    return SolveResult(alpha=alpha, w=w, history=history)
+    return SolveResult(alpha=alpha, w=w, history=history, lam=lam)

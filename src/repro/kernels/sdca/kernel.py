@@ -33,7 +33,7 @@ from jax.experimental import pallas as pl
 from repro.core.dual import Loss
 
 
-def _sdca_steps(X, y, a0, w0, xsq, idx, mask, *, lm: float, loss: Loss,
+def _sdca_steps(X, y, a0, w0, xsq, idx, mask, *, lm, loss: Loss,
                 H: int):
     """The H sequential coordinate maximizations (VMEM/VREG resident)."""
     def body(h, carry):
@@ -55,21 +55,21 @@ def _sdca_steps(X, y, a0, w0, xsq, idx, mask, *, lm: float, loss: Loss,
     return jax.lax.fori_loop(0, H, body, (a0, w0))
 
 
-def _sdca_kernel(X_ref, y_ref, a_ref, w_ref, xsq_ref, idx_ref,
-                 da_ref, dw_ref, *, lm: float, loss: Loss, H: int):
+def _sdca_kernel(X_ref, y_ref, a_ref, w_ref, xsq_ref, idx_ref, lm_ref,
+                 da_ref, dw_ref, *, loss: Loss, H: int):
     a_end, w_end = _sdca_steps(
         X_ref[...], y_ref[...], a_ref[...], w_ref[...], xsq_ref[...],
-        idx_ref[...], None, lm=lm, loss=loss, H=H)
+        idx_ref[...], None, lm=lm_ref[0], loss=loss, H=H)
     da_ref[...] = a_end - a_ref[...]
     dw_ref[...] = w_end - w_ref[...]
 
 
 def _sdca_kernel_masked(X_ref, y_ref, a_ref, w_ref, xsq_ref, idx_ref,
-                        mask_ref, da_ref, dw_ref, *, lm: float, loss: Loss,
+                        lm_ref, mask_ref, da_ref, dw_ref, *, loss: Loss,
                         H: int):
     a_end, w_end = _sdca_steps(
         X_ref[...], y_ref[...], a_ref[...], w_ref[...], xsq_ref[...],
-        idx_ref[...], mask_ref[...], lm=lm, loss=loss, H=H)
+        idx_ref[...], mask_ref[...], lm=lm_ref[0], loss=loss, H=H)
     da_ref[...] = a_end - a_ref[...]
     dw_ref[...] = w_end - w_ref[...]
 
@@ -82,7 +82,7 @@ def sdca_block_kernel(
     idx: jax.Array,    # (K, H)
     *,
     loss: Loss,
-    lm: float,
+    lm,
     step_mask: jax.Array = None,  # optional (K, H) 0/1 per-step gating
     interpret: bool = True,
 ) -> Tuple[jax.Array, jax.Array]:
@@ -93,10 +93,14 @@ def sdca_block_kernel(
     each leaf its own w replica between syncs.  ``step_mask`` zeroes the
     coordinate delta of masked steps, which is how the engine runs leaves
     with heterogeneous H (padded to H_max) and idle ticks inside one grid.
+    ``lm`` (lambda * m_total) may be a Python float or a TRACED scalar --
+    it enters the kernel as a (1,) operand, so one compiled kernel serves
+    a whole regularization grid.
     """
     K, m_b, d = X.shape
     H = idx.shape[1]
     xsq = jnp.sum(X * X, axis=2) / lm
+    lm_arr = jnp.broadcast_to(jnp.asarray(lm, X.dtype), (1,))
 
     if w.ndim == 2:
         w_spec = pl.BlockSpec((None, d), lambda k: (k, 0))
@@ -109,14 +113,15 @@ def sdca_block_kernel(
         w_spec,
         pl.BlockSpec((None, m_b), lambda k: (k, 0)),
         pl.BlockSpec((None, H), lambda k: (k, 0)),
+        pl.BlockSpec((1,), lambda k: (0,)),                   # lm scalar
     ]
-    operands = [X, y, alpha, w, xsq, idx]
+    operands = [X, y, alpha, w, xsq, idx, lm_arr]
     if step_mask is not None:
-        kernel = functools.partial(_sdca_kernel_masked, lm=lm, loss=loss, H=H)
+        kernel = functools.partial(_sdca_kernel_masked, loss=loss, H=H)
         in_specs.append(pl.BlockSpec((None, H), lambda k: (k, 0)))
         operands.append(step_mask)
     else:
-        kernel = functools.partial(_sdca_kernel, lm=lm, loss=loss, H=H)
+        kernel = functools.partial(_sdca_kernel, loss=loss, H=H)
 
     da, dw = pl.pallas_call(
         kernel,

@@ -1,0 +1,482 @@
+"""Vectorized sweep API (repro.api.sweep): Sweep / RunSet / Session.sweep.
+
+The load-bearing claims:
+
+  * every RunSet member is BIT-identical to the corresponding standalone
+    ``Session.run`` -- on the batched host paths (vmap / pallas, where a
+    (lambda x seed) grid runs as ONE vmapped chunk program) and on the
+    sequential mesh path alike, histories included;
+  * lambda is a runtime executor input: a lambda grid costs ONE executor
+    build (cache stats), and sessions compiled at different lambdas share
+    one jit program;
+  * ``continuation=True`` produces a valid warm-started regularization
+    path (monotone ||w|| in lambda, members reproducible standalone);
+  * grid vs zip shapes, ``history_every`` decimation (final entry always
+    kept), ``RunSet.best``/``to_dict``;
+  * ``fit_C`` inverts eq. (11) exactly and ``DelayModel(C="auto")``
+    calibrates from a pilot run at compile time;
+  * the ``solve()`` one-shot forwards ``warm_start=`` and ``straggler=``.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (
+    DelayModel, Problem, Schedule, Session, Sweep, Topology, solve, sweep)
+from repro.core.delay import StragglerModel, fit_C
+from repro.core.engine.host import executor_cache_stats
+from repro.data.synthetic import gaussian_regression
+from repro.runtime.straggler import StragglerPolicy
+
+LAM = 0.1
+
+
+def _star():
+    return Topology.star(4, 40, rounds=5, local_steps=40)
+
+
+def _small_star():
+    return Topology.star(3, 16, rounds=3, local_steps=12)
+
+
+def _problem(topo, d=8):
+    X, y = gaussian_regression(m=topo.m_total, d=d)
+    return Problem(X, y, loss="squared", lam=LAM)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity of members vs standalone runs
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["vmap", "pallas"])
+def test_sweep_members_bit_identical_to_single_runs(backend):
+    """The fused (vmapped) lambda x seed batch reproduces each standalone
+    run bit for bit -- iterates, history, and RNG-chain state."""
+    topo = _small_star() if backend == "pallas" else _star()
+    prob = _problem(topo)
+    X, y = prob.X, prob.y
+    sess = Session.compile(prob, topo, backend=backend)
+
+    rs = sess.sweep(lams=[0.03, 0.1, 0.5], seeds=[0, 7])
+    assert len(rs) == 6 and rs.shape == (3, 2)
+    for pt in rs.points:
+        single = Session.compile(
+            Problem(X, y, lam=pt.lam), topo, backend=backend).run(
+            key=jax.random.PRNGKey(pt.seed))
+        mem = rs[pt.index]
+        np.testing.assert_array_equal(np.asarray(mem.alpha),
+                                      np.asarray(single.alpha))
+        np.testing.assert_array_equal(np.asarray(mem.w),
+                                      np.asarray(single.w))
+        assert [h["gap"] for h in mem.history] == \
+            [h["gap"] for h in single.history]
+        assert [h["time"] for h in mem.history] == \
+            [h["time"] for h in single.history]
+        np.testing.assert_array_equal(np.asarray(mem.next_key),
+                                      np.asarray(single.next_key))
+
+
+def test_sweep_mesh_backend_members_match():
+    """The mesh path (sequential members over one cached lambda-free
+    device program) is bit-identical to standalone mesh runs."""
+    n = len(jax.devices())
+    topo = Topology.star(n, 128 // n, rounds=4, local_steps=24)
+    X, y = gaussian_regression(m=128, d=8)
+    sess = Session.compile(Problem(X, y, lam=LAM), topo, backend="mesh")
+    rs = sess.sweep(lams=[0.05, 0.4], seeds=[0, 3])
+    for pt in rs.points:
+        single = Session.compile(
+            Problem(X, y, lam=pt.lam), topo, backend="mesh").run(
+            key=jax.random.PRNGKey(pt.seed))
+        mem = rs[pt.index]
+        np.testing.assert_array_equal(np.asarray(mem.alpha),
+                                      np.asarray(single.alpha))
+        np.testing.assert_array_equal(np.asarray(mem.w),
+                                      np.asarray(single.w))
+        assert [h["gap"] for h in mem.history] == \
+            [h["gap"] for h in single.history]
+
+
+def test_sweep_schedule_axis_produces_distinct_plans():
+    """A schedules axis changes the plan per group; lambda x seed within
+    each group still fuses, and the batched history pads ragged round
+    counts with NaN."""
+    topo = _star()
+    prob = _problem(topo)
+    sess = Session.compile(prob, topo)
+    scheds = [Schedule(rounds=3, local_steps=10),
+              Schedule(rounds=6, local_steps=20)]
+    rs = sess.sweep(schedules=scheds, lams=[0.05, 0.5])
+    assert len(rs) == 4 and rs.shape == (2, 2)
+    assert rs.gaps.shape == (4, 7)            # padded to max T+1
+    # group 0 ran 3 rounds -> entries 0..3 then NaN padding
+    assert np.isfinite(rs.gaps[0, :4]).all()
+    assert np.isnan(rs.gaps[0, 4:]).all()
+    assert np.isfinite(rs.gaps[2]).all()
+    for pt in rs.points:
+        single = Session.compile(
+            Problem(prob.X, prob.y, lam=pt.lam), topo,
+            scheds[pt.schedule]).run(key=jax.random.PRNGKey(0))
+        np.testing.assert_array_equal(np.asarray(rs[pt.index].alpha),
+                                      np.asarray(single.alpha))
+
+
+# ---------------------------------------------------------------------------
+# lambda as a runtime input: executor-cache economics
+# ---------------------------------------------------------------------------
+def test_one_compile_per_plan_across_lambda_grid():
+    """A lambda grid costs ONE batched-executor build; re-sweeping with
+    different lambdas (and compiling sessions at different lambdas) is
+    all cache hits."""
+    topo = Topology.star(3, 30, rounds=4, local_steps=30)
+    X, y = gaussian_regression(m=90, d=6)
+    s1 = Session.compile(Problem(X, y, lam=0.05), topo)
+    s2 = Session.compile(Problem(X, y, lam=0.8), topo)
+    assert s1._fn is s2._fn, "lambda leaked into the executor cache key"
+
+    before = executor_cache_stats()
+    s1.sweep(lams=[0.01, 0.1, 1.0, 10.0], record_history=False)
+    mid = executor_cache_stats()
+    assert mid["misses"] == before["misses"] + 1   # the batched flavor
+    s2.sweep(lams=[0.02, 0.2, 2.0], record_history=False)
+    after = executor_cache_stats()
+    assert after["misses"] == mid["misses"], \
+        "second lambda grid rebuilt an executor"
+    assert after["hits"] > mid["hits"]
+
+
+def test_batched_carry_state_executor_matches_flat_batched():
+    """The batched + carry_state StateExecutor (the fused-async building
+    block) chunks bit-identically to the flat batched executor under
+    all-ones masks: init -> step^T -> finalize == T flat steps."""
+    import jax.numpy as jnp
+
+    from repro.core.engine import host as host_mod
+    from repro.core.engine import plan as plan_mod
+    topo = Topology.star(3, 16, rounds=4, local_steps=12)
+    prob = _problem(topo, d=6)
+    X, y = prob.X, prob.y
+    sess = Session.compile(prob, topo)
+    plan = sess.plan
+    lams = [0.05, 0.5]
+    B, T = len(lams), 4
+    keys = jnp.asarray(np.stack([
+        plan_mod.chunked_key_plan(sess.resolved.chunk_tree, plan,
+                                  plan_mod._raw_key(jax.random.PRNGKey(s)),
+                                  T)
+        for s in range(B)]))
+    part = jnp.asarray(plan_mod.full_participation(plan))
+    lms = jnp.stack([host_mod.regularizer_scale(l, prob.m, X.dtype)
+                     for l in lams])
+    a0 = jnp.zeros((B, prob.m), X.dtype)
+    w0 = jnp.zeros((B, prob.d), X.dtype)
+
+    flat = host_mod.get_host_executor(plan, loss=prob.loss,
+                                      record_history=False, batched=True)
+    a, w = a0, w0
+    for t in range(T):
+        a, w = flat(X, y, keys[:, t], a, w, part, lms)
+
+    se = host_mod.get_host_executor(plan, loss=prob.loss,
+                                    record_history=False, batched=True,
+                                    carry_state=True)
+    state = se.init(X, a0, w0)
+    for t in range(T):
+        state = se.step(X, y, keys[:, t], state, part, lms)
+    a_s, w_s = se.finalize(state)
+    np.testing.assert_array_equal(np.asarray(a_s), np.asarray(a))
+    np.testing.assert_array_equal(np.asarray(w_s), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# continuation paths
+# ---------------------------------------------------------------------------
+def test_continuation_path_monotone_and_reproducible():
+    """Warm-started regularization path: ||w|| grows as lambda shrinks
+    (members near the closed-form ridge solutions), and each member
+    reproduces as a standalone warm-started run (the primal is rebuilt
+    under the new lambda: w = X^T alpha / (lam m))."""
+    from repro.core.dual import w_of_alpha
+    topo = Topology.star(4, 40, rounds=40, local_steps=60)
+    prob = _problem(topo)
+    X = prob.X
+    lams = [3.0, 1.0, 0.3, 0.1, 0.03]
+    sess = Session.compile(prob, topo)
+    rs = sess.sweep(lams=lams, continuation=True, record_history=False)
+    norms = [float(np.linalg.norm(np.asarray(rs[i].w)))
+             for i in range(len(lams))]
+    assert all(b > a for a, b in zip(norms, norms[1:])), norms
+
+    # member i == standalone run warm-started from member i-1's dual
+    prev = rs[1]
+    single = sess.run(key=jax.random.PRNGKey(0), lam=lams[2],
+                      warm_start=(prev.alpha,
+                                  w_of_alpha(prev.alpha, X, lams[2])),
+                      record_history=False)
+    np.testing.assert_array_equal(np.asarray(rs[2].alpha),
+                                  np.asarray(single.alpha))
+    np.testing.assert_array_equal(np.asarray(rs[2].w),
+                                  np.asarray(single.w))
+
+    # the requested (unsorted) order is preserved in the RunSet
+    shuffled = [0.1, 3.0, 0.3]
+    rs2 = sess.sweep(lams=shuffled, continuation=True, rounds=5,
+                     record_history=False)
+    assert [pt.lam for pt in rs2.points] == shuffled
+
+
+def test_warm_start_across_lambda_rebuilds_primal():
+    """Regression: warm-starting a run under a DIFFERENT lambda must
+    rebuild w = X^T alpha / (lam m) -- carrying the old primal breaks the
+    eq.-(13) invariant and converges to wrong iterates.  Same-lambda
+    warm starts stay bit-exact continuations."""
+    from repro.core.dual import w_of_alpha
+    topo = Topology.star(4, 40, rounds=30, local_steps=60)
+    prob = _problem(topo)
+    X = prob.X
+    sess = Session.compile(prob, topo)
+    key = jax.random.PRNGKey(0)
+
+    r1 = sess.run(key=key, lam=1.0, record_history=False)
+    assert r1.lam == 1.0
+    r2 = sess.run(key=key, lam=0.01, warm_start=r1, record_history=False)
+    # invariant holds at the end of the cross-lambda continuation
+    w_inv = w_of_alpha(r2.alpha, X, 0.01)
+    np.testing.assert_allclose(np.asarray(r2.w), np.asarray(w_inv),
+                               rtol=1e-4, atol=1e-6)
+    # and it equals the explicitly-rebuilt warm start bit for bit
+    manual = sess.run(key=key, lam=0.01,
+                      warm_start=(r1.alpha, w_of_alpha(r1.alpha, X, 0.01)),
+                      record_history=False)
+    np.testing.assert_array_equal(np.asarray(r2.alpha),
+                                  np.asarray(manual.alpha))
+    np.testing.assert_array_equal(np.asarray(r2.w), np.asarray(manual.w))
+
+    # same-lambda warm starts are untouched: exact split == one long run
+    once = sess.run(rounds=8, key=key, record_history=False)
+    first = sess.run(rounds=3, key=key, record_history=False)
+    rest = sess.run(rounds=5, warm_start=first, record_history=False)
+    np.testing.assert_array_equal(np.asarray(rest.alpha),
+                                  np.asarray(once.alpha))
+
+
+def test_continuation_validation():
+    with pytest.raises(ValueError, match="lams"):
+        Sweep(seeds=[0, 1], continuation=True)
+    with pytest.raises(ValueError, match="grid"):
+        Sweep(lams=[1.0, 0.1], mode="zip", continuation=True,
+              seeds=[0, 1])
+
+
+# ---------------------------------------------------------------------------
+# grid vs zip shapes
+# ---------------------------------------------------------------------------
+def test_grid_vs_zip_shapes():
+    topo = _star()
+    sess = Session.compile(_problem(topo), topo)
+    rs = sess.sweep(lams=[0.1, 0.2, 0.3], seeds=[0, 1], rounds=2,
+                    record_history=False)
+    assert rs.shape == (3, 2) and len(rs) == 6
+    # grid order: lams outer, seeds inner
+    assert [(p.lam, p.seed) for p in rs.points[:2]] == \
+        [(0.1, 0), (0.1, 1)]
+
+    rz = sess.sweep(lams=[0.1, 0.2, 0.3], seeds=[5, 6, 7], mode="zip",
+                    rounds=2, record_history=False)
+    assert rz.shape == (3,) and len(rz) == 3
+    assert [(p.lam, p.seed) for p in rz.points] == \
+        [(0.1, 5), (0.2, 6), (0.3, 7)]
+
+    with pytest.raises(ValueError, match="equal-length"):
+        sess.sweep(lams=[0.1, 0.2], seeds=[0, 1, 2], mode="zip")
+    with pytest.raises(ValueError, match="at least one axis"):
+        Sweep()
+    with pytest.raises(ValueError, match="non-empty"):
+        Sweep(lams=[])
+    with pytest.raises(ValueError, match="grid.*zip|zip.*grid|mode"):
+        Sweep(lams=[0.1], mode="diagonal")
+
+
+# ---------------------------------------------------------------------------
+# history_every decimation
+# ---------------------------------------------------------------------------
+def test_history_every_keeps_final_entry():
+    """run(history_every=k) records rounds {0, k, 2k, ...} AND the final
+    round; recorded entries are bitwise those of the full history."""
+    topo = _star()
+    sess = Session.compile(_problem(topo), topo)
+    key = jax.random.PRNGKey(2)
+    full = sess.run(rounds=7, key=key)
+    dec = sess.run(rounds=7, key=key, history_every=3)
+    assert [h["round"] for h in dec.history] == [0, 3, 6, 7]
+    by_round = {h["round"]: h for h in full.history}
+    for h in dec.history:
+        assert h == by_round[h["round"]]
+    np.testing.assert_array_equal(np.asarray(dec.alpha),
+                                  np.asarray(full.alpha))
+    with pytest.raises(ValueError, match="history_every"):
+        sess.run(rounds=2, history_every=0)
+
+
+def test_history_every_threads_through_sweep():
+    topo = _star()
+    sess = Session.compile(_problem(topo), topo)
+    rs = sess.sweep(lams=[0.05, 0.5], rounds=7, history_every=3)
+    for i in range(len(rs)):
+        assert [h["round"] for h in rs[i].history] == [0, 3, 6, 7]
+    assert rs.gaps.shape == (2, 4)
+
+
+# ---------------------------------------------------------------------------
+# RunSet accessors and serialization
+# ---------------------------------------------------------------------------
+def test_runset_best_and_to_dict():
+    topo = _star()
+    prob = _problem(topo)
+    sess = Session.compile(prob, topo)
+    rs = sess.sweep(lams=[0.02, 0.2, 2.0], seeds=[0, 1])
+    finals = rs.final("gap")
+    assert np.isfinite(finals).all()
+    bi = rs.best_index("gap")
+    assert finals[bi] == finals.min()
+    assert rs.best("gap").gaps[-1] == finals[bi]
+    # dual is maximized
+    assert rs.final("dual")[rs.best_index("dual")] == rs.final("dual").max()
+
+    d = rs.to_dict()
+    blob = json.loads(json.dumps(d))
+    assert blob["shape"] == [3, 2]
+    assert len(blob["configs"]) == 6
+    assert blob["configs"][0] == {"lam": 0.02, "seed": 0, "schedule": None}
+    assert np.asarray(blob["alphas"]).shape == (6, prob.m)
+    assert blob["final_gap"][bi] == pytest.approx(float(finals[bi]))
+
+    # record_history=False still serializes (no history block)
+    rs2 = sess.sweep(lams=[0.1], rounds=1, record_history=False)
+    assert "history" not in rs2.to_dict()
+    with pytest.raises(ValueError, match="record_history"):
+        rs2.gaps
+
+
+# ---------------------------------------------------------------------------
+# fit_C / DelayModel(C="auto")
+# ---------------------------------------------------------------------------
+def test_fit_c_inverts_eq11_exactly():
+    K, H, delta, C_true = 4, 64, 1 / 32, 0.7
+    g = 1 - (1 - (1 - delta) ** H) * C_true / K
+    gaps = [2.5 * g ** t for t in range(10)]
+    assert fit_C(gaps, K=K, H=H, delta=delta) == pytest.approx(C_true)
+    # accepts history-dict lists and clips into (0, K]
+    hist = [{"gap": g_} for g_ in gaps]
+    assert fit_C(hist, K=K, H=H, delta=delta) == pytest.approx(C_true)
+    assert fit_C([1.0, 1e-9], K=4, H=64, delta=delta) <= 4.0
+    assert fit_C([1.0, 2.0, 4.0], K=4, H=64, delta=delta) > 0  # divergent
+    with pytest.raises(ValueError, match="two"):
+        fit_C([1.0], K=4, H=64, delta=delta)
+
+
+def test_delay_model_auto_c_calibrates_from_pilot():
+    topo = Topology.star(3, 64, rounds=8, local_steps=32, t_lp=1e-5,
+                         t_delay=1e-3)
+    X, y = gaussian_regression(m=topo.m_total, d=12)
+    prob = Problem.ridge(X, y, lam=0.05)
+    sched = Schedule.auto(t_total=0.5, C="auto", pilot_rounds=6,
+                          h_max=10**4)
+    sess = Session.compile(prob, topo, sched)
+    assert sess.fitted_C is not None and 0 < sess.fitted_C <= 3
+    assert sess.level_plan is not None
+    res = sess.run()
+    assert np.isfinite(res.gaps).all()
+    # a fixed-C schedule leaves fitted_C unset
+    assert Session.compile(prob, topo).fitted_C is None
+
+
+def test_auto_c_hierarchical_clips_to_smallest_level():
+    """Regression: the fitted C is clipped to the SMALLEST sync-level
+    group size (the planner checks C against every level's K), so fast
+    pilots on wide-rooted two-level trees still compile."""
+    topo = Topology.two_level(8, 2, 8, root_rounds=6, group_rounds=2,
+                              local_steps=16, t_lp=4e-5, root_delay=1e-3,
+                              group_delay=1e-4)
+    X, y = gaussian_regression(m=topo.m_total, d=6)
+    prob = Problem.ridge(X, y, lam=1.0)        # contracts fast
+    sess = Session.compile(prob, topo,
+                           Schedule.auto(t_total=0.3, C="auto",
+                                         pilot_rounds=5, h_max=10**3))
+    assert 0 < sess.fitted_C <= 2               # inner group size, not 8
+
+
+def test_auto_c_skipped_for_explicit_rounds():
+    """Regression: an explicit-rounds schedule never reads the
+    DelayModel, so C='auto' must not pay a pilot run or set fitted_C."""
+    topo = Topology.star(3, 16, rounds=4, local_steps=8, t_lp=1e-5,
+                         t_delay=1e-3)
+    X, y = gaussian_regression(m=48, d=4)
+    sess = Session.compile(
+        Problem(X, y, lam=LAM), topo,
+        Schedule(rounds=4, delay=DelayModel(t_total=1.0, C="auto")))
+    assert sess.fitted_C is None
+
+
+def test_delay_model_auto_c_validation():
+    with pytest.raises(ValueError, match="auto"):
+        DelayModel(t_total=1.0, C="bogus")
+    with pytest.raises(ValueError, match="pilot_rounds"):
+        DelayModel(t_total=1.0, C="auto", pilot_rounds=1)
+    topo = Topology.star(3, 8, t_lp=1e-5, t_delay=1e-3)
+    with pytest.raises(ValueError, match="Session.compile"):
+        Schedule(rounds="auto",
+                 delay=DelayModel(t_total=1.0, C="auto")).resolve(topo)
+
+
+# ---------------------------------------------------------------------------
+# solve() feature parity (bugfix regression)
+# ---------------------------------------------------------------------------
+def test_solve_forwards_warm_start_and_straggler():
+    """Regression: the one-shot wrapper used to silently DROP warm_start=
+    and straggler=."""
+    topo = Topology.star(4, 32, rounds=6, local_steps=32, t_lp=1e-5,
+                         t_delay=0.01)
+    X, y = gaussian_regression(m=topo.m_total, d=8)
+    prob = Problem.ridge(X, y, lam=LAM)
+    sess = Session.compile(prob, topo)
+    key = jax.random.PRNGKey(5)
+
+    first = sess.run(rounds=3, key=key, record_history=False)
+    direct = sess.run(rounds=5, warm_start=first, record_history=False)
+    via = solve(prob, topo, rounds=5, warm_start=first,
+                record_history=False)
+    np.testing.assert_array_equal(np.asarray(via.alpha),
+                                  np.asarray(direct.alpha))
+    np.testing.assert_array_equal(np.asarray(via.w), np.asarray(direct.w))
+
+    pol = StragglerPolicy(model=StragglerModel(slow_prob=0.3,
+                                               slow_factor=30.0),
+                          max_consecutive=2, seed=0)
+    res = solve(prob, topo, rounds=6, straggler=pol)
+    assert "participants" in res.history[-1]
+    assert "time_sync" in res.history[-1]
+
+
+def test_one_shot_sweep_matches_session_sweep():
+    topo = _star()
+    prob = _problem(topo)
+    a = sweep(prob, topo, lams=[0.05, 0.5], rounds=3,
+              record_history=False)
+    b = Session.compile(prob, topo).sweep(lams=[0.05, 0.5], rounds=3,
+                                          record_history=False)
+    np.testing.assert_array_equal(np.asarray(a.alphas),
+                                  np.asarray(b.alphas))
+    with pytest.raises(ValueError, match="not both"):
+        Session.compile(prob, topo).sweep(Sweep(lams=[0.1]), lams=[0.2])
+    # the one-shot wrapper validates identically instead of silently
+    # dropping inline axes (regression)
+    with pytest.raises(ValueError, match="not both"):
+        sweep(prob, topo, Sweep(lams=[0.1]), seeds=[0, 1])
+    # mode=/continuation= alongside a spec are rejected too, not ignored
+    with pytest.raises(ValueError, match="not both"):
+        Session.compile(prob, topo).sweep(Sweep(lams=[0.1, 0.2]),
+                                          continuation=True)
+    with pytest.raises(ValueError, match="not both"):
+        sweep(prob, topo, Sweep(lams=[0.1, 0.2]), mode="zip")
