@@ -9,12 +9,15 @@ first run) from steady-state run time, plus a STRAGGLER scenario: on a
 star network with a heavy per-round delay tail, the synchronous schedule
 (barrier waits for the slowest leaf) vs the bounded-skip async schedule
 (stragglers are dropped and re-join with stale deltas) compared on
-simulated time-to-1e-3-duality-gap, and a SWEEP scenario: a B=8 lambda
+simulated time-to-1e-3-duality-gap, a SWEEP scenario: a B=8 lambda
 grid as one batched ``Session.sweep`` (one vmapped dispatch per chunk for
 the whole grid; lambda is a runtime executor input) vs 8 sequential
-``Session.run`` calls (acceptance target: >= 3x, members bit-identical).
-Everything is recorded in ``BENCH_engine.json`` so the perf trajectory is
-tracked across commits.
+``Session.run`` calls (acceptance target: >= 3x, members bit-identical),
+and an ADAPTIVE-H scenario: the schedule as a runtime step-mask input
+(one ``Schedule(h_cap=...)`` session executing many H values against ONE
+cached executor, the delay-adaptive replanning path) vs a per-H recompile
+(acceptance target: >= 2x).  Everything is recorded in
+``BENCH_engine.json`` so the perf trajectory is tracked across commits.
 
     PYTHONPATH=src python benchmarks/bench_engine.py
 """
@@ -27,7 +30,7 @@ from typing import Dict
 import jax
 import numpy as np
 
-from repro.api import Problem, Session, Topology
+from repro.api import Problem, Schedule, Session, Topology
 from repro.core.delay import StragglerModel
 from repro.core.engine import host as host_mod
 from repro.core.treedual import tree_dual_solve_reference
@@ -167,6 +170,62 @@ def sweep_scenario(verbose: bool = True) -> Dict[str, float]:
     return out
 
 
+def adaptive_h_scenario(verbose: bool = True) -> Dict[str, float]:
+    """Retrace-free H replanning vs per-H recompiles.
+
+    The schedule is a runtime step-mask input of the executors, so ONE
+    session compiled at an H capacity (``Schedule(h_cap=...)``) executes
+    every H value below it by swapping an input array -- exactly what a
+    delay-adaptive session does between chunks.  The baseline is what the
+    pre-refactor API had to do: a fresh plan (new leaf rounds => new
+    fingerprint) and a fresh trace + XLA compile per H value."""
+    hs = [8, 16, 32, 64]
+    topo = Topology.star(8, 32, rounds=20, local_steps=64)
+    X, y = gaussian_regression(m=topo.m_total, d=16)
+    prob = Problem.ridge(X, y, lam=LAM)
+    key = jax.random.PRNGKey(0)
+
+    # runtime path: one cached executor, H swapped per run via step masks
+    sess = Session.compile(prob, topo, Schedule(h_cap=max(hs)))
+    sess.run(key=key, local_h=hs[0], record_history=False)  # warm compile
+    stats0 = Session.cache_stats()
+    t0 = time.perf_counter()
+    outs = [sess.run(key=key, local_h=h, record_history=False) for h in hs]
+    jax.block_until_ready([o.alpha for o in outs])
+    t_runtime = time.perf_counter() - t0
+    assert Session.cache_stats()["misses"] == stats0["misses"], \
+        "the runtime-H path rebuilt an executor"
+
+    # recompile path: a new program per H value (cold caches, as a fresh
+    # process sweeping H would pay)
+    host_mod._EXEC_CACHE.clear()
+    t0 = time.perf_counter()
+    outs2 = [
+        Session.compile(prob, topo, Schedule(local_steps=h)).run(
+            key=key, record_history=False)
+        for h in hs
+    ]
+    jax.block_until_ready([o.alpha for o in outs2])
+    t_recompile = time.perf_counter() - t0
+
+    speedup = t_recompile / t_runtime
+    out = {
+        "hs": hs,
+        "t_runtime_masks_s": t_runtime,
+        "t_recompile_per_h_s": t_recompile,
+        "speedup": speedup,
+        "per_h_runtime_ms": t_runtime / len(hs) * 1e3,
+    }
+    if verbose:
+        print(f"bench_engine adaptive-H scenario: {len(hs)} H values "
+              f"{hs}, 8-leaf star x 20 rounds")
+        print(f"  per-H recompiles  : {t_recompile * 1e3:9.2f} ms")
+        print(f"  runtime step masks: {t_runtime * 1e3:9.2f} ms  "
+              f"({speedup:.1f}x faster, "
+              f"{out['per_h_runtime_ms']:.2f} ms/H value)")
+    return out
+
+
 def run(verbose: bool = True) -> Dict[str, float]:
     # depth-3, 8-leaf balanced tree: 10 root x 2 x 2 rounds, H=128
     topo = Topology.balanced([2, 2, 2], m_leaf=32, local_steps=128,
@@ -208,6 +267,7 @@ def run(verbose: bool = True) -> Dict[str, float]:
     }
     results["straggler"] = straggler_scenario(verbose=verbose)
     results["sweep"] = sweep_scenario(verbose=verbose)
+    results["adaptive_h"] = adaptive_h_scenario(verbose=verbose)
     if verbose:
         print("bench_engine: depth-3, 8-leaf tree "
               f"(m={m}, 40 ticks x H=128), host path")
@@ -221,9 +281,14 @@ def run(verbose: bool = True) -> Dict[str, float]:
         f.write("\n")
     if verbose:
         print(f"  wrote {BENCH_JSON}")
+    # gates run AFTER the json is written so a regression is still
+    # recorded in the artifact instead of discarding the run
     assert speedup >= 5.0, f"engine speedup {speedup:.1f}x < 5x target"
     assert results["sweep"]["speedup"] >= 3.0, (
         f"sweep speedup {results['sweep']['speedup']:.1f}x < 3x target")
+    assert results["adaptive_h"]["speedup"] >= 2.0, (
+        f"adaptive-H speedup {results['adaptive_h']['speedup']:.1f}x "
+        "< 2x target")
     return results
 
 

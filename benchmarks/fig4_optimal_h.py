@@ -1,6 +1,11 @@
 """Paper Fig. 4: (a) the eq.-(12) bound as a function of H for several
 delay ratios r (t_delay = r * t_lp); (b) the optimal H vs r; (c) the same
-H* surfacing through the sessionized API (``Schedule(rounds="auto")``).
+H* surfacing through the sessionized API (``Schedule(rounds="auto")``);
+(d) an EMPIRICAL convergence-vs-H comparison run as ONE batched H-axis
+sweep -- H is a runtime step-mask input of the executors, so the whole
+grid shares a single compiled program (``Schedule(h_cap=...)`` +
+``Session.sweep(local_hs=...)``), where this benchmark previously had to
+rebuild a program per H value.
 
 Constants exactly as in §7: (C, K, delta, t_total, t_lp, t_cp) =
 (0.5, 3, 1/300, 1, 4e-5, 3e-5)."""
@@ -10,7 +15,7 @@ from typing import Dict
 
 import numpy as np
 
-from repro.api import Schedule, Topology
+from repro.api import Problem, Schedule, Session, Topology
 from repro.core.delay import log_bound, optimal_h, optimal_h_vs_delay
 
 PARAMS = dict(C=0.5, K=3, delta=1 / 300, t_total=1.0, t_lp=4e-5, t_cp=3e-5)
@@ -47,6 +52,30 @@ def run(verbose: bool = True) -> Dict:
                              **PARAMS)
         assert h_api[r] == h_ref, (r, h_api[r], h_ref)
 
+    # (d) empirical time-to-gap vs H: ONE batched H-axis sweep (a single
+    # vmapped dispatch per round for the whole grid -- the step-mask
+    # operand batches alongside lambda and seeds) instead of one program
+    # per H value.  Simulated wall-clock per round is eq. (9)'s
+    # t_lp*H + t_delay + t_cp, so the empirical sweet spot mirrors (a).
+    hs_d = [4, 16, 64, 256]
+    h_cap = max(hs_d)
+    t_delay = 1e3 * PARAMS["t_lp"]
+    topo_d = Topology.star(PARAMS["K"], 100, rounds=40, local_steps=h_cap,
+                           t_lp=PARAMS["t_lp"], t_cp=PARAMS["t_cp"],
+                           t_delay=t_delay)
+    from repro.data.synthetic import gaussian_regression
+    X, y = gaussian_regression(m=topo_d.m_total, d=12)
+    sess = Session.compile(Problem.ridge(X, y, lam=0.05), topo_d,
+                           Schedule(h_cap=h_cap))
+    rs = sess.sweep(local_hs=hs_d)              # one batched dispatch/round
+    gap_target = 0.05 * float(rs.gaps[:, 0].max())
+    t_to_gap = {}
+    for i, h in enumerate(hs_d):
+        round_time = PARAMS["t_lp"] * h + t_delay + PARAMS["t_cp"]
+        rounds_needed = np.argmax(rs.gaps[i] <= gap_target) \
+            if (rs.gaps[i] <= gap_target).any() else np.inf
+        t_to_gap[h] = float(rounds_needed * round_time)
+
     if verbose:
         print("fig4(a): log10(bound) vs H   (t_delay = r * t_lp)")
         hdr = "  H      " + "".join(f"r={r:<12g}" for r in rs_a)
@@ -63,8 +92,15 @@ def run(verbose: bool = True) -> Dict:
         print("  (H* nondecreasing in delay: confirmed)")
         print("fig4(c): Schedule(rounds='auto') H* by delay ratio:",
               {f"r={r:g}": h for r, h in h_api.items()})
+        print("fig4(d): empirical simulated time-to-5%-gap by H "
+              "(one batched H-axis sweep, r=1e3):")
+        for h, t in t_to_gap.items():
+            print(f"  H={h:<5d} t={t:.4f} s")
+        # under a heavy delay the smallest H must not be the sweet spot
+        finite = {h: t for h, t in t_to_gap.items() if np.isfinite(t)}
+        assert finite and min(finite, key=finite.get) > min(hs_d), t_to_gap
     return {"hs": hs, "curves": curves, "rs": rs_b, "h_opt": h_opt,
-            "h_api": h_api}
+            "h_api": h_api, "t_to_gap": t_to_gap}
 
 
 def main() -> Dict:

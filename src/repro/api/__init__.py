@@ -18,10 +18,12 @@ serializable tree network, ``Schedule`` the per-level round counts (or
 ``"vmap" | "pallas" | "mesh"``.  :func:`solve` is the one-shot shorthand.
 
 Grids are first-class: ``Session.sweep`` / :func:`sweep` run a
-:class:`Sweep` over (lambda, seed, schedule) axes as BATCHED device
-programs (lambda is a runtime executor input, so a whole regularization
-grid shares one compiled chunk program and vmaps into a single dispatch
-per round) and return a :class:`RunSet` of stacked results::
+:class:`Sweep` over (lambda, seed, schedule, local-H) axes as BATCHED
+device programs (lambda AND the local-iteration schedule are runtime
+executor inputs -- the latter a step mask, see ``Schedule(h_cap=...)``
+-- so a whole regularization or H grid shares one compiled chunk
+program and vmaps into a single dispatch per round) and return a
+:class:`RunSet` of stacked results::
 
     rs = sweep(prob, topo, lams=np.logspace(-3, 0, 8), seeds=[0, 1])
     rs.best().w

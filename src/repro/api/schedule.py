@@ -9,13 +9,33 @@ planner with ``rounds="auto"``: at compile time
 link-delay structure (:meth:`Topology.sync_levels`) and picks the
 per-level H, with the root round count set by the :class:`DelayModel`'s
 simulated-time budget.
+
+Heterogeneous and RUNTIME local H:
+
+* ``local_steps`` also accepts a per-leaf spec -- a ``{leaf_name: H}``
+  dict or a left-to-right sequence -- so leaves with more data run more
+  local iterations (the imbalanced-data regime of arXiv:2308.14783);
+* ``h_cap=`` compiles the plan with a larger per-leaf H *capacity* and
+  turns the actual H into a runtime input of the executors (a step mask,
+  see ``repro.core.engine.plan.steps_for_h``): ``Session.run(local_h=...)``
+  and ``Session.sweep(local_hs=...)`` then execute any H schedule up to
+  the cap -- and delay-adaptive sessions replan H between chunks -- with
+  ZERO retraces;
+* ``DelayModel(straggler=StragglerModel(...))`` makes ``rounds="auto"``
+  run the straggler-aware planner variant, optimizing H jointly with the
+  ``BoundedSkip`` threshold over the topology's per-leaf delays
+  (``repro.core.delay.optimal_h_bounded_skip``); the planned threshold is
+  inspectable as ``resolved.skip`` / buildable via
+  ``Session.straggler_policy()``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Union
 
-from repro.core.delay import plan_hierarchical_h
+import numpy as np
+
+from repro.core.delay import StragglerModel, plan_hierarchical_h
 from repro.core.tree import TreeNode
 
 from repro.api.topology import Topology
@@ -36,13 +56,23 @@ class DelayModel:
     ``pilot_rounds`` root rounds under the topology's default schedule on
     the host backend, fits C from the observed per-round gap contractions
     (:func:`repro.core.delay.fit_C`), and plans with the fitted value
-    (inspectable as ``session.fitted_C``)."""
+    (inspectable as ``session.fitted_C``).
+
+    ``straggler`` (a :class:`~repro.core.delay.StragglerModel`) switches
+    the planner to the straggler-aware variant: the innermost level's H is
+    optimized JOINTLY with the bounded-skip threshold (``0..skip_max``)
+    over the topology's per-leaf sync delays
+    (:func:`repro.core.delay.optimal_h_bounded_skip`) -- dropping
+    stragglers shrinks the effective barrier delay but dilutes eq. (11)'s
+    per-round improvement by the participation fraction."""
     t_total: float
     C: Union[float, str] = 0.5
     delta: Optional[float] = None
     t_cp: Optional[float] = None
     h_max: int = 10**6
     pilot_rounds: int = 8
+    straggler: Optional[StragglerModel] = None
+    skip_max: int = 3
 
     def __post_init__(self):
         if isinstance(self.C, str) and self.C != "auto":
@@ -53,6 +83,9 @@ class DelayModel:
             raise ValueError(
                 f"pilot_rounds must be >= 2 (fit_C needs at least two "
                 f"observations), got {self.pilot_rounds}")
+        if self.skip_max < 0:
+            raise ValueError(
+                f"skip_max must be >= 0, got {self.skip_max}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,30 +95,104 @@ class ResolvedSchedule:
     ``chunk_tree`` is the full tree with the root pinned to ONE round --
     the unit :class:`~repro.api.session.Session` compiles and then iterates
     ``rounds`` times (warm restarts and streaming fall out of the same
-    program)."""
+    program).
+
+    ``runtime_h`` (set iff the schedule declared an ``h_cap``) is the
+    per-leaf local-H the session should EXECUTE at runtime via step masks;
+    the ``chunk_tree`` leaves then carry the (larger) compiled H capacity.
+    ``skip`` / ``straggler_model`` carry the straggler-aware planner's
+    jointly-optimized bounded-skip threshold (``rounds="auto"`` with
+    ``DelayModel(straggler=...)``)."""
     chunk_tree: TreeNode
     rounds: int                      # default root-round count for run()
     weighting: str
     per_round_time: float            # simulated seconds per root round
     level_plan: Optional[List[dict]]  # eq.-(12) output when rounds="auto"
+    runtime_h: Optional[tuple] = None  # per-leaf runtime H under h_cap
+    skip: Optional[int] = None         # planned BoundedSkip threshold
+    straggler_model: Optional[StragglerModel] = None
 
     @property
     def full_tree(self) -> TreeNode:
         """The equivalent monolithic tree (root runs all ``rounds``)."""
         return dataclasses.replace(self.chunk_tree, rounds=self.rounds)
 
+    def round_time_for(self, local_h=None) -> float:
+        """Simulated seconds of one root round under runtime local-H
+        ``local_h`` (scalar or per-leaf; ``None`` -> the schedule's own
+        per-round time).  Runtime H is clamped to the compiled per-leaf
+        capacity, exactly as the executors' step masks clamp it."""
+        if local_h is None:
+            return self.per_round_time
+        return runtime_tree(self.chunk_tree, local_h).solve_time()
+
+
+def leaf_h_spec(h, n_leaves: int) -> np.ndarray:
+    """Normalize a runtime local-H spec -- a scalar, a per-leaf ``(n,)``
+    vector, or a per-slot ``(S, n)`` array -- to per-leaf ``(n,)`` counts
+    (per-slot specs reduce to their per-leaf MAX, the slot that binds the
+    round's compute).  The single normalizer behind the session's
+    simulated clock, history ``"h"`` entries, and replan comparisons; the
+    executors' mask builder (``engine.plan.steps_for_h``) resolves the
+    same specs at full per-slot granularity."""
+    arr = np.asarray(h, np.int64)
+    if arr.ndim == 2:
+        arr = arr.max(axis=0)
+    return np.broadcast_to(arr, (n_leaves,))
+
+
+def runtime_tree(chunk_tree: TreeNode, h) -> TreeNode:
+    """The chunk tree with its leaves clamped to the RUNTIME local-H
+    schedule ``h`` (scalar, per-leaf, or per-slot; ``None`` = the
+    compiled tree itself) -- the tree whose compute time the simulated
+    clocks charge when step masks gate trailing iterations off.  Runtime
+    H never exceeds a leaf's compiled capacity."""
+    if h is None:
+        return chunk_tree
+    leaves = chunk_tree.leaves()
+    hs = leaf_h_spec(h, len(leaves))
+    hs = [min(int(v), int(l.rounds)) for v, l in zip(hs, leaves)]
+    return _apply_rounds(chunk_tree, 0, [0],
+                         leaf_steps_of=lambda i, name: hs[i],
+                         rounds_of_depth=lambda d: None)
+
+
+def _leaf_steps_resolver(tree: TreeNode, local_steps):
+    """Normalize a ``local_steps`` spec -- ``None``, an int, a ``{leaf
+    name: H}`` dict, or a left-to-right per-leaf sequence -- into a
+    ``(leaf_index, leaf_name) -> Optional[int]`` lookup."""
+    if local_steps is None or isinstance(local_steps, int):
+        return lambda i, name: local_steps
+    leaves = tree.leaves()
+    if isinstance(local_steps, dict):
+        unknown = set(local_steps) - {l.name for l in leaves}
+        if unknown:
+            raise ValueError(
+                f"local_steps names unknown leaves {sorted(unknown)}; "
+                f"topology leaves are {[l.name for l in leaves]}")
+        return lambda i, name: local_steps.get(name)
+    seq = [int(v) for v in local_steps]
+    if len(seq) != len(leaves):
+        raise ValueError(
+            f"per-leaf local_steps must list all {len(leaves)} leaves "
+            f"left-to-right, got {len(seq)} entries")
+    return lambda i, name: seq[i]
+
 
 def _apply_rounds(
-    node: TreeNode, depth: int, *,
-    local_steps: Optional[int],
+    node: TreeNode, depth: int, counter, *,
+    leaf_steps_of,    # callable (leaf index, leaf name) -> Optional[int]
     rounds_of_depth,  # callable depth -> Optional[int]
 ) -> TreeNode:
     if node.is_leaf:
-        if local_steps is None:
+        i = counter[0]
+        counter[0] += 1
+        r = leaf_steps_of(i, node.name)
+        if r is None:
             return node
-        return dataclasses.replace(node, rounds=local_steps)
+        return dataclasses.replace(node, rounds=int(r))
     kids = tuple(
-        _apply_rounds(c, depth + 1, local_steps=local_steps,
+        _apply_rounds(c, depth + 1, counter, leaf_steps_of=leaf_steps_of,
                       rounds_of_depth=rounds_of_depth)
         for c in node.children)
     r = rounds_of_depth(depth)
@@ -101,28 +208,42 @@ class Schedule:
       default), or ``"auto"`` (eq.-(12) planning; requires ``delay``).
     * ``level_rounds``: per-internal-depth rounds below the root, top-down
       (depth 1, 2, ...); ``None`` keeps the topology's defaults.
-    * ``local_steps``: H at the leaves; ``None`` keeps the defaults.
+    * ``local_steps``: H at the leaves -- an int, a ``{leaf_name: H}``
+      dict, or a left-to-right per-leaf sequence (heterogeneous H for
+      imbalanced leaf datasets); ``None`` keeps the defaults.
+    * ``h_cap``: compile the plan with this per-leaf H *capacity* and make
+      the executed H a RUNTIME input: the session runs ``local_steps``
+      (or the topology's defaults) via step masks, and ``run(local_h=)``/
+      ``sweep(local_hs=)``/delay-adaptive replanning swap in any other H
+      up to the cap with zero retraces.
     * ``weighting``: ``"uniform"`` (paper 1/K) or ``"size"``
       (|block|-proportional, CoCoA-style).
     * ``delay``: the :class:`DelayModel` driving ``rounds="auto"``.
     """
     rounds: Union[int, str, None] = None
-    local_steps: Optional[int] = None
+    local_steps: Union[int, Sequence[int], Dict[str, int], None] = None
     level_rounds: Optional[Sequence[int]] = None
     weighting: str = "uniform"
     delay: Optional[DelayModel] = None
+    h_cap: Optional[int] = None
 
     @classmethod
     def auto(cls, t_total: float, *, C: Union[float, str] = 0.5,
              delta: Optional[float] = None, t_cp: Optional[float] = None,
              h_max: int = 10**6, weighting: str = "uniform",
-             pilot_rounds: int = 8) -> "Schedule":
+             pilot_rounds: int = 8,
+             straggler: Optional[StragglerModel] = None,
+             skip_max: int = 3, h_cap: Optional[int] = None) -> "Schedule":
         """Shorthand for ``Schedule(rounds="auto", delay=DelayModel(...))``
-        (``C="auto"`` calibrates C from a pilot run at compile time)."""
-        return cls(rounds="auto", weighting=weighting,
+        (``C="auto"`` calibrates C from a pilot run at compile time;
+        ``straggler=`` switches to the straggler-aware joint (H, skip)
+        planner; ``h_cap=`` keeps the planned H a runtime input so
+        adaptive sessions can replan it without retracing)."""
+        return cls(rounds="auto", weighting=weighting, h_cap=h_cap,
                    delay=DelayModel(t_total=t_total, C=C, delta=delta,
                                     t_cp=t_cp, h_max=h_max,
-                                    pilot_rounds=pilot_rounds))
+                                    pilot_rounds=pilot_rounds,
+                                    straggler=straggler, skip_max=skip_max))
 
     # -----------------------------------------------------------------
     def resolve(self, topology: Topology) -> ResolvedSchedule:
@@ -135,16 +256,42 @@ class Schedule:
 
         level = dict(enumerate(self.level_rounds or (), start=1))
         tree = _apply_rounds(
-            topology.tree, 0, local_steps=self.local_steps,
+            topology.tree, 0, [0],
+            leaf_steps_of=_leaf_steps_resolver(topology.tree,
+                                               self.local_steps),
             rounds_of_depth=lambda d: None if d == 0 else level.get(d))
         rounds = topology.tree.rounds if self.rounds is None else \
             int(self.rounds)
         if rounds < 0:
             raise ValueError(f"rounds must be >= 0, got {rounds}")
+        tree, runtime_h = self._apply_h_cap(tree)
         chunk = dataclasses.replace(tree, rounds=1)
-        return ResolvedSchedule(
+        resolved = ResolvedSchedule(
             chunk_tree=chunk, rounds=rounds, weighting=self.weighting,
-            per_round_time=chunk.solve_time(), level_plan=None)
+            per_round_time=chunk.solve_time(), level_plan=None,
+            runtime_h=runtime_h)
+        if runtime_h is not None:
+            # the simulated clock charges the RUNTIME H, not the capacity
+            resolved = dataclasses.replace(
+                resolved, per_round_time=resolved.round_time_for(runtime_h))
+        return resolved
+
+    def _apply_h_cap(self, tree: TreeNode):
+        """Pad the leaves to the ``h_cap`` capacity; the displaced per-leaf
+        counts become the session's runtime H (executed via step masks)."""
+        if self.h_cap is None:
+            return tree, None
+        cap = int(self.h_cap)
+        runtime_h = tuple(l.rounds for l in tree.leaves())
+        if cap < max(runtime_h):
+            raise ValueError(
+                f"h_cap={cap} is below the schedule's own local steps "
+                f"(max {max(runtime_h)}); the capacity must cover every "
+                "H the session should be able to execute")
+        padded = _apply_rounds(
+            tree, 0, [0], leaf_steps_of=lambda i, name: cap,
+            rounds_of_depth=lambda d: None)
+        return padded, runtime_h
 
     def _resolve_auto(self, topology: Topology) -> ResolvedSchedule:
         if self.delay is None:
@@ -172,7 +319,14 @@ class Schedule:
         t_cp = dm.t_cp if dm.t_cp is not None else topology.internal_t_cp()
         lp = plan_hierarchical_h(
             levels, C=dm.C, delta=delta, t_total=dm.t_total, t_lp=t_lp,
-            t_cp=t_cp, h_max=dm.h_max)
+            t_cp=t_cp, h_max=dm.h_max,
+            # the compiled capacity bounds the innermost search space, so
+            # the planned round times / root budget stay consistent with
+            # what the executors can actually run
+            h_max0=self.h_cap,
+            straggler=dm.straggler, skip_max=dm.skip_max,
+            base_delays=(topology.leaf_sync_delays()
+                         if dm.straggler is not None else None))
 
         D = len(levels)
         # lp[0] plans the leaves' H; lp[i] (i >= 1) plans how many rounds of
@@ -181,10 +335,18 @@ class Schedule:
         local_steps = int(lp[0]["H"])
         rounds_of = {D - i: int(lp[i]["H"]) for i in range(1, D)}
         tree = _apply_rounds(
-            topology.tree, 0, local_steps=local_steps,
+            topology.tree, 0, [0],
+            leaf_steps_of=lambda i, name: local_steps,
             rounds_of_depth=lambda d: None if d == 0 else rounds_of.get(d))
         root_rounds = max(1, int(dm.t_total / lp[-1]["round_time"]))
+        tree, runtime_h = self._apply_h_cap(tree)
         chunk = dataclasses.replace(tree, rounds=1)
-        return ResolvedSchedule(
+        resolved = ResolvedSchedule(
             chunk_tree=chunk, rounds=root_rounds, weighting=self.weighting,
-            per_round_time=chunk.solve_time(), level_plan=lp)
+            per_round_time=chunk.solve_time(), level_plan=lp,
+            runtime_h=runtime_h, skip=lp[0].get("skip"),
+            straggler_model=dm.straggler)
+        if runtime_h is not None:
+            resolved = dataclasses.replace(
+                resolved, per_round_time=resolved.round_time_for(runtime_h))
+        return resolved

@@ -34,6 +34,7 @@ from typing import Callable, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dual as dual_mod
 from repro.core import tree as tree_mod
@@ -42,7 +43,8 @@ from repro.core.engine import mesh as mesh_mod
 from repro.core.engine import plan as plan_mod
 from repro.core.instrument import SolveResult, record_round
 from repro.api.problem import Problem
-from repro.api.schedule import ResolvedSchedule, Schedule
+from repro.api.schedule import (
+    ResolvedSchedule, Schedule, leaf_h_spec, runtime_tree)
 from repro.api.topology import Topology
 
 Array = jax.Array
@@ -197,6 +199,7 @@ class Session:
         on_round: Optional[Callable[[dict], None]] = None,
         straggler=None,
         lam: Optional[float] = None,
+        local_h=None,
     ) -> SolveResult:
         """Run ``rounds`` root rounds (default: the schedule's).
 
@@ -222,6 +225,17 @@ class Session:
         ``(alpha, w)`` pair is taken as-is, so rebuild ``w`` yourself
         when crossing lambdas.
 
+        ``local_h`` overrides the LOCAL iteration count for this run -- a
+        scalar or a per-leaf sequence.  The schedule is a runtime input of
+        the cached executors (a step mask gating trailing coordinate
+        steps; draws always cover the compiled per-leaf H capacity, so the
+        RNG stream is schedule-independent): running many H values through
+        one session never retraces.  Values are clamped to the compiled
+        capacity -- compile with ``Schedule(h_cap=...)`` for headroom.
+        Default: the schedule's own runtime H (``resolved.runtime_h``)
+        when an ``h_cap`` was declared, else the full compiled H
+        (bit-identical to the static program).
+
         ``straggler`` (a :class:`~repro.runtime.straggler.StragglerPolicy`)
         switches the run to straggler-adaptive async execution: each chunk,
         the policy samples per-leaf sync delays from the topology's nominal
@@ -233,7 +247,11 @@ class Session:
         count in ``participants``.  The final chunk always runs a full
         barrier so the returned iterates satisfy ``w = A alpha``.  An
         always-participate policy is bit-identical to the synchronous
-        run."""
+        run.  When the policy carries an ``adaptive=AdaptiveSchedule``,
+        its replanned H is fed back into the NEXT chunk's step-mask
+        operand (clamped to the compiled capacity): the session replans
+        with ZERO retraces, and each chunk's executed H is recorded in the
+        history (``"h"``)."""
         T = self.resolved.rounds if rounds is None else int(rounds)
         if T < 0:
             raise ValueError(f"rounds must be >= 0, got {T}")
@@ -249,7 +267,8 @@ class Session:
         alpha, w, k = self._start_state(warm_start, key, lam)
         K_root = len(self.resolved.chunk_tree.children)
         chunk_tree, plan = self.resolved.chunk_tree, self.plan
-        dt = self.resolved.per_round_time
+        h_run = local_h if local_h is not None else self.resolved.runtime_h
+        dt = self.resolved.round_time_for(h_run)
 
         # warm restarts continue the history axes instead of resetting the
         # clock to zero and duplicating the warm state as a round-0 entry
@@ -263,7 +282,8 @@ class Session:
         mesh = self.backend == "mesh"
         state_exec = None
         if straggler is not None:
-            t_compute = tree_mod.strip_delays(chunk_tree).solve_time()
+            t_compute = tree_mod.strip_delays(
+                runtime_tree(chunk_tree, h_run)).solve_time()
             t_lp = max([l.t_lp for l in chunk_tree.leaves()])
             straggler.bind(self.topology.leaf_sync_delays(), t_compute,
                            t_lp=t_lp)
@@ -311,6 +331,32 @@ class Session:
                 self._spec_sharding)
         else:
             part_ones = jnp.asarray(plan_mod.full_participation(plan))
+
+        # the runtime schedule: a step mask per chunk.  Loop-invariant
+        # unless an adaptive straggler policy replans H mid-run -- then
+        # only this INPUT array changes, never the compiled program.
+        def steps_dev(h):
+            arr = plan_mod.full_steps(plan) if h is None else \
+                plan_mod.steps_for_h(plan, h)
+            if mesh:
+                return jax.device_put(
+                    jnp.asarray(arr.transpose(1, 0, 2), X.dtype),
+                    self._spec_sharding)
+            return jnp.asarray(arr)
+
+        def h_effective(h):
+            """Per-leaf step counts a chunk actually runs (clamped to the
+            compiled capacity, per-slot specs reduced to their max)."""
+            if h is None:
+                return plan.leaf_h.astype(np.int64)
+            return np.minimum(leaf_h_spec(h, plan.n_leaves), plan.leaf_h)
+
+        steps_now = steps_dev(h_run)
+        h_eff_now = h_effective(h_run)
+        h_now = int(h_eff_now.max())
+        adaptive = straggler is not None and \
+            getattr(straggler, "adaptive", None) is not None
+        next_h = None
         state = None
         if state_exec is not None:
             state = state_exec.init(X, a_carry, w)
@@ -324,6 +370,20 @@ class Session:
             keys = keys_all[t - 1]
             extra = None
             prt = part_ones
+            # apply last chunk's adaptive H suggestion (observed-delay
+            # replanning feeds the NEXT chunk): a new input array only.
+            # Compared on the EFFECTIVE per-leaf counts so a scalar
+            # suggestion always replaces a heterogeneous mask, and the
+            # policy's simulated compute clock is retimed to the new H.
+            if next_h is not None:
+                eff_next = h_effective(next_h)
+                if not np.array_equal(eff_next, h_eff_now):
+                    h_eff_now = eff_next
+                    h_now = int(eff_next.max())
+                    steps_now = steps_dev(next_h)
+                    straggler.retime(tree_mod.strip_delays(
+                        runtime_tree(chunk_tree, next_h)).solve_time())
+                next_h = None
             # history decimation: every k-th round, plus always the last
             rec_now = record_history and (t % every == 0 or t == T)
             if straggler is not None:
@@ -336,29 +396,35 @@ class Session:
                 clock["sync"] += step.dt_sync
                 extra = {"time_sync": clock["sync"],
                          "participants": int(step.mask.sum())}
+                if adaptive:
+                    extra["h"] = h_now
+                    if step.h_suggest is not None:
+                        next_h = int(min(max(step.h_suggest, 1),
+                                         plan.h_max))
             if mesh:
                 kys = jax.device_put(
                     jnp.asarray(keys.transpose(1, 0, 2)),
                     self._spec_sharding)
                 if state_exec is None:
                     a_carry, wrows = self._fn(self._Xs, self._ys, a_carry,
-                                              w, kys, prt, lm_in)
+                                              w, kys, prt, steps_now,
+                                              lm_in)
                     w = wrows[0]
                     if rec_now:
                         record(t, a_carry.reshape(m), extra)
                 else:
                     state = state_exec.step(self._Xs, self._ys, *state,
-                                            kys, prt, lm_in)
+                                            kys, prt, steps_now, lm_in)
                     if rec_now:
                         record(t, state[0].reshape(m), extra)
             elif state_exec is None:
                 a_carry, w = self._fn(X, y, jnp.asarray(keys), a_carry, w,
-                                      prt, lm_in)
+                                      prt, steps_now, lm_in)
                 if rec_now:
                     record(t, a_carry, extra)
             else:
                 state = state_exec.step(X, y, jnp.asarray(keys), state,
-                                        prt, lm_in)
+                                        prt, steps_now, lm_in)
                 if rec_now:
                     record(t, state_exec.finalize(state)[0], extra)
         k = plan_mod.advance_root_key(k, T, K_root)
@@ -373,6 +439,26 @@ class Session:
                            next_key=k, lam=lam)
 
     # ------------------------------------------------------------------
+    def straggler_policy(self, *, seed: int = 0, adaptive=None, **kw):
+        """The :class:`~repro.runtime.straggler.StragglerPolicy` this
+        session's straggler-aware auto-schedule planned: the jointly
+        optimized :class:`BoundedSkip` threshold (``resolved.skip``) with
+        the :class:`~repro.core.delay.StragglerModel` the planner was
+        given.  Requires a schedule compiled with
+        ``DelayModel(straggler=...)``; extra keyword arguments forward to
+        the policy (``warmup=``, ``k_mad=``, ...)."""
+        from repro.runtime.straggler import StragglerPolicy
+        r = self.resolved
+        if r.skip is None or r.straggler_model is None:
+            raise ValueError(
+                "this session's schedule was not planned with "
+                "DelayModel(straggler=StragglerModel(...)); construct a "
+                "StragglerPolicy explicitly instead")
+        return StragglerPolicy(model=r.straggler_model,
+                               max_consecutive=int(r.skip), seed=seed,
+                               adaptive=adaptive, **kw)
+
+    # ------------------------------------------------------------------
     def sweep(
         self,
         spec=None,
@@ -380,6 +466,7 @@ class Session:
         lams=None,
         seeds=None,
         schedules=None,
+        local_hs=None,
         mode: str = "grid",
         continuation: bool = False,
         rounds: Optional[int] = None,
@@ -390,25 +477,32 @@ class Session:
         :class:`~repro.api.sweep.RunSet`.
 
         Pass a :class:`~repro.api.sweep.Sweep` as ``spec``, or build one
-        inline from ``lams=`` / ``seeds=`` / ``schedules=`` (``mode`` is
-        ``"grid"`` -- the cartesian product -- or ``"zip"``;
-        ``continuation=True`` warm-starts a regularization path over the
-        lambda axis, solved in descending-lambda order).
+        inline from ``lams=`` / ``seeds=`` / ``schedules=`` /
+        ``local_hs=`` (``mode`` is ``"grid"`` -- the cartesian product --
+        or ``"zip"``; ``continuation=True`` warm-starts a regularization
+        path over the lambda axis, solved in descending-lambda order).
 
-        On the host backends a (lambda x seed) grid within one schedule
-        runs as ONE vmapped device program per chunk (lambda is a runtime
-        executor input); schedule axes produce distinct plans but share
-        the lambda-free executor cache.  Each member is bit-identical to
-        the corresponding standalone :meth:`run`."""
+        On the host backends a (lambda x local-H x seed) grid within one
+        schedule runs as ONE vmapped device program per chunk (lambda and
+        the step-mask schedule are runtime executor inputs); schedule
+        axes produce distinct plans but share the lambda-free executor
+        cache.  An H axis (``local_hs``: scalars or per-leaf specs,
+        clamped to the compiled capacity -- see ``Schedule(h_cap=...)``)
+        batches over the step-mask operand in the SAME vmapped dispatch.
+        Each member is bit-identical to the corresponding standalone
+        :meth:`run`."""
         from repro.api.sweep import Sweep, run_sweep
         if spec is None:
             spec = Sweep(lams=lams, seeds=seeds, schedules=schedules,
-                         mode=mode, continuation=continuation)
-        elif (any(a is not None for a in (lams, seeds, schedules))
+                         local_hs=local_hs, mode=mode,
+                         continuation=continuation)
+        elif (any(a is not None for a in (lams, seeds, schedules,
+                                          local_hs))
               or mode != "grid" or continuation):
             raise ValueError(
                 "pass either a Sweep spec or inline axes/options (lams=/"
-                "seeds=/schedules=/mode=/continuation=), not both")
+                "seeds=/schedules=/local_hs=/mode=/continuation=), not "
+                "both")
         return run_sweep(self, spec, rounds=rounds,
                          record_history=record_history,
                          history_every=history_every)
@@ -495,15 +589,16 @@ def solve(
     on_round: Optional[Callable[[dict], None]] = None,
     straggler=None,
     lam: Optional[float] = None,
+    local_h=None,
 ) -> SolveResult:
     """One-shot convenience: ``Session.compile(...).run(...)``.  Forwards
     the full ``run`` surface -- including ``warm_start``, ``straggler``
-    and the ``lam`` override -- so the one-shot path has feature parity
-    with a session."""
+    and the ``lam``/``local_h`` overrides -- so the one-shot path has
+    feature parity with a session."""
     sess = Session.compile(problem, topology, schedule, backend=backend,
                            mesh=mesh, mesh_axes=mesh_axes,
                            mesh_use_kernel=mesh_use_kernel)
     return sess.run(rounds, key=key, warm_start=warm_start,
                     record_history=record_history,
                     history_every=history_every, on_round=on_round,
-                    straggler=straggler, lam=lam)
+                    straggler=straggler, lam=lam, local_h=local_h)

@@ -1,5 +1,5 @@
 """Vectorized sweeps: a declarative config grid over (lambda, seed,
-schedule) axes, executed as BATCHED device programs.
+schedule, local-H) axes, executed as BATCHED device programs.
 
 The paper's experiments (Figs. 3-5) and its eq. (11)-(12) analysis are
 grids -- sweeps over regularization, H, and delay regimes -- and the same
@@ -15,16 +15,23 @@ the one-shot :func:`sweep`) runs every config and returns a
 
 Execution model (why this is not a host loop):
 
-  * lambda is a RUNTIME input of the engine executors (see
-    ``engine.host.get_host_executor``), so every lambda shares one
-    compiled chunk program;
-  * on the host backends (``vmap``/``pallas``) the whole (lambda x seed)
-    batch within one schedule runs through the ``batched=True`` executor
-    -- ONE ``jax.vmap``-ed dispatch per root-round chunk for all B
-    configs, with per-config warm-start states and key plans;
+  * lambda AND the local-iteration schedule are RUNTIME inputs of the
+    engine executors (see ``engine.host.get_host_executor``: lambda as
+    the ``lm`` scalar, H as the step-mask operand gating trailing
+    coordinate steps), so every lambda and every H up to the compiled
+    capacity share one compiled chunk program;
+  * on the host backends (``vmap``/``pallas``) the whole (lambda x
+    local-H x seed) batch within one schedule runs through the
+    ``batched=True`` executor -- ONE ``jax.vmap``-ed dispatch per
+    root-round chunk for all B configs, with per-config warm-start
+    states, key plans, and step masks;
+  * a ``local_hs`` axis (the paper's eq.-(12) H sweep -- fig. 4) needs a
+    plan whose H capacity covers the grid: compile the session with
+    ``Schedule(h_cap=max(hs))`` and every H value becomes a mask over
+    the same drawn coordinate stream;
   * a ``schedules`` axis changes the plan, so each schedule compiles its
     own program (the lambda-free executor cache still deduplicates), and
-    its (lambda x seed) sub-batch fuses as above;
+    its (lambda x local-H x seed) sub-batch fuses as above;
   * the mesh backend and ``continuation=True`` paths run members
     sequentially through the SAME cached executors.
 
@@ -68,11 +75,14 @@ class SweepPoint:
     """One resolved config of a :class:`Sweep` (its position on each
     axis); ``schedule`` is an index into ``Sweep.schedules`` (``None`` =
     the session's own schedule), ``seed`` an int / PRNG key (``None`` =
-    the default key, as in ``Session.run``)."""
+    the default key, as in ``Session.run``), ``local_h`` the runtime
+    local-iteration count (scalar or per-leaf; ``None`` = the session
+    schedule's own H)."""
     index: int
     lam: float
     seed: Optional[object] = None
     schedule: Optional[int] = None
+    local_h: Optional[object] = None
 
     def key(self):
         if self.seed is None:
@@ -87,9 +97,14 @@ class SweepPoint:
             seed = int(seed)              # np.int64 is not JSON-serializable
         elif seed is not None and not isinstance(seed, int):
             seed = np.asarray(plan_mod._raw_key(seed)).tolist()
+        h = self.local_h
+        if h is not None:
+            h = int(h) if np.ndim(h) == 0 else \
+                [int(v) for v in np.asarray(h).reshape(-1)]
         return {"lam": float(self.lam),
                 "seed": seed,
-                "schedule": self.schedule}
+                "schedule": self.schedule,
+                "local_h": h}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,15 +116,23 @@ class Sweep:
       session default key);
     * ``schedules`` -- :class:`~repro.api.schedule.Schedule` objects
       (default: the session's schedule);
+    * ``local_hs`` -- runtime local-iteration counts (scalars or per-leaf
+      sequences; default: the session schedule's own H).  H is a runtime
+      step-mask input of the executors, so the whole axis shares ONE
+      compiled program -- compile the session with a covering
+      ``Schedule(h_cap=...)``;
     * ``mode`` -- ``"grid"`` takes the cartesian product of the provided
-      axes (schedules outermost, then lams, then seeds); ``"zip"`` pairs
-      them elementwise (all provided axes must share one length);
+      axes (schedules outermost, then lams, then local_hs, then seeds);
+      ``"zip"`` pairs them elementwise (all provided axes must share one
+      length);
     * ``continuation=True`` -- warm-started regularization path over the
-      lambda axis (descending lambda), per (schedule, seed) chain.
+      lambda axis (descending lambda), per (schedule, local_h, seed)
+      chain.
     """
     lams: Optional[Sequence[float]] = None
     seeds: Optional[Sequence] = None
     schedules: Optional[Sequence[Schedule]] = None
+    local_hs: Optional[Sequence] = None
     mode: str = "grid"
     continuation: bool = False
 
@@ -118,16 +141,18 @@ class Sweep:
             raise ValueError(f"mode must be 'grid' or 'zip', got "
                              f"{self.mode!r}")
         if all(ax is None for ax in (self.lams, self.seeds,
-                                     self.schedules)):
+                                     self.schedules, self.local_hs)):
             raise ValueError("a Sweep needs at least one axis: lams=, "
-                             "seeds=, or schedules=")
+                             "seeds=, schedules=, or local_hs=")
         for name, ax in (("lams", self.lams), ("seeds", self.seeds),
-                         ("schedules", self.schedules)):
+                         ("schedules", self.schedules),
+                         ("local_hs", self.local_hs)):
             if ax is not None and len(ax) == 0:
                 raise ValueError(f"{name} must be non-empty when given")
         if self.mode == "zip":
             sizes = {len(ax) for ax in (self.schedules, self.lams,
-                                        self.seeds) if ax is not None}
+                                        self.local_hs, self.seeds)
+                     if ax is not None}
             if len(sizes) > 1:
                 raise ValueError(
                     f"mode='zip' needs equal-length axes, got lengths "
@@ -143,10 +168,11 @@ class Sweep:
 
     @property
     def shape(self) -> Tuple[int, ...]:
-        """Lengths of the PROVIDED axes, (schedules, lams, seeds) order
-        for ``"grid"``; the common (post-init-validated) length for
-        ``"zip"``."""
-        sizes = [len(ax) for ax in (self.schedules, self.lams, self.seeds)
+        """Lengths of the PROVIDED axes, (schedules, lams, local_hs,
+        seeds) order for ``"grid"``; the common (post-init-validated)
+        length for ``"zip"``."""
+        sizes = [len(ax) for ax in (self.schedules, self.lams,
+                                    self.local_hs, self.seeds)
                  if ax is not None]
         if self.mode == "zip":
             return (sizes[0],)
@@ -162,18 +188,22 @@ class Sweep:
                     lam=float(self.lams[i]) if self.lams is not None
                     else float(default_lam),
                     seed=self.seeds[i] if self.seeds is not None else None,
-                    schedule=i if self.schedules is not None else None)
+                    schedule=i if self.schedules is not None else None,
+                    local_h=(self.local_hs[i]
+                             if self.local_hs is not None else None))
                 for i in range(B)
             ]
         scheds = (range(len(self.schedules))
                   if self.schedules is not None else [None])
         lams = ([float(v) for v in self.lams]
                 if self.lams is not None else [float(default_lam)])
+        hs = list(self.local_hs) if self.local_hs is not None else [None]
         seeds = list(self.seeds) if self.seeds is not None else [None]
         return [
-            SweepPoint(index=i, lam=lam, seed=seed, schedule=si)
-            for i, (si, lam, seed) in enumerate(
-                itertools.product(scheds, lams, seeds))
+            SweepPoint(index=i, lam=lam, seed=seed, schedule=si,
+                       local_h=h)
+            for i, (si, lam, h, seed) in enumerate(
+                itertools.product(scheds, lams, hs, seeds))
         ]
 
 
@@ -283,10 +313,22 @@ def _session_for(session, spec: Sweep, schedule_index):
         mesh_use_kernel=session._mesh_use_kernel)
 
 
+def _steps_for_point(gsess, pt: SweepPoint) -> np.ndarray:
+    """The (S, n, h_max) runtime step mask member ``pt`` executes: its own
+    ``local_h`` when the point sits on an H axis, else the session
+    schedule's runtime H, else the full compiled capacity."""
+    plan = gsess.plan
+    h = pt.local_h if pt.local_h is not None else gsess.resolved.runtime_h
+    return plan_mod.full_steps(plan) if h is None else \
+        plan_mod.steps_for_h(plan, h)
+
+
 def _run_group_batched(gsess, pts: List[SweepPoint], rounds, record_history,
                        history_every):
-    """The fused path: all of a schedule-group's (lambda x seed) configs
-    through ONE vmapped chunk program per root round."""
+    """The fused path: all of a schedule-group's (lambda x local-H x seed)
+    configs through ONE vmapped chunk program per root round -- lambda
+    enters as the per-config ``lm`` scalar, the H axis as the per-config
+    step-mask operand."""
     from repro.api.session import _objective
     prob, plan, resolved = gsess.problem, gsess.plan, gsess.resolved
     X, y, loss = prob.X, prob.y, prob.loss
@@ -297,7 +339,11 @@ def _run_group_batched(gsess, pts: List[SweepPoint], rounds, record_history,
         raise ValueError(f"history_every must be >= 1, got {every}")
     chunk = resolved.chunk_tree
     K_root = len(chunk.children)
-    dt = resolved.per_round_time
+    # per-member simulated round time: an H-axis member's clock charges
+    # its own runtime H, exactly as the standalone run does
+    dts = [resolved.round_time_for(
+        pt.local_h if pt.local_h is not None else resolved.runtime_h)
+        for pt in pts]
     B = len(pts)
 
     fnb = host_mod.get_host_executor(
@@ -307,6 +353,8 @@ def _run_group_batched(gsess, pts: List[SweepPoint], rounds, record_history,
     keys_all = jnp.asarray(np.stack([
         plan_mod.chunked_key_plan(chunk, plan, k, T) for k in raw_keys]))
     part = jnp.asarray(plan_mod.full_participation(plan))
+    steps = jnp.asarray(np.stack([_steps_for_point(gsess, pt)
+                                  for pt in pts]))      # (B, S, n, h_max)
     lms = jnp.stack([host_mod.regularizer_scale(pt.lam, m, X.dtype)
                      for pt in pts])
     a = jnp.zeros((B, m), X.dtype)
@@ -328,7 +376,7 @@ def _run_group_batched(gsess, pts: List[SweepPoint], rounds, record_history,
     if record_history:
         rec(0, a)
     for t in range(1, T + 1):
-        a, w = fnb(X, y, keys_all[:, t - 1], a, w, part, lms)
+        a, w = fnb(X, y, keys_all[:, t - 1], a, w, part, steps, lms)
         if record_history and (t % every == 0 or t == T):
             rec(t, a)
     next_keys = [plan_mod.advance_root_key(k, T, K_root) for k in raw_keys]
@@ -336,7 +384,7 @@ def _run_group_batched(gsess, pts: List[SweepPoint], rounds, record_history,
     histories: List[List[dict]] = [[] for _ in pts]
     for t, vals in recorded:
         for b, (dv, pv) in enumerate(vals):
-            record_round(histories[b], t, t * dt, float(dv), float(pv))
+            record_round(histories[b], t, t * dts[b], float(dv), float(pv))
     results = [
         SolveResult(alpha=a[b], w=w[b], history=histories[b],
                     next_key=next_keys[b], lam=pts[b].lam)
@@ -361,12 +409,13 @@ def _run_group_sequential(gsess, pts: List[SweepPoint], rounds,
         X = gsess.problem.X
         chains: Dict[object, List[SweepPoint]] = {}
         for pt in pts:
-            chains.setdefault(repr(pt.seed), []).append(pt)
+            chains.setdefault((repr(pt.seed), repr(pt.local_h)),
+                              []).append(pt)
         for chain in chains.values():
             prev = None
             for pt in sorted(chain, key=lambda p: -p.lam):
                 res = gsess.run(
-                    rounds, key=pt.key(), lam=pt.lam,
+                    rounds, key=pt.key(), lam=pt.lam, local_h=pt.local_h,
                     warm_start=None if prev is None
                     else (prev.alpha, w_of_alpha(prev.alpha, X, pt.lam)),
                     record_history=record_history,
@@ -376,7 +425,7 @@ def _run_group_sequential(gsess, pts: List[SweepPoint], rounds,
     else:
         for pt in pts:
             results[pt.index] = gsess.run(
-                rounds, key=pt.key(), lam=pt.lam,
+                rounds, key=pt.key(), lam=pt.lam, local_h=pt.local_h,
                 record_history=record_history, history_every=history_every)
     return [results[pt.index] for pt in pts]
 
@@ -428,6 +477,7 @@ def sweep(
     lams: Optional[Sequence[float]] = None,
     seeds: Optional[Sequence] = None,
     schedules: Optional[Sequence[Schedule]] = None,
+    local_hs: Optional[Sequence] = None,
     mode: str = "grid",
     continuation: bool = False,
     rounds: Optional[int] = None,
@@ -448,6 +498,7 @@ def sweep(
     # Session.sweep raises if a spec AND inline axes are both given --
     # forward everything so the one-shot path validates identically
     return sess.sweep(spec, lams=lams, seeds=seeds, schedules=schedules,
-                      mode=mode, continuation=continuation,
+                      local_hs=local_hs, mode=mode,
+                      continuation=continuation,
                       rounds=rounds, record_history=record_history,
                       history_every=history_every)

@@ -159,6 +159,102 @@ class FixedLevel:
         return self.delay_s
 
 
+def simulate_bounded_skip(
+    base_delays,
+    model: "StragglerModel",
+    *,
+    max_consecutive: int,
+    rel_floor: float = 0.5,
+    k_mad: float = 5.0,
+    warmup: int = 1,
+    n_rounds: int = 512,
+    seed: int = 0,
+) -> Tuple[float, float]:
+    """Monte-carlo the bounded-skip barrier over sampled per-leaf delays.
+
+    Replays the ACTUAL runtime decision machinery of
+    ``repro.runtime.straggler`` -- the fleet :class:`StepTimer` window
+    (median + ``k_mad`` MAD, ``rel_floor`` relative slowdown, ``warmup``
+    rounds before skips kick in) and one :class:`BoundedSkip` per leaf --
+    over delays drawn from ``model`` around ``base_delays``, so the
+    planner optimizes the same policy the session will execute.  Returns
+    ``(mean per-round barrier delay -- the max over PARTICIPATING leaves
+    --, mean participation fraction)``; ``max_consecutive=0`` never skips
+    and reproduces the synchronous barrier (mean max over ALL leaves)."""
+    # runtime decision classes; imported lazily (runtime.straggler imports
+    # this module for its model/planner types)
+    from repro.runtime.straggler import BoundedSkip, StepTimer
+    base = np.atleast_1d(np.asarray(base_delays, np.float64))
+    n = base.size
+    rng = np.random.default_rng(seed)
+    timer = StepTimer()
+    skips = [BoundedSkip(max_consecutive=max_consecutive)
+             for _ in range(n)]
+    delay_sum = 0.0
+    part_sum = 0
+    for r in range(int(n_rounds)):
+        d = model.sample(base, rng)
+        warm = r >= warmup
+        skip = np.array([
+            skips[i].decide(warm and timer.is_straggling(
+                float(d[i]), k=k_mad, rel_floor=rel_floor))
+            for i in range(n)
+        ])
+        for i in range(n):
+            timer.observe(float(d[i]))
+        part = ~skip
+        if part.any():
+            delay_sum += float(d[part].max())
+        part_sum += int(part.sum())
+    return delay_sum / n_rounds, part_sum / (n_rounds * n)
+
+
+def optimal_h_bounded_skip(
+    *,
+    C: float,
+    K: int,
+    delta: float,
+    t_total: float,
+    t_lp: float,
+    t_cp: float,
+    base_delays,
+    model: "StragglerModel",
+    skip_max: int = 3,
+    h_max: int = 10**6,
+    rel_floor: float = 0.5,
+    n_rounds: int = 512,
+    seed: int = 0,
+) -> dict:
+    """The straggler-aware eq. (12): jointly optimize the local iteration
+    count H and the :class:`~repro.runtime.straggler.BoundedSkip`
+    threshold ``s``.
+
+    For each candidate ``s in 0..skip_max`` the bounded-skip barrier is
+    simulated over the observed/nominal per-leaf delays
+    (:func:`simulate_bounded_skip`), which yields the *effective* per-round
+    delay (the straggler's uplink no longer gates the round) and the mean
+    participation fraction ``rho``; a dropped leaf contributes no work to
+    the round, so eq. (11)'s improvement constant dilutes to ``C * rho``.
+    Each ``s`` then gets its own eq.-(12) optimal H, and the (H, s) pair
+    with the best log-bound wins.  Returns ``{H, skip, t_delay,
+    participation, log_bound}``."""
+    _check_improvement_constant(C, K)
+    if skip_max < 0:
+        raise ValueError(f"skip_max must be >= 0, got {skip_max}")
+    best: Optional[dict] = None
+    for s in range(int(skip_max) + 1):
+        t_delay, rho = simulate_bounded_skip(
+            base_delays, model, max_consecutive=s, rel_floor=rel_floor,
+            n_rounds=n_rounds, seed=seed)
+        c_eff = max(C * rho, 1e-12)
+        h, v = optimal_h(C=c_eff, K=K, delta=delta, t_total=t_total,
+                         t_lp=t_lp, t_delay=t_delay, t_cp=t_cp, h_max=h_max)
+        if best is None or v < best["log_bound"]:
+            best = {"H": h, "skip": s, "t_delay": t_delay,
+                    "participation": rho, "log_bound": v}
+    return best
+
+
 def plan_hierarchical_h(
     levels: Sequence[SyncLevel],
     *,
@@ -168,8 +264,21 @@ def plan_hierarchical_h(
     t_lp: float,
     t_cp: float = 0.0,
     h_max: int = 10**6,
+    h_max0: Optional[int] = None,
+    straggler: Optional["StragglerModel"] = None,
+    base_delays=None,
+    skip_max: int = 3,
+    rel_floor: float = 0.5,
+    sim_rounds: int = 512,
+    seed: int = 0,
 ) -> list[dict]:
     """Choose per-level local-round counts bottom-up with eq. (12).
+
+    ``h_max0`` additionally caps the INNERMOST level's H (the leaves'
+    local steps) -- the compiled H capacity when the schedule declares an
+    ``h_cap`` -- so the whole plan (round times, the root-round budget)
+    is optimized under, and stays consistent with, what the executors can
+    actually run.
 
     Level 0 is the innermost (fastest link). For level i, the 'local
     iteration' cost is the full inner-level round time, and the 'delay' is
@@ -177,6 +286,19 @@ def plan_hierarchical_h(
 
     This is the paper's SS6 applied recursively: each level treats the level
     below it as its LocalDualMethod.
+
+    ``straggler`` switches the innermost level (the one whose barrier the
+    per-leaf straggler tail actually gates) to the straggler-aware joint
+    (H, skip-threshold) optimization (:func:`optimal_h_bounded_skip`) over
+    ``base_delays`` (default: the level's own nominal delay per group
+    member; sessions pass the per-leaf sync-PATH delays over the whole
+    fleet -- the barrier the runtime ``StragglerPolicy`` actually
+    operates, since it drops leaves at root-chunk granularity; exact for
+    stars, a deliberate fleet-level approximation of the innermost
+    barrier on deeper trees); its plan row gains ``skip``/
+    ``participation`` and its ``round_time``/``delay`` use the
+    bounded-skip effective barrier cost, which the outer levels then
+    amortize.
     """
     for lvl in levels:
         try:
@@ -186,19 +308,37 @@ def plan_hierarchical_h(
     plan = []
     inner_iter_time = t_lp
     inner_delta = delta
-    for lvl in levels:
-        h, _ = optimal_h(
-            C=C, K=lvl.group_size, delta=inner_delta, t_total=t_total,
-            t_lp=inner_iter_time, t_delay=lvl.round_delay(), t_cp=t_cp,
-            h_max=h_max,
-        )
-        round_time = inner_iter_time * h + lvl.round_delay() + t_cp
+    for i, lvl in enumerate(levels):
+        c_lvl = C
+        hm = h_max if (i > 0 or h_max0 is None) else min(h_max, int(h_max0))
+        if i == 0 and straggler is not None:
+            base = (base_delays if base_delays is not None
+                    else [lvl.round_delay()] * lvl.group_size)
+            row = optimal_h_bounded_skip(
+                C=C, K=lvl.group_size, delta=inner_delta, t_total=t_total,
+                t_lp=inner_iter_time, t_cp=t_cp, base_delays=base,
+                model=straggler, skip_max=skip_max, h_max=hm,
+                rel_floor=rel_floor, n_rounds=sim_rounds, seed=seed)
+            h, t_delay = row["H"], row["t_delay"]
+            c_lvl = max(C * row["participation"], 1e-12)
+            extra = {"skip": row["skip"],
+                     "participation": row["participation"]}
+        else:
+            t_delay = lvl.round_delay()
+            h, _ = optimal_h(
+                C=C, K=lvl.group_size, delta=inner_delta, t_total=t_total,
+                t_lp=inner_iter_time, t_delay=t_delay, t_cp=t_cp,
+                h_max=hm,
+            )
+            extra = {}
+        round_time = inner_iter_time * h + t_delay + t_cp
         plan.append({"name": lvl.name, "H": h, "round_time": round_time,
-                     "delay": lvl.round_delay()})
+                     "delay": t_delay, **extra})
         # the level above sees one of our rounds as its local iteration, and
         # its effective per-iteration improvement shrinks geometrically
         inner_iter_time = round_time
-        inner_delta = 1.0 - per_round_factor(h, C, lvl.group_size, inner_delta)
+        inner_delta = 1.0 - per_round_factor(h, c_lvl, lvl.group_size,
+                                             inner_delta)
     return plan
 
 

@@ -7,13 +7,17 @@ imbalanced, heterogeneous per-node rounds) as a single compiled program:
     plan  = compile_tree(tree)          # flat static schedule (the IR)
     keys  = key_plan(tree, plan, key)   # legacy-RNG per-solve key replay
     run   = get_host_executor(plan, ...)  # ONE jit'd lax.scan
-    alpha, w[, duals, primals] = run(X, y, keys, alpha0, w0, participation)
+    alpha, w[, duals, primals] = run(X, y, keys, alpha0, w0,
+                                     participation, steps, lm)
 
 ``participation`` is the runtime (S, n) sync-attendance mask
 (``full_participation(plan)`` = the synchronous schedule, bit-identical
 to masks absent; see ``engine.plan`` for the async / stale-sync
 semantics and ``get_host_executor(..., carry_state=True)`` for the
-state-threading variant async sessions use).
+state-threading variant async sessions use); ``steps`` is the runtime
+(S, n, h_max) step mask (``full_steps(plan)`` = the static-H schedule,
+``steps_for_h(plan, h)`` = heterogeneous / replanned local-H schedules
+through the same compiled program); ``lm`` the runtime lambda*m scalar.
 
 Backends:
   * ``backend="vmap"``   -- host/XLA: batched leaf solves via vmapped
@@ -39,7 +43,8 @@ from repro.core.engine.host import (  # noqa: F401
     execute_plan, executor_cache_stats, get_host_executor)
 from repro.core.engine.plan import (  # noqa: F401
     LevelSpec, TreePlan, balanced_tree, chunk_participation, compile_tree,
-    full_participation, index_plan, key_plan, tree_from_level_plan,
+    full_participation, full_steps, index_plan, key_plan, steps_for_h,
+    tree_from_level_plan,
 )
 from repro.core.instrument import SolveResult
 from repro.core.tree import TreeNode

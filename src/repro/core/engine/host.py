@@ -20,6 +20,14 @@ CURRENT server state, exactly the bounded-staleness aggregation of delayed
 distributed methods.  With an all-ones mask every gate reduces to the
 synchronous path bit-for-bit (``x/1.0 == x``, ``srvW == snapW``).
 
+Runtime schedules: the executor also takes a ``(S, n, h_max)`` step mask
+(see ``engine.plan.steps_for_h``).  Coordinate draws always happen at the
+plan's per-leaf H capacity; the mask zeroes the deltas of trailing steps,
+so per-leaf / per-slot heterogeneous H is a runtime input of the SAME
+compiled program (H-axis sweeps and delay-adaptive replanning never
+retrace).  An all-ones step mask multiplies the static per-leaf H gate by
+exactly 1.0 -- bit-identical to the static-H schedule.
+
 Optionally records the (dual, primal) series at root-sync ticks inside the
 same program (a ``lax.cond`` so the objective is only evaluated T_root
 times, as the legacy history recording did on the host).
@@ -74,32 +82,36 @@ def get_host_executor(
     """Build (or fetch from cache) the jitted executor for ``plan``.
 
     The default executor has signature ``fn(X, y, keys, alpha0, w0,
-    participation, lm) -> (alpha, w[, duals, primals])`` with ``keys`` the
-    (S, n, 2) per-solve key plan (``plan.key_plan``), ``(alpha0, w0)`` the
-    flat (m,) / (d,) warm-start state (zeros for a cold start),
-    ``participation`` the (S, n) 0/1 sync-attendance mask
-    (``plan.full_participation`` for the synchronous schedule), and ``lm``
-    the RUNTIME regularization scalar lambda*m (:func:`regularizer_scale`)
-    -- a whole lambda grid shares one compiled program; coordinate draws
-    happen inside it.  The executor is specialized to the plan structure
-    but re-usable across keys/data/start-state/masks/lambdas of the same
-    shape.
+    participation, steps, lm) -> (alpha, w[, duals, primals])`` with
+    ``keys`` the (S, n, 2) per-solve key plan (``plan.key_plan``),
+    ``(alpha0, w0)`` the flat (m,) / (d,) warm-start state (zeros for a
+    cold start), ``participation`` the (S, n) 0/1 sync-attendance mask
+    (``plan.full_participation`` for the synchronous schedule), ``steps``
+    the (S, n, h_max) 0/1 runtime step mask (``plan.full_steps`` for the
+    static-H schedule; ``plan.steps_for_h`` for heterogeneous / replanned
+    H), and ``lm`` the RUNTIME regularization scalar lambda*m
+    (:func:`regularizer_scale`) -- a whole lambda grid AND a whole H grid
+    share one compiled program; coordinate draws happen inside it at the
+    per-leaf H capacity, independent of the step mask.  The executor is
+    specialized to the plan structure but re-usable across
+    keys/data/start-state/masks/schedules/lambdas of the same shape.
 
     ``carry_state=True`` instead returns a :class:`StateExecutor` whose
-    ``step(X, y, keys, state, participation, lm) -> state`` threads the
-    FULL blocked carry ``(a, w, snapA, snapW, srvW)`` across invocations:
-    with participation masks the flat ``(alpha, w)`` pair is no longer a
-    complete chunk carry (absent leaves hold divergent replicas and stale
-    snapshots), so async sessions must thread this state instead.  Under
-    all-ones masks ``init -> step^T -> finalize`` is bit-identical to the
-    flat executor chunked the same way.
+    ``step(X, y, keys, state, participation, steps, lm) -> state`` threads
+    the FULL blocked carry ``(a, w, snapA, snapW, srvW)`` across
+    invocations: with participation masks the flat ``(alpha, w)`` pair is
+    no longer a complete chunk carry (absent leaves hold divergent
+    replicas and stale snapshots), so async sessions must thread this
+    state instead.  Under all-ones masks ``init -> step^T -> finalize`` is
+    bit-identical to the flat executor chunked the same way.
 
     ``batched=True`` returns the vmapped variant: one device program for a
-    leading config axis B over (keys, alpha0, w0, lm) -- a lambda grid,
-    an RNG-seed grid, and per-config warm-start states fuse into a single
-    dispatch per chunk (``fn(X, y, keys (B,S,n,2), alpha0 (B,m), w0 (B,d),
-    participation (S,n) shared, lm (B,))``).  Composes with
-    ``carry_state`` (init/step/finalize all carry the leading B axis)."""
+    leading config axis B over (keys, alpha0, w0, steps, lm) -- a lambda
+    grid, an RNG-seed grid, an H grid, and per-config warm-start states
+    fuse into a single dispatch per chunk (``fn(X, y, keys (B,S,n,2),
+    alpha0 (B,m), w0 (B,d), participation (S,n) shared,
+    steps (B,S,n,h_max), lm (B,))``).  Composes with ``carry_state``
+    (init/step/finalize all carry the leading B axis)."""
     if backend not in ("vmap", "pallas"):
         raise ValueError(f"unknown backend {backend!r} (use 'vmap' or "
                          "'pallas'; the mesh backend is engine.mesh)")
@@ -127,7 +139,8 @@ def get_host_executor(
 class StateExecutor(NamedTuple):
     """The state-threading executor triple (see ``get_host_executor``):
     ``init(X, alpha0, w0) -> state``, ``step(X, y, keys, state,
-    participation, lm) -> state``, ``finalize(state) -> (alpha, w)``."""
+    participation, steps, lm) -> state``, ``finalize(state) ->
+    (alpha, w)``."""
     init: Callable
     step: Callable
     finalize: Callable
@@ -179,10 +192,11 @@ def _build_host_executor(plan: TreePlan, *, loss, record_history,
         from repro.kernels.sdca.ref import sdca_block_ref
 
     def _scan(X: Array, y: Array, keys: Array, carry0, participation: Array,
-              lm: Array):
+              steps: Array, lm: Array):
         """Trace the full tick scan from an explicit blocked carry; returns
-        (final carry, history stack, the objective closure).  ``lm`` is the
-        runtime lambda*m scalar (:func:`regularizer_scale`)."""
+        (final carry, history stack, the objective closure).  ``steps`` is
+        the (S, n, h_max) runtime step mask, ``lm`` the runtime lambda*m
+        scalar (:func:`regularizer_scale`)."""
         dtype = X.dtype
         lam = lm / m                     # only the in-program objective
         vmask = valid_f.astype(dtype)
@@ -201,9 +215,11 @@ def _build_host_executor(plan: TreePlan, *, loss, record_history,
                 idx_s = idx_s.at[rows, :h].set(draws)
             return idx_s
 
-        def leaf_batch(a, w, keys_s, smask):
+        def leaf_batch(a, w, keys_s, smask, steps_s):
             idx_s = draw_idx(keys_s)
-            mk = (hmask * smask[:, None]).astype(dtype)       # (n, h_max)
+            # the static per-leaf H-capacity gate x the solve slot x the
+            # runtime step mask; all-ones steps multiply by exactly 1.0
+            mk = (hmask * smask[:, None] * steps_s).astype(dtype)
             if use_kernel:
                 return sdca_block_kernel(
                     Xb, yb, a, w, idx_s, loss=loss, lm=lm, step_mask=mk,
@@ -222,8 +238,8 @@ def _build_host_executor(plan: TreePlan, *, loss, record_history,
 
         def tick(carry, xs):
             a, w, snapA, snapW, srvW = carry
-            keys_s, smask, sync_s, ref_s, hflag, part_s = xs
-            da, dw = leaf_batch(a, w, keys_s, smask)
+            keys_s, smask, sync_s, ref_s, hflag, part_s, steps_s = xs
+            da, dw = leaf_batch(a, w, keys_s, smask, steps_s)
             a = a + da
             w = w + dw
             # syncs bottom-up; a leaf with part_s == 0 is absent from every
@@ -300,7 +316,7 @@ def _build_host_executor(plan: TreePlan, *, loss, record_history,
 
         xs = (keys, solve_mask.astype(dtype), sync_mask.astype(dtype),
               refresh_mask.astype(dtype), root_sync,
-              participation.astype(dtype))
+              participation.astype(dtype), steps.astype(dtype))
         carry, hist = jax.lax.scan(tick, carry0, xs)
         return carry, hist, objective
 
@@ -318,10 +334,10 @@ def _build_host_executor(plan: TreePlan, *, loss, record_history,
                 jnp.broadcast_to(w0[None], (D, n, d_feat)))
 
     def solve_fn(X: Array, y: Array, keys: Array, alpha0: Array, w0_in: Array,
-                 participation: Array, lm: Array):
+                 participation: Array, steps: Array, lm: Array):
         carry0 = _init_carry(X, alpha0, w0_in)
         (a, w, _, _, _), hist, objective = _scan(X, y, keys, carry0,
-                                                 participation, lm)
+                                                 participation, steps, lm)
         alpha = a.reshape(-1)[flat_map]
         if record_history:
             d0, p0 = objective(carry0[0], carry0[1])
@@ -331,27 +347,27 @@ def _build_host_executor(plan: TreePlan, *, loss, record_history,
         return alpha, w[0]
 
     if carry_state:
-        def step_fn(X, y, keys, state, participation, lm):
-            carry, _, _ = _scan(X, y, keys, state, participation, lm)
+        def step_fn(X, y, keys, state, participation, steps, lm):
+            carry, _, _ = _scan(X, y, keys, state, participation, steps, lm)
             return carry
 
         def finalize(state):
             return state[0].reshape(-1)[flat_map], state[1][0]
 
         if batched:
-            # leading config axis B over (state, keys, lm); X/y and the
-            # participation mask are shared across the batch
+            # leading config axis B over (state, keys, steps, lm); X/y and
+            # the participation mask are shared across the batch
             return StateExecutor(
                 init=jax.jit(jax.vmap(_init_carry, in_axes=(None, 0, 0))),
-                step=jax.jit(jax.vmap(step_fn,
-                                      in_axes=(None, None, 0, 0, None, 0))),
+                step=jax.jit(jax.vmap(
+                    step_fn, in_axes=(None, None, 0, 0, None, 0, 0))),
                 finalize=jax.jit(jax.vmap(finalize)))
         return StateExecutor(init=jax.jit(_init_carry),
                              step=jax.jit(step_fn),
                              finalize=jax.jit(finalize))
     if batched:
         return jax.jit(jax.vmap(solve_fn,
-                                in_axes=(None, None, 0, 0, 0, None, 0)))
+                                in_axes=(None, None, 0, 0, 0, None, 0, 0)))
     return jax.jit(solve_fn)
 
 
@@ -368,14 +384,17 @@ def execute_plan(
     alpha0: Array = None,
     w0: Array = None,
     participation: Array = None,
+    steps: Array = None,
 ) -> Tuple:
     """Convenience: build/fetch the executor and run it once (``keys`` is
     the (S, n, 2) per-solve key plan from ``plan.key_plan``; ``alpha0``/
     ``w0`` warm-start the run, defaulting to the cold all-zeros state;
     ``participation`` is the (S, n) sync-attendance mask, all-ones --
-    the synchronous schedule -- by default).  ``lam`` is a runtime input
-    of the (lambda-free) cached executor, not a cache key."""
-    from repro.core.engine.plan import full_participation
+    the synchronous schedule -- by default; ``steps`` the (S, n, h_max)
+    runtime step mask, all-ones -- the static-H schedule -- by default).
+    ``lam`` is a runtime input of the (lambda-free) cached executor, not
+    a cache key."""
+    from repro.core.engine.plan import full_participation, full_steps
     fn = get_host_executor(plan, loss=loss,
                            record_history=record_history, backend=backend)
     if alpha0 is None:
@@ -384,6 +403,8 @@ def execute_plan(
         w0 = jnp.zeros((X.shape[1],), X.dtype)
     if participation is None:
         participation = full_participation(plan)
+    if steps is None:
+        steps = full_steps(plan)
     return fn(X, y, jnp.asarray(keys), alpha0, w0,
-              jnp.asarray(participation),
+              jnp.asarray(participation), jnp.asarray(steps),
               regularizer_scale(lam, plan.m_total, X.dtype))

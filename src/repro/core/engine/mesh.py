@@ -26,6 +26,14 @@ depth and deeper (so partially-present subtrees renormalize exactly like
 the host backend), carrying explicit per-depth snapshots and the
 group-coherent server ``w`` (``srvW``) that bounded-staleness re-joins fold
 into.  An all-ones mask reduces every gate to the synchronous program.
+
+Runtime schedules: the program also takes the ``(n, S, h_max)`` leaf-major
+step mask (see ``engine.plan.steps_for_h``).  Every solve slot draws the
+full H-capacity coordinate stream; the mask gates the trailing deltas in
+the Pallas kernel (its ``step_mask`` operand), so heterogeneous / replanned
+H is a runtime input of the one cached device program.  All-ones step
+masks multiply the deltas by exactly 1.0 -- bit-identical to the static-H
+program.
 """
 from __future__ import annotations
 
@@ -35,11 +43,13 @@ from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import on_tpu, shard_map
 from repro.core.dual import Loss
-from repro.core.engine.plan import TreePlan, full_participation, key_plan
+from repro.core.engine.plan import (
+    TreePlan, full_participation, full_steps, key_plan)
 from repro.core.tree import TreeNode
 
 Array = jax.Array
@@ -77,14 +87,17 @@ def get_mesh_executor(
     """Build (or fetch from cache) the jitted ``shard_map`` program for
     ``plan`` on ``mesh``.
 
-    Signature: ``fn(Xs, ys, a0, w0, kys, part, lm) -> (alpha_blocked,
-    w_rows)`` with ``Xs (n, m_b, d)``, ``a0 (n, m_b)`` sharded over the
-    (reversed) axes, ``w0 (d,)`` replicated, ``kys (n, S, 2)`` the
-    leaf-major per-solve key plan, ``part (n, S)`` the leaf-major
-    participation mask (all-ones for the synchronous schedule), and ``lm``
-    the replicated RUNTIME regularization scalar lambda*m
-    (:func:`repro.core.engine.host.regularizer_scale`) -- lambda is not a
-    cache key, so a regularization grid reuses one device program.
+    Signature: ``fn(Xs, ys, a0, w0, kys, part, steps, lm) ->
+    (alpha_blocked, w_rows)`` with ``Xs (n, m_b, d)``, ``a0 (n, m_b)``
+    sharded over the (reversed) axes, ``w0 (d,)`` replicated, ``kys
+    (n, S, 2)`` the leaf-major per-solve key plan, ``part (n, S)`` the
+    leaf-major participation mask (all-ones for the synchronous schedule),
+    ``steps (n, S, h_max)`` the leaf-major runtime step mask (all-ones for
+    the static-H schedule), and ``lm`` the replicated RUNTIME
+    regularization scalar lambda*m
+    (:func:`repro.core.engine.host.regularizer_scale`) -- neither lambda
+    nor the H schedule is a cache key, so regularization AND local-H grids
+    reuse one device program.
 
     ``carry_state=True`` returns a :class:`~repro.core.engine.host.
     StateExecutor` threading the full per-leaf state (replica ``w``,
@@ -112,23 +125,27 @@ def get_mesh_executor(
     wcoef_leaf = [1.0 / math.prod(ks[d:]) for d in range(L)]
     H = plan.h_max
 
-    def leaf_solve(Xs, ys, a, w, k_t, lm):
+    def leaf_solve(Xs, ys, a, w, k_t, st_t, lm):
         """One Procedure-P call on this shard's (1, m_b) block, drawing the
-        tick's coordinates from the replayed per-solve key."""
+        tick's coordinates from the replayed per-solve key; ``st_t`` is the
+        slot's (1, H) runtime step mask (all-ones => the static-H solve,
+        bit-for-bit: the mask multiplies each delta by 1.0)."""
         ix = jax.random.randint(k_t, (H,), 0, m_b)[None]  # legacy draw shape
         if use_kernel:
             from repro.kernels.sdca.kernel import sdca_block_kernel
             da, dw = sdca_block_kernel(Xs, ys, a, w, ix, loss=loss, lm=lm,
+                                       step_mask=st_t,
                                        interpret=not on_tpu())
         else:
             from repro.kernels.sdca.ref import sdca_block_ref
-            da, dw = sdca_block_ref(Xs, ys, a, w, ix, loss=loss, lm=lm)
+            da, dw = sdca_block_ref(Xs, ys, a, w, ix, loss=loss, lm=lm,
+                                    step_mask=st_t)
         return da, dw[0]
 
-    def make_run(Xs, ys, kys, part, lm):
+    def make_run(Xs, ys, kys, part, steps, lm):
         """Build the recursive rounds-driver over this shard's inputs:
-        Xs (1, m_b, d), kys (1, S, 2), part (1, S); ``lm`` is the
-        replicated runtime lambda*m scalar."""
+        Xs (1, m_b, d), kys (1, S, 2), part (1, S), steps (1, S, H);
+        ``lm`` is the replicated runtime lambda*m scalar."""
         dt = Xs.dtype
         one = jnp.ones((), dt)
 
@@ -189,7 +206,9 @@ def get_mesh_executor(
                 if depth == L - 1:
                     k_t = jax.lax.dynamic_index_in_dim(kys, t_c, axis=1,
                                                        keepdims=False)[0]
-                    da, dw = leaf_solve(Xs, ys, a_c, w_c, k_t, lm)
+                    st_t = jax.lax.dynamic_index_in_dim(steps, t_c, axis=1,
+                                                        keepdims=False)
+                    da, dw = leaf_solve(Xs, ys, a_c, w_c, k_t, st_t, lm)
                     a_c, w_c = a_c + da, w_c + dw
                     t_c = t_c + 1
                 else:
@@ -204,21 +223,21 @@ def get_mesh_executor(
 
         return run
 
-    def program(Xs, ys, a0, w0, kys, part, lm):
+    def program(Xs, ys, a0, w0, kys, part, steps, lm):
         # Xs (1, m_b, d), a0 (1, m_b), w0 (d,), kys (1, S, 2),
-        # part (1, S) on this shard; lm replicated scalar
+        # part (1, S), steps (1, S, H) on this shard; lm replicated scalar
         d_feat = Xs.shape[-1]
-        run = make_run(Xs, ys, kys, part, lm)
+        run = make_run(Xs, ys, kys, part, steps, lm)
         snapA0 = jnp.broadcast_to(a0[None], (L,) + a0.shape)
         snapW0 = jnp.broadcast_to(w0[None], (L, d_feat))
         a_end, w_end, _, _, _, _ = run(0, a0, w0, jnp.int32(0),
                                        snapA0, snapW0, snapW0)
         return a_end, jnp.broadcast_to(w_end[None], (1, d_feat))
 
-    def program_state(Xs, ys, a0, wrows, sA, sW, sV, kys, part, lm):
+    def program_state(Xs, ys, a0, wrows, sA, sW, sV, kys, part, steps, lm):
         # state is leaf-major: a0 (1, m_b), wrows (1, d), sA (1, L, m_b),
         # sW/sV (1, L, d) on this shard; lm replicated scalar
-        run = make_run(Xs, ys, kys, part, lm)
+        run = make_run(Xs, ys, kys, part, steps, lm)
         a_end, w_end, _, sA2, sW2, sV2 = run(
             0, a0, wrows[0], jnp.int32(0), sA[0][:, None, :], sW[0], sV[0])
         return (a_end, w_end[None], sA2[:, 0, :][None], sW2[None],
@@ -231,7 +250,7 @@ def get_mesh_executor(
         sharding = NamedSharding(mesh, spec_in)
         step = jax.jit(shard_map(
             program_state, mesh=mesh,
-            in_specs=(spec_in,) * 9 + (P(),), out_specs=(spec_in,) * 5))
+            in_specs=(spec_in,) * 10 + (P(),), out_specs=(spec_in,) * 5))
 
         def init(X, alpha, w):
             dt = X.dtype
@@ -251,7 +270,7 @@ def get_mesh_executor(
         fn = jax.jit(shard_map(
             program, mesh=mesh,
             in_specs=(spec_in, spec_in, spec_in, P(), spec_in, spec_in,
-                      P()),
+                      spec_in, P()),
             out_specs=(spec_in, spec_in),
         ))
     _MESH_EXEC_CACHE[cache_key] = fn
@@ -275,11 +294,14 @@ def execute_plan_mesh(
     alpha0: Array = None,
     w0: Array = None,
     participation: Array = None,
+    steps: Array = None,
 ) -> Tuple[Array, Array]:
     """Run the plan on ``mesh``; returns (alpha (m,), w (d,)).  ``alpha0``/
     ``w0`` warm-start the run (cold all-zeros by default);
     ``participation`` is the (S, n) sync-attendance mask (all-ones -- the
-    synchronous schedule -- by default)."""
+    synchronous schedule -- by default); ``steps`` the (S, n, h_max)
+    runtime step mask (all-ones -- the static-H schedule -- by
+    default)."""
     _check_plan_mesh(plan, mesh, axes)
     n, m_b = plan.n_leaves, plan.m_b
     m, d_feat = X.shape
@@ -292,6 +314,10 @@ def execute_plan_mesh(
     if participation is None:
         participation = full_participation(plan)
     part_leaf = jnp.asarray(participation, X.dtype).T       # (n, S)
+    if steps is None:
+        steps = full_steps(plan)
+    steps_leaf = jnp.asarray(                               # (n, S, h_max)
+        np.asarray(steps, np.float32).transpose(1, 0, 2), X.dtype)
 
     a0 = jnp.zeros((n, m_b), X.dtype) if alpha0 is None else \
         jnp.asarray(alpha0, X.dtype).reshape(n, m_b)
@@ -302,8 +328,9 @@ def execute_plan_mesh(
     ys = jax.device_put(y.reshape(n, m_b), NamedSharding(mesh, spec_in))
     kys = jax.device_put(keys_leaf, NamedSharding(mesh, spec_in))
     part = jax.device_put(part_leaf, NamedSharding(mesh, spec_in))
+    stp = jax.device_put(steps_leaf, NamedSharding(mesh, spec_in))
     from repro.core.engine.host import regularizer_scale
-    alpha, w = fn(Xs, ys, a0, w_start, kys, part,
+    alpha, w = fn(Xs, ys, a0, w_start, kys, part, stp,
                   regularizer_scale(lam, plan.m_total, X.dtype))
     return alpha.reshape(m), w[0]
 

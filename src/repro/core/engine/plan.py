@@ -59,6 +59,21 @@ masks (constant over each root-round chunk -- what
 per-tick mask is safe), because then an absent leaf's pending work can
 never leak into a participant's delta; see :func:`full_participation` /
 :func:`chunk_participation`.
+
+Step masks (runtime heterogeneous H): the same recipe applied to the
+LOCAL iteration count.  ``plan.leaf_h`` is now an H *capacity*: every
+solve slot draws its full ``randint(key_l, (leaf_h[l],), 0, m_b_l)``
+coordinate stream (so the key replay -- and therefore bit-identity with
+the legacy recursion -- never depends on the runtime schedule), and a
+runtime ``(S, n, h_max)`` 0/1 **step mask** -- another executor input,
+see :func:`full_steps` / :func:`steps_for_h` -- zeroes the coordinate
+deltas of the trailing steps a leaf should not run at that sync slot.
+ONE compiled program therefore serves every per-leaf / per-slot H
+schedule up to the capacity: delay-adaptive sessions replan H between
+chunks (paper eq. (12) under drifting delays) and H-axis sweeps batch
+over the mask operand, all with zero retraces.  An all-ones step mask is
+bit-identical to the static-H program (the mask multiplies the existing
+per-leaf H gate by exactly 1.0).
 """
 from __future__ import annotations
 
@@ -95,7 +110,7 @@ class TreePlan:
     leaf_names: Tuple[str, ...]
     leaf_sizes: np.ndarray        # (n,) int
     leaf_offsets: np.ndarray      # (n,) int: start of each block in flat alpha
-    leaf_h: np.ndarray            # (n,) int: per-leaf H (leaf.rounds)
+    leaf_h: np.ndarray            # (n,) int: per-leaf H capacity (leaf.rounds)
     # ---- per-tick schedule --------------------------------------------
     solve_mask: np.ndarray        # (S, n) f32: leaf solves at this tick
     sync_mask: np.ndarray         # (S, D, n) f32: leaf's depth-d ancestor syncs
@@ -413,12 +428,23 @@ def _batched_randint(keys, H: int, m_b: int):
     return jax.vmap(lambda k: jax.random.randint(k, (H,), 0, m_b))(keys)
 
 
-def index_plan(tree: TreeNode, plan: TreePlan, key=None) -> np.ndarray:
+def index_plan(tree: TreeNode, plan: TreePlan, key=None,
+               local_h=None) -> np.ndarray:
     """Materialize the (S, n_leaves, h_max) int32 coordinate choices the
     executors will draw from :func:`key_plan` (debug/test helper; the
-    executors never build this array)."""
+    executors never build this array).
+
+    Draws ALWAYS happen at the plan's per-leaf H capacity
+    (``randint(key_l, (leaf_h[l],), 0, m_b_l)``), so a runtime schedule
+    never perturbs the key stream; ``local_h`` (scalar or per-leaf) zeroes
+    the trailing entries a runtime step mask would gate off -- the masked
+    steps' draws still happen, their deltas just never apply."""
     keys = key_plan(tree, plan, key)
     idx = np.zeros((plan.n_ticks, plan.n_leaves, plan.h_max), np.int32)
+    h_run = None
+    if local_h is not None:
+        h_run = np.broadcast_to(
+            np.asarray(local_h, np.int64), (plan.n_leaves,))
     for li in range(plan.n_leaves):
         ticks = np.nonzero(plan.solve_mask[:, li])[0]
         if len(ticks) == 0:
@@ -427,6 +453,8 @@ def index_plan(tree: TreeNode, plan: TreePlan, key=None) -> np.ndarray:
         mb = int(plan.leaf_sizes[li])
         draws = np.asarray(_batched_randint(keys[ticks, li], h, mb))
         idx[ticks, li, :h] = draws
+        if h_run is not None:
+            idx[ticks, li, min(int(h_run[li]), h):] = 0
     return idx
 
 
@@ -448,6 +476,40 @@ def chunk_participation(plan: TreePlan, leaf_mask) -> np.ndarray:
     leaf_mask = np.asarray(leaf_mask, np.float32).reshape(plan.n_leaves)
     return np.broadcast_to(
         leaf_mask[None, :], (plan.n_ticks, plan.n_leaves)).copy()
+
+
+# ---------------------------------------------------------------------------
+# step masks (runtime heterogeneous H)
+# ---------------------------------------------------------------------------
+def full_steps(plan: TreePlan) -> np.ndarray:
+    """The all-ones ``(S, n, h_max)`` step mask: every solve slot runs its
+    full per-leaf H capacity -- the executors are bit-identical to the
+    static-H schedule under this mask."""
+    return np.ones((plan.n_ticks, plan.n_leaves, plan.h_max), np.float32)
+
+
+def steps_for_h(plan: TreePlan, h) -> np.ndarray:
+    """The ``(S, n, h_max)`` step mask running ``h`` local iterations per
+    solve slot.  ``h`` is a scalar, a per-leaf ``(n,)`` vector (the
+    imbalanced-data regime of arXiv:2308.14783: leaves with more data run
+    more local steps), or a per-slot ``(S, n)`` array (fully heterogeneous
+    schedules).  Values are clamped to ``[0, plan.leaf_h]`` per leaf: the
+    executed step count can never exceed the drawn H capacity (compile
+    the plan with a larger capacity -- ``Schedule(h_cap=...)`` -- to leave
+    runtime headroom)."""
+    S, n, h_max = plan.n_ticks, plan.n_leaves, plan.h_max
+    h = np.asarray(h, np.int64)
+    if h.ndim == 0:
+        h = np.full((n,), int(h), np.int64)
+    if h.shape == (n,):
+        h = np.broadcast_to(h[None, :], (S, n))
+    if h.shape != (S, n):
+        raise ValueError(
+            f"local h must be a scalar, ({n},) per leaf, or ({S}, {n}) "
+            f"per slot; got shape {h.shape}")
+    h_eff = np.minimum(np.maximum(h, 0), plan.leaf_h[None, :])
+    j = np.arange(h_max)
+    return (j[None, None, :] < h_eff[:, :, None]).astype(np.float32)
 
 
 # ---------------------------------------------------------------------------

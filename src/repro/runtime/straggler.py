@@ -63,6 +63,11 @@ class AdaptiveSchedule:
     C, delta: the convergence-bound constants of eq. (11)-(12);
     t_total: the planning horizon; re-planning uses the *measured*
     t_lp (local step) and t_delay (sync barrier) medians.
+
+    The suggestion is live: ``repro.api.Session.run(straggler=...)``
+    applies it to the next chunk through the engine's runtime step-mask
+    operand (H is an executor INPUT, not a compile constant), so an
+    adaptive session replans with zero retraces.
     """
     C: float = 0.5
     delta: float = 1e-3
@@ -136,9 +141,11 @@ class StragglerPolicy:
     ``docs/architecture.md``).  The final chunk always runs a full barrier
     (``force_final_barrier``) so the run ends with every replica agreeing
     with ``w = A alpha``.  ``adaptive`` (optional) is re-fed the observed
-    delay medians every chunk; its replanned H is reported in the step info
-    (re-compiling with it is a Schedule-level decision, not a per-chunk
-    one)."""
+    delay medians every chunk; its replanned H is reported in the step
+    info AND applied by the session: ``Session.run`` feeds ``h_suggest``
+    into the next chunk's runtime step-mask operand (clamped to the
+    compiled H capacity -- compile with ``Schedule(h_cap=...)`` for
+    headroom), so replanning never retraces."""
     model: StragglerModel = dataclasses.field(default_factory=StragglerModel)
     max_consecutive: int = 2
     seed: int = 0
@@ -166,6 +173,13 @@ class StragglerPolicy:
                        for _ in range(len(self._base))]
         self._chunk = 0
         self.last_h_suggest: Optional[int] = None
+
+    def retime(self, t_compute: float) -> None:
+        """Update the per-chunk compute time mid-run.  ``Session.run``
+        calls this when adaptive replanning changes the executed H, so
+        the simulated async/sync clocks charge the work that actually
+        runs, not the H the run started with."""
+        self._t_compute = float(t_compute)
 
     def step(self, final: bool = False) -> StragglerStep:
         """Decide one chunk; ``final`` forces the closing full barrier."""

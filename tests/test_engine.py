@@ -202,6 +202,129 @@ def test_hinge_loss_through_engine():
     assert eng.gaps[-1] < 0.2 * eng.gaps[0]
 
 
+# ---------------------------------------------------------------------------
+# runtime step masks: heterogeneous H as an executor input
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["vmap", "pallas"])
+def test_full_step_mask_bit_identical_to_static(backend):
+    """All-ones / full-capacity runtime step masks reproduce the static-H
+    program bit for bit -- including on a tree with heterogeneous PER-LEAF
+    H capacities (the masks multiply the static gates by exactly 1.0)."""
+    from repro.core.engine.host import execute_plan
+    from repro.core.engine.plan import full_steps, key_plan, steps_for_h
+    tree = _imbalanced_tree()
+    X, y = gaussian_regression(m=tree.total_data(), d=10)
+    plan = compile_tree(tree)
+    keys = key_plan(tree, plan, jax.random.PRNGKey(3))
+    base = execute_plan(plan, X, y, keys, loss=D.squared, lam=LAM,
+                        record_history=False, backend=backend)
+    ones = execute_plan(plan, X, y, keys, loss=D.squared, lam=LAM,
+                        record_history=False, backend=backend,
+                        steps=full_steps(plan))
+    caps = execute_plan(plan, X, y, keys, loss=D.squared, lam=LAM,
+                        record_history=False, backend=backend,
+                        steps=steps_for_h(plan, plan.leaf_h))
+    for other in (ones, caps):
+        np.testing.assert_array_equal(np.asarray(base[0]),
+                                      np.asarray(other[0]))
+        np.testing.assert_array_equal(np.asarray(base[1]),
+                                      np.asarray(other[1]))
+
+
+def test_mesh_full_step_mask_bit_identical():
+    """The mesh backend's step-mask operand: all-ones masks reproduce the
+    static program bit for bit."""
+    from repro.core.engine.mesh import execute_plan_mesh
+    from repro.core.engine.plan import full_steps
+    n = len(jax.devices())
+    tree = star(n, 64 // n, outer_rounds=4, local_steps=16)
+    X, y = gaussian_regression(m=64, d=8)
+    plan = compile_tree(tree)
+    mesh = jax.make_mesh((n,), ("data",))
+    a0, w0 = execute_plan_mesh(plan, tree, X, y, mesh, axes=("data",),
+                               loss=D.squared, lam=LAM,
+                               key=jax.random.PRNGKey(0))
+    a1, w1 = execute_plan_mesh(plan, tree, X, y, mesh, axes=("data",),
+                               loss=D.squared, lam=LAM,
+                               key=jax.random.PRNGKey(0),
+                               steps=full_steps(plan))
+    np.testing.assert_array_equal(np.asarray(a0), np.asarray(a1))
+    np.testing.assert_array_equal(np.asarray(w0), np.asarray(w1))
+
+
+def test_runtime_heterogeneous_h_matches_reference():
+    """Per-leaf runtime H (step masks over full-capacity draws) matches an
+    independent star recursion that draws the capacity-shaped coordinate
+    stream and applies only the first h_l updates per leaf -- and differs
+    from the full-capacity solve."""
+    from repro.core.engine.host import execute_plan
+    from repro.core.engine.plan import key_plan, steps_for_h
+    from repro.kernels.sdca.ref import sdca_block_ref
+    import jax.numpy as jnp
+    K, m_leaf, cap, T = 3, 16, 12, 4
+    hs = np.array([5, 12, 1])
+    tree = star(K, m_leaf, outer_rounds=T, local_steps=cap)
+    X, y = gaussian_regression(m=K * m_leaf, d=6)
+    key = jax.random.PRNGKey(7)
+    plan = compile_tree(tree)
+    keys = key_plan(tree, plan, key)
+    a_eng, w_eng = execute_plan(plan, X, y, keys, loss=D.squared, lam=LAM,
+                                record_history=False,
+                                steps=steps_for_h(plan, hs))
+    a_full, _ = execute_plan(plan, X, y, keys, loss=D.squared, lam=LAM,
+                             record_history=False)
+    assert not np.array_equal(np.asarray(a_eng), np.asarray(a_full))
+
+    # reference: the paper's star round with capacity draws, first h_l
+    # steps applied (step_mask on the oracle Procedure-P implementation)
+    lm = LAM * (K * m_leaf)
+    Xb = jnp.asarray(X).reshape(K, m_leaf, -1)
+    yb = jnp.asarray(y).reshape(K, m_leaf)
+    mask = (np.arange(cap)[None, :] < hs[:, None]).astype(np.float32)
+    a = jnp.zeros((K, m_leaf))
+    w = jnp.zeros((X.shape[1],), X.dtype)
+    for t in range(T):
+        idx = jnp.stack([
+            jax.random.randint(jnp.asarray(keys[t, l]), (cap,), 0, m_leaf)
+            for l in range(K)])
+        da, dw = sdca_block_ref(Xb, yb, a, w, idx, loss=D.squared, lm=lm,
+                                step_mask=jnp.asarray(mask))
+        a = a + da / K
+        w = w + dw.sum(axis=0) / K
+    np.testing.assert_allclose(np.asarray(a_eng),
+                               np.asarray(a).reshape(-1),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(w_eng), np.asarray(w),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_steps_for_h_shapes_and_clamping():
+    tree = star(3, 8, outer_rounds=2, local_steps=6)
+    plan = compile_tree(tree)
+    from repro.core.engine.plan import full_steps, index_plan, steps_for_h
+    ones = full_steps(plan)
+    assert ones.shape == (plan.n_ticks, 3, 6) and ones.all()
+    # scalar, per-leaf, per-slot specs; clamped to the capacity
+    np.testing.assert_array_equal(steps_for_h(plan, 99), ones)
+    s = steps_for_h(plan, [2, 6, 0])
+    assert s[:, 0].sum(axis=-1).tolist() == [2.0, 2.0]
+    assert (s[:, 1] == 1).all() and (s[:, 2] == 0).all()
+    per_slot = np.array([[1, 2, 3], [4, 5, 6]])
+    s2 = steps_for_h(plan, per_slot)
+    np.testing.assert_array_equal(s2.sum(axis=-1),
+                                  np.minimum(per_slot, 6))
+    with pytest.raises(ValueError, match="per leaf"):
+        steps_for_h(plan, [1, 2])
+    # index replay: draws at capacity, runtime-H entries zeroed beyond h
+    idx_cap = index_plan(tree, plan, jax.random.PRNGKey(0))
+    idx_run = index_plan(tree, plan, jax.random.PRNGKey(0),
+                         local_h=[2, 6, 0])
+    np.testing.assert_array_equal(idx_run[:, 0, :2], idx_cap[:, 0, :2])
+    assert (idx_run[:, 0, 2:] == 0).all()
+    np.testing.assert_array_equal(idx_run[:, 1], idx_cap[:, 1])
+    assert (idx_run[:, 2] == 0).all()
+
+
 def test_delay_plan_feeds_engine_rounds():
     """Paper eq. (12) per-level planning (core.delay.plan_hierarchical_h)
     flows into engine round counts via tree_from_level_plan."""

@@ -207,6 +207,155 @@ def test_warm_restart_history_concatenates_sync():
 
 
 # ---------------------------------------------------------------------------
+# adaptive H: h_suggest drives the runtime step-mask operand
+# ---------------------------------------------------------------------------
+class _FixedH(AdaptiveSchedule):
+    """AdaptiveSchedule stub suggesting a constant H (deterministic test
+    double for the replanner)."""
+    target = 3
+
+    def replan(self, t_lp, t_delay, t_cp=0.0):
+        self.current_h = self.target
+        return self.target
+
+
+def test_adaptive_h_suggestion_drives_execution():
+    """Bugfix regression: ``AdaptiveSchedule.h_suggest`` used to be
+    computed and silently dropped.  It now feeds the NEXT chunk's
+    runtime-H operand: the executed step count actually changes (asserted
+    against an explicit ``local_h`` replay), with zero executor
+    rebuilds."""
+    from repro.core.engine.host import executor_cache_stats
+    topo = Topology.star(4, 16, rounds=4, local_steps=12, t_lp=1e-5,
+                         t_delay=1e-3)
+    X, y = gaussian_regression(m=topo.m_total, d=6)
+    sess = Session.compile(Problem(X, y, lam=LAM), topo)
+    key = jax.random.PRNGKey(1)
+    pol = StragglerPolicy(
+        max_consecutive=0, seed=0,   # always-participate: isolate the H path
+        adaptive=_FixedH(C=0.5, delta=1 / 16, t_total=1.0, K=4))
+    before = executor_cache_stats()["misses"]
+    res = sess.run(rounds=4, key=key, straggler=pol)
+
+    # chunk 1 ran the compiled H=12; chunks 2..4 the replanned H=3
+    hs = [h["h"] for h in res.history if "h" in h]
+    assert hs == [12, 3, 3, 3]
+    first = sess.run(rounds=1, key=key, record_history=False)
+    manual = sess.run(rounds=3, warm_start=first, local_h=3,
+                      record_history=False)
+    np.testing.assert_array_equal(np.asarray(res.alpha),
+                                  np.asarray(manual.alpha))
+    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(manual.w))
+    # the suggestion measurably changed the executed step count
+    full = sess.run(rounds=4, key=key, record_history=False)
+    assert not np.array_equal(np.asarray(res.alpha), np.asarray(full.alpha))
+    # replanning is an input swap, never a retrace
+    assert executor_cache_stats()["misses"] == before + 1  # carry_state only
+
+
+def test_adaptive_h_retimes_simulated_clock():
+    """Regression: after adaptive replanning changes H, the straggler
+    clocks must charge the NEW per-chunk compute time, not the H the run
+    started with."""
+    class _Drop(_FixedH):
+        target = 4
+
+    topo = Topology.star(4, 32, rounds=4, local_steps=64, t_lp=1e-4,
+                         t_delay=1e-3)
+    X, y = gaussian_regression(m=topo.m_total, d=6)
+    sess = Session.compile(Problem(X, y, lam=LAM), topo)
+    pol = StragglerPolicy(
+        max_consecutive=0, seed=0,
+        model=StragglerModel(slow_prob=0.0, slow_factor=1.0, jitter=0.0),
+        adaptive=_Drop(C=0.5, delta=1 / 32, t_total=1.0, K=4))
+    res = sess.run(rounds=4, key=jax.random.PRNGKey(0), straggler=pol)
+    dts = np.diff([h["time"] for h in res.history])
+    assert abs(dts[0] - (64e-4 + 1e-3)) < 1e-9      # chunk 1: H=64
+    for d in dts[1:]:                               # replanned: H=4
+        assert abs(d - (4e-4 + 1e-3)) < 1e-9, dts
+
+
+def test_adaptive_h_replaces_heterogeneous_mask():
+    """Regression: a scalar suggestion equal to the MAX of a heterogeneous
+    per-leaf runtime H must still be applied (the comparison is on the
+    effective per-leaf counts, not their max)."""
+    topo = Topology.star(3, 16, rounds=3, local_steps=12, t_lp=1e-5,
+                         t_delay=1e-3)
+    X, y = gaussian_regression(m=topo.m_total, d=6)
+    sess = Session.compile(Problem(X, y, lam=LAM), topo)
+    key = jax.random.PRNGKey(2)
+    ad = _FixedH(C=0.5, delta=1 / 16, t_total=1.0, K=3)
+    ad.target = 12                     # == max of the initial [4, 8, 12]
+    pol = StragglerPolicy(max_consecutive=0, seed=0, adaptive=ad)
+    res = sess.run(rounds=3, key=key, straggler=pol, local_h=[4, 8, 12],
+                   record_history=False)
+    first = sess.run(rounds=1, key=key, local_h=[4, 8, 12],
+                     record_history=False)
+    manual = sess.run(rounds=2, warm_start=first, local_h=12,
+                      record_history=False)
+    np.testing.assert_array_equal(np.asarray(res.alpha),
+                                  np.asarray(manual.alpha))
+    stuck = sess.run(rounds=3, key=key, local_h=[4, 8, 12],
+                     record_history=False)
+    assert not np.array_equal(np.asarray(res.alpha),
+                              np.asarray(stuck.alpha))
+
+
+# ---------------------------------------------------------------------------
+# straggler-aware eq.-(12) planning (joint H / BoundedSkip threshold)
+# ---------------------------------------------------------------------------
+def test_bounded_skip_simulation_and_joint_planner():
+    from repro.core.delay import optimal_h_bounded_skip, \
+        simulate_bounded_skip
+    model = StragglerModel(slow_prob=0.2, slow_factor=50.0, jitter=0.02)
+    base = [0.01] * 4
+    d0, r0 = simulate_bounded_skip(base, model, max_consecutive=0)
+    d2, r2 = simulate_bounded_skip(base, model, max_consecutive=2)
+    assert r0 == 1.0                       # never skips = the sync barrier
+    assert d2 < d0 and r2 < 1.0            # skips cut the barrier delay
+    row = optimal_h_bounded_skip(
+        C=0.5, K=4, delta=1 / 64, t_total=1.0, t_lp=1e-5, t_cp=0.0,
+        base_delays=base, model=model, skip_max=3, h_max=10**5)
+    assert row["skip"] > 0                 # heavy tail => skipping wins
+    assert 0.0 < row["participation"] < 1.0
+    # a calm network reduces to plain eq. (12): no skipping planned
+    calm = StragglerModel(slow_prob=0.0, slow_factor=1.0, jitter=0.0)
+    from repro.core.delay import optimal_h
+    row0 = optimal_h_bounded_skip(
+        C=0.5, K=4, delta=1 / 64, t_total=1.0, t_lp=1e-5, t_cp=0.0,
+        base_delays=base, model=calm, skip_max=3, h_max=10**5)
+    h_ref, _ = optimal_h(C=0.5, K=4, delta=1 / 64, t_total=1.0,
+                         t_lp=1e-5, t_delay=0.01, t_cp=0.0, h_max=10**5)
+    assert row0["skip"] == 0 and row0["H"] == h_ref
+
+
+def test_schedule_auto_straggler_aware_end_to_end():
+    """DelayModel(straggler=...) plans (H, skip) jointly; the session
+    exposes the planned policy (``Session.straggler_policy``) and runs
+    it through the participation masks."""
+    from repro.api import Schedule
+    topo = Topology.star(4, 64, rounds=8, local_steps=32, t_lp=1e-5,
+                         t_delay=0.01)
+    X, y = gaussian_regression(m=topo.m_total, d=8)
+    prob = Problem(X, y, lam=LAM)
+    model = StragglerModel(slow_prob=0.2, slow_factor=50.0, jitter=0.02)
+    sess = Session.compile(
+        prob, topo, Schedule.auto(t_total=1.0, straggler=model,
+                                  skip_max=3, h_max=10**4))
+    assert sess.resolved.skip is not None and sess.resolved.skip > 0
+    lp0 = sess.level_plan[0]
+    assert {"skip", "participation"} <= set(lp0)
+    pol = sess.straggler_policy(seed=0)
+    assert pol.max_consecutive == sess.resolved.skip
+    assert pol.model is model
+    res = sess.run(rounds=6, straggler=pol)
+    assert np.isfinite(res.gaps).all()
+    # sessions without a straggler-aware schedule refuse to fabricate one
+    with pytest.raises(ValueError, match="straggler"):
+        Session.compile(prob, topo).straggler_policy()
+
+
+# ---------------------------------------------------------------------------
 # decision-layer properties (BoundedSkip / AdaptiveSchedule / StepTimer)
 # ---------------------------------------------------------------------------
 def test_bounded_skip_never_exceeds_max_consecutive():

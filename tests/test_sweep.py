@@ -167,6 +167,9 @@ def test_batched_carry_state_executor_matches_flat_batched():
                                   T)
         for s in range(B)]))
     part = jnp.asarray(plan_mod.full_participation(plan))
+    steps = jnp.asarray(np.broadcast_to(
+        plan_mod.full_steps(plan)[None],
+        (B, plan.n_ticks, plan.n_leaves, plan.h_max)))
     lms = jnp.stack([host_mod.regularizer_scale(l, prob.m, X.dtype)
                      for l in lams])
     a0 = jnp.zeros((B, prob.m), X.dtype)
@@ -176,17 +179,165 @@ def test_batched_carry_state_executor_matches_flat_batched():
                                       record_history=False, batched=True)
     a, w = a0, w0
     for t in range(T):
-        a, w = flat(X, y, keys[:, t], a, w, part, lms)
+        a, w = flat(X, y, keys[:, t], a, w, part, steps, lms)
 
     se = host_mod.get_host_executor(plan, loss=prob.loss,
                                     record_history=False, batched=True,
                                     carry_state=True)
     state = se.init(X, a0, w0)
     for t in range(T):
-        state = se.step(X, y, keys[:, t], state, part, lms)
+        state = se.step(X, y, keys[:, t], state, part, steps, lms)
     a_s, w_s = se.finalize(state)
     np.testing.assert_array_equal(np.asarray(a_s), np.asarray(a))
     np.testing.assert_array_equal(np.asarray(w_s), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# the schedule as a runtime input: local_h / h_cap / the sweep H axis
+# ---------------------------------------------------------------------------
+def test_run_local_h_full_capacity_bit_identical_to_static():
+    """run(local_h=<the compiled H>) is bit-identical to the plain run:
+    the step mask multiplies the static gates by exactly 1.0."""
+    topo = _star()                      # local_steps=40
+    prob = _problem(topo)
+    sess = Session.compile(prob, topo)
+    key = jax.random.PRNGKey(4)
+    plain = sess.run(key=key)
+    masked = sess.run(key=key, local_h=40)
+    np.testing.assert_array_equal(np.asarray(plain.alpha),
+                                  np.asarray(masked.alpha))
+    np.testing.assert_array_equal(np.asarray(plain.w),
+                                  np.asarray(masked.w))
+    assert [h["gap"] for h in plain.history] == \
+        [h["gap"] for h in masked.history]
+
+
+def test_h_cap_runtime_h_zero_retrace():
+    """A Schedule(h_cap=...) session executes MANY distinct H values --
+    including per-leaf heterogeneous ones -- against ONE cached executor
+    (no new executor builds, distinct iterates per H)."""
+    topo = Topology.star(3, 16, rounds=3, local_steps=8)
+    prob = _problem(topo, d=6)
+    sess = Session.compile(prob, topo, Schedule(h_cap=16))
+    assert sess.resolved.runtime_h == (8, 8, 8)
+    assert sess.plan.h_max == 16        # compiled capacity
+    key = jax.random.PRNGKey(0)
+    r_def = sess.run(key=key, record_history=False)     # runtime H = 8
+    before = executor_cache_stats()
+    r4 = sess.run(key=key, local_h=4, record_history=False)
+    r16 = sess.run(key=key, local_h=16, record_history=False)
+    rhet = sess.run(key=key, local_h=[1, 8, 16], record_history=False)
+    after = executor_cache_stats()
+    assert after["misses"] == before["misses"], \
+        "a runtime-H change rebuilt an executor"
+    outs = [np.asarray(r.alpha) for r in (r_def, r4, r16, rhet)]
+    for i in range(len(outs)):
+        for j in range(i + 1, len(outs)):
+            assert not np.array_equal(outs[i], outs[j]), (i, j)
+    with pytest.raises(ValueError, match="h_cap"):
+        Session.compile(prob, topo, Schedule(local_steps=32, h_cap=16))
+
+
+def test_schedule_heterogeneous_local_steps():
+    """Static per-leaf H specs: {name: H} dicts and left-to-right
+    sequences resolve onto the tree leaves; bad specs are rejected."""
+    topo = Topology.star(3, 16, rounds=3, local_steps=8)
+    r = Schedule(local_steps={"W0": 4, "W2": 12}).resolve(topo)
+    assert [l.rounds for l in r.chunk_tree.leaves()] == [4, 8, 12]
+    r2 = Schedule(local_steps=[4, 8, 12]).resolve(topo)
+    assert [l.rounds for l in r2.chunk_tree.leaves()] == [4, 8, 12]
+    with pytest.raises(ValueError, match="unknown leaves"):
+        Schedule(local_steps={"nope": 3}).resolve(topo)
+    with pytest.raises(ValueError, match="left-to-right"):
+        Schedule(local_steps=[1, 2]).resolve(topo)
+    # heterogeneous plans execute (host backends)
+    prob = _problem(topo, d=6)
+    res = Session.compile(prob, topo, Schedule(local_steps=[4, 8, 12])).run(
+        record_history=False)
+    assert np.isfinite(np.asarray(res.alpha)).all()
+
+
+@pytest.mark.parametrize("backend", ["vmap", "pallas"])
+def test_sweep_local_h_axis_batched_and_bit_identical(backend):
+    """An H axis batches over the step-mask operand in the SAME vmapped
+    dispatch as lambda: members are bit-identical to standalone runs and
+    the whole (lambda x H) grid reuses one executor."""
+    topo = Topology.star(3, 16, rounds=4, local_steps=8)
+    prob = _problem(topo, d=6)
+    sess = Session.compile(prob, topo, Schedule(h_cap=32))
+    rs = sess.sweep(lams=[0.05, 0.5], local_hs=[2, 8, 32])
+    assert rs.shape == (2, 3) and len(rs) == 6
+    for pt in rs.points:
+        single = sess.run(key=jax.random.PRNGKey(0), lam=pt.lam,
+                          local_h=pt.local_h)
+        mem = rs[pt.index]
+        np.testing.assert_array_equal(np.asarray(mem.alpha),
+                                      np.asarray(single.alpha))
+        np.testing.assert_array_equal(np.asarray(mem.w),
+                                      np.asarray(single.w))
+        assert [h["gap"] for h in mem.history] == \
+            [h["gap"] for h in single.history]
+    # distinct H values produce distinct members at fixed lambda
+    assert not np.array_equal(np.asarray(rs.alphas[0]),
+                              np.asarray(rs.alphas[1]))
+    # a second H grid through the same session: zero new executor builds
+    before = executor_cache_stats()
+    sess.sweep(lams=[0.1], local_hs=[3, 5, 7], record_history=False)
+    after = executor_cache_stats()
+    assert after["misses"] == before["misses"]
+    # config serialization carries the H axis
+    blob = rs.to_dict()
+    assert blob["configs"][0]["local_h"] == 2
+
+
+def test_run_local_h_per_slot_spec():
+    """Per-slot (S, n) runtime schedules execute end-to-end (regression:
+    the simulated-clock path used to crash on 2-D specs)."""
+    topo = Topology.two_level(2, 2, 16, root_rounds=3, group_rounds=2,
+                              local_steps=8)
+    prob = _problem(topo, d=6)
+    sess = Session.compile(prob, topo)
+    S = sess.plan.n_ticks
+    spec = np.tile(np.array([[2, 4, 6, 8]]), (S, 1))
+    res = sess.run(key=jax.random.PRNGKey(0), local_h=spec)
+    same = sess.run(key=jax.random.PRNGKey(0), local_h=[2, 4, 6, 8])
+    np.testing.assert_array_equal(np.asarray(res.alpha),
+                                  np.asarray(same.alpha))
+    assert [h["time"] for h in res.history] == \
+        [h["time"] for h in same.history]
+    varied = spec.copy()
+    varied[0] = 1                       # genuinely per-slot schedule
+    res2 = sess.run(key=jax.random.PRNGKey(0), local_h=varied,
+                    record_history=False)
+    assert not np.array_equal(np.asarray(res2.alpha),
+                              np.asarray(res.alpha))
+
+
+def test_auto_h_cap_bounds_planner_search():
+    """Regression: rounds='auto' + h_cap optimizes UNDER the capacity --
+    level_plan, round times, and the root budget all describe the H the
+    program actually executes (no post-hoc clamp drift)."""
+    topo = Topology.star(3, 300, t_lp=4e-5, t_cp=3e-5, t_delay=4e-2)
+    free = Schedule.auto(t_total=1.0, C=0.5, h_max=10**7).resolve(topo)
+    assert free.chunk_tree.leaves()[0].rounds > 64  # unconstrained H*
+    capped = Schedule.auto(t_total=1.0, C=0.5, h_max=10**7,
+                           h_cap=64).resolve(topo)
+    assert capped.level_plan[0]["H"] == capped.runtime_h[0] <= 64
+    rt = capped.level_plan[-1]["round_time"]
+    assert capped.rounds == max(1, int(1.0 / rt))
+    assert capped.per_round_time == \
+        pytest.approx(capped.round_time_for(capped.runtime_h))
+
+
+def test_sweep_local_h_zip_mode():
+    topo = Topology.star(3, 16, rounds=2, local_steps=8)
+    sess = Session.compile(_problem(topo, d=6), topo, Schedule(h_cap=8))
+    rz = sess.sweep(lams=[0.1, 0.2], local_hs=[2, 8], mode="zip",
+                    record_history=False)
+    assert rz.shape == (2,)
+    assert [(p.lam, p.local_h) for p in rz.points] == [(0.1, 2), (0.2, 8)]
+    with pytest.raises(ValueError, match="equal-length"):
+        sess.sweep(lams=[0.1], local_hs=[2, 8], mode="zip")
 
 
 # ---------------------------------------------------------------------------
@@ -348,7 +499,8 @@ def test_runset_best_and_to_dict():
     blob = json.loads(json.dumps(d))
     assert blob["shape"] == [3, 2]
     assert len(blob["configs"]) == 6
-    assert blob["configs"][0] == {"lam": 0.02, "seed": 0, "schedule": None}
+    assert blob["configs"][0] == {"lam": 0.02, "seed": 0, "schedule": None,
+                                  "local_h": None}
     assert np.asarray(blob["alphas"]).shape == (6, prob.m)
     assert blob["final_gap"][bi] == pytest.approx(float(finals[bi]))
 
