@@ -13,11 +13,15 @@ simulated time-to-1e-3-duality-gap, a SWEEP scenario: a B=8 lambda
 grid as one batched ``Session.sweep`` (one vmapped dispatch per chunk for
 the whole grid; lambda is a runtime executor input) vs 8 sequential
 ``Session.run`` calls (acceptance target: >= 3x, members bit-identical),
-and an ADAPTIVE-H scenario: the schedule as a runtime step-mask input
+an ADAPTIVE-H scenario: the schedule as a runtime step-mask input
 (one ``Schedule(h_cap=...)`` session executing many H values against ONE
 cached executor, the delay-adaptive replanning path) vs a per-H recompile
-(acceptance target: >= 2x).  Everything is recorded in
-``BENCH_engine.json`` so the perf trajectory is tracked across commits.
+(acceptance target: >= 2x), and a COMPRESSION scenario: int8 delta
+compression on a bandwidth-bound star (>= 2x fewer simulated bytes/round
+at equal final duality gap) plus the replicated-vs-sharded
+(``mesh_sync="reduce_scatter"``) big-d server-memory comparison (>= 2x).
+Everything is recorded in ``BENCH_engine.json`` so the perf trajectory is
+tracked across commits.
 
     PYTHONPATH=src python benchmarks/bench_engine.py
 """
@@ -226,6 +230,88 @@ def adaptive_h_scenario(verbose: bool = True) -> Dict[str, float]:
     return out
 
 
+def compression_scenario(verbose: bool = True) -> Dict[str, float]:
+    """Compressed vs exact per-edge sync on a bandwidth-bound star, plus
+    the big-d sharded-server (``mesh_sync="reduce_scatter"``) comparison.
+
+    The star's uplink delay dominates its round time, so int8 delta
+    compression (0.28x wire bytes, error feedback re-sending the
+    truncation) should reach the same duality gap in ~3.5x fewer simulated
+    wire-seconds; the recorded gate is >= 2x fewer bytes/round at equal
+    final gap.  The big-d comparison is the per-device server-state
+    footprint of the replicated ("psum") vs sharded ("reduce_scatter")
+    mesh sync lowerings (``engine.mesh.mesh_state_floats``), timed for
+    real when the process has enough devices for the mesh."""
+    topo = Topology.star(8, 32, rounds=60, local_steps=32,
+                         t_lp=1e-6, t_delay=0.01)
+    X, y = gaussian_regression(m=topo.m_total, d=64)
+    prob = Problem.ridge(X, y, lam=LAM)
+    key = jax.random.PRNGKey(0)
+
+    s_plain = Session.compile(prob, topo)
+    s_comp = Session.compile(prob, topo, Schedule(compression="int8"))
+    r_plain = s_plain.run(key=key)
+    r_comp = s_comp.run(key=key)
+    t_plain = time_to_gap(r_plain.history, GAP_TARGET)
+    t_comp = time_to_gap(r_comp.history, GAP_TARGET)
+    assert np.isfinite(t_plain) and np.isfinite(t_comp), (
+        f"gap target {GAP_TARGET:g} not reached (exact "
+        f"{r_plain.history[-1]['gap']:.2e}, int8 "
+        f"{r_comp.history[-1]['gap']:.2e})")
+    bytes_ratio = s_plain.bytes_per_round / s_comp.bytes_per_round
+
+    # big-d: per-device server floats, replicated vs sharded sync
+    from repro.core.engine import mesh as mesh_mod
+    from repro.core.engine import plan as plan_mod
+    big_d = 1_000_000
+    topo2 = Topology.balanced([2, 4], m_leaf=8, local_steps=4)
+    plan2 = plan_mod.compile_tree(Schedule().resolve(topo2).chunk_tree)
+    f_psum = mesh_mod.mesh_state_floats(plan2, big_d, sync="psum")
+    f_rs = mesh_mod.mesh_state_floats(plan2, big_d, sync="reduce_scatter")
+    out = {
+        "t_exact_to_gap_s": t_plain,
+        "t_int8_to_gap_s": t_comp,
+        "time_saved_ratio": t_plain / t_comp,
+        "bytes_per_round_exact": s_plain.bytes_per_round,
+        "bytes_per_round_int8": s_comp.bytes_per_round,
+        "bytes_ratio": bytes_ratio,
+        "gap_target": GAP_TARGET,
+        "bigd_d": big_d,
+        "bigd_server_floats_replicated": f_psum,
+        "bigd_server_floats_sharded": f_rs,
+        "bigd_memory_ratio": f_psum / f_rs,
+    }
+
+    # wall-clock of the two mesh lowerings, when the mesh fits
+    if len(jax.devices()) >= topo2.n_leaves:
+        Xm, ym = gaussian_regression(m=topo2.m_total, d=4096)
+        pm = Problem.ridge(Xm, ym, lam=LAM)
+        sm_ps = Session.compile(pm, topo2, Schedule(rounds=8),
+                                backend="mesh")
+        sm_rs = Session.compile(pm, topo2, Schedule(rounds=8),
+                                backend="mesh", mesh_sync="reduce_scatter")
+        run_ps = lambda: sm_ps.run(key=key, record_history=False)  # noqa: E731
+        run_rs = lambda: sm_rs.run(key=key, record_history=False)  # noqa: E731
+        o_ps, o_rs = run_ps(), run_rs()       # warm compiles
+        np.testing.assert_allclose(np.asarray(o_ps.w), np.asarray(o_rs.w),
+                                   atol=1e-5, rtol=1e-5)
+        out["bigd_t_psum_s"] = _time(run_ps)
+        out["bigd_t_reduce_scatter_s"] = _time(run_rs)
+
+    if verbose:
+        print("bench_engine compression scenario: 8-leaf star, "
+              "10ms bandwidth-bound uplinks, int8 delta compression")
+        print(f"  exact time-to-{GAP_TARGET:g}-gap : {t_plain:9.3f} s  "
+              f"({s_plain.bytes_per_round:.0f} B/round)")
+        print(f"  int8  time-to-{GAP_TARGET:g}-gap : {t_comp:9.3f} s  "
+              f"({s_comp.bytes_per_round:.0f} B/round, "
+              f"{bytes_ratio:.2f}x fewer bytes)")
+        print(f"  big-d server floats (d={big_d:.0e}): replicated "
+              f"{f_psum:.3g} vs sharded {f_rs:.3g} per device "
+              f"({out['bigd_memory_ratio']:.1f}x)")
+    return out
+
+
 def run(verbose: bool = True) -> Dict[str, float]:
     # depth-3, 8-leaf balanced tree: 10 root x 2 x 2 rounds, H=128
     topo = Topology.balanced([2, 2, 2], m_leaf=32, local_steps=128,
@@ -268,6 +354,7 @@ def run(verbose: bool = True) -> Dict[str, float]:
     results["straggler"] = straggler_scenario(verbose=verbose)
     results["sweep"] = sweep_scenario(verbose=verbose)
     results["adaptive_h"] = adaptive_h_scenario(verbose=verbose)
+    results["compression"] = compression_scenario(verbose=verbose)
     if verbose:
         print("bench_engine: depth-3, 8-leaf tree "
               f"(m={m}, 40 ticks x H=128), host path")
@@ -289,6 +376,14 @@ def run(verbose: bool = True) -> Dict[str, float]:
     assert results["adaptive_h"]["speedup"] >= 2.0, (
         f"adaptive-H speedup {results['adaptive_h']['speedup']:.1f}x "
         "< 2x target")
+    assert results["compression"]["bytes_ratio"] >= 2.0, (
+        f"compressed sync ships only "
+        f"{results['compression']['bytes_ratio']:.2f}x fewer bytes/round "
+        "(>= 2x target at equal final gap)")
+    assert results["compression"]["bigd_memory_ratio"] >= 2.0, (
+        f"sharded server state saves only "
+        f"{results['compression']['bigd_memory_ratio']:.2f}x memory "
+        "(>= 2x target)")
     return results
 
 

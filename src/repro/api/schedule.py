@@ -35,7 +35,9 @@ from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core.delay import StragglerModel, plan_hierarchical_h
+from repro.core import compression as comp_mod
+from repro.core.delay import (StragglerModel, choose_compression,
+                              plan_hierarchical_h)
 from repro.core.tree import TreeNode
 
 from repro.api.topology import Topology
@@ -102,7 +104,14 @@ class ResolvedSchedule:
     the ``chunk_tree`` leaves then carry the (larger) compiled H capacity.
     ``skip`` / ``straggler_model`` carry the straggler-aware planner's
     jointly-optimized bounded-skip threshold (``rounds="auto"`` with
-    ``DelayModel(straggler=...)``)."""
+    ``DelayModel(straggler=...)``).
+
+    ``compression`` is the resolved TOP-DOWN per-depth edge-compression
+    spec tuple (entry ``d`` compresses the up-links into depth-``d``
+    nodes -- the form ``engine.plan.compile_tree`` consumes) or ``None``;
+    the simulated clocks (``per_round_time``/``round_time_for``) charge
+    the COMPRESSED link delays (each edge's ``up_delay`` scaled by its
+    spec's wire ratio)."""
     chunk_tree: TreeNode
     rounds: int                      # default root-round count for run()
     weighting: str
@@ -111,6 +120,7 @@ class ResolvedSchedule:
     runtime_h: Optional[tuple] = None  # per-leaf runtime H under h_cap
     skip: Optional[int] = None         # planned BoundedSkip threshold
     straggler_model: Optional[StragglerModel] = None
+    compression: Optional[tuple] = None  # top-down per-depth specs
 
     @property
     def full_tree(self) -> TreeNode:
@@ -124,7 +134,8 @@ class ResolvedSchedule:
         capacity, exactly as the executors' step masks clamp it."""
         if local_h is None:
             return self.per_round_time
-        return runtime_tree(self.chunk_tree, local_h).solve_time()
+        t = runtime_tree(self.chunk_tree, local_h)
+        return compressed_time_tree(t, self.compression).solve_time()
 
 
 def leaf_h_spec(h, n_leaves: int) -> np.ndarray:
@@ -155,6 +166,36 @@ def runtime_tree(chunk_tree: TreeNode, h) -> TreeNode:
     return _apply_rounds(chunk_tree, 0, [0],
                          leaf_steps_of=lambda i, name: hs[i],
                          rounds_of_depth=lambda d: None)
+
+
+def compressed_time_tree(tree: TreeNode,
+                         level_spec: Optional[Sequence]) -> TreeNode:
+    """A copy of ``tree`` with every up-link delay scaled by its edge's
+    compression wire ratio -- what the simulated clocks should charge when
+    deltas ship compressed.  ``level_spec`` is the top-down per-depth
+    default (entry ``d`` = up-links into depth-``d`` nodes, the
+    ``compile_tree`` convention); a node's own ``up_compress`` overrides
+    it, exactly as plan compilation does.  Treats the whole ``up_delay``
+    as bandwidth-bound (the :class:`~repro.core.delay.FixedLevel` default
+    view -- ``TreeNode.up_delay`` does not split latency out)."""
+    def visit(node: TreeNode, depth: int) -> TreeNode:
+        kids = tuple(visit(c, depth + 1) for c in node.children)
+        if kids != node.children:
+            node = dataclasses.replace(node, children=kids)
+        if depth == 0:
+            return node
+        spec = node.up_compress or (
+            level_spec[depth - 1]
+            if level_spec is not None and depth - 1 < len(level_spec)
+            else None)
+        if not spec:
+            return node
+        kind, frac = comp_mod.parse_spec(spec)
+        ratio = comp_mod.wire_ratio(kind, frac)
+        if ratio == 1.0:
+            return node
+        return dataclasses.replace(node, up_delay=node.up_delay * ratio)
+    return visit(tree, 0)
 
 
 def _leaf_steps_resolver(tree: TreeNode, local_steps):
@@ -219,6 +260,15 @@ class Schedule:
     * ``weighting``: ``"uniform"`` (paper 1/K) or ``"size"``
       (|block|-proportional, CoCoA-style).
     * ``delay``: the :class:`DelayModel` driving ``rounds="auto"``.
+    * ``compression``: delta compression of the up-link syncs -- ``None``
+      (only the topology's per-edge ``up_compress`` overrides apply), one
+      spec string (``"none"``/``"int8"``/``"topk_<frac>"``) for every
+      depth, a top-down per-depth sequence, or ``"auto"`` (requires
+      ``rounds="auto"``: :func:`repro.core.delay.choose_compression`
+      picks per level by the eq.-(12) bound -- slow bandwidth-bound hops
+      compress, fast ones stay exact).  The resolved specs ride on
+      ``ResolvedSchedule.compression`` into plan compilation, and the
+      simulated clocks charge the compressed link delays.
     """
     rounds: Union[int, str, None] = None
     local_steps: Union[int, Sequence[int], Dict[str, int], None] = None
@@ -226,6 +276,7 @@ class Schedule:
     weighting: str = "uniform"
     delay: Optional[DelayModel] = None
     h_cap: Optional[int] = None
+    compression: Union[str, Sequence, None] = None
 
     @classmethod
     def auto(cls, t_total: float, *, C: Union[float, str] = 0.5,
@@ -233,17 +284,40 @@ class Schedule:
              h_max: int = 10**6, weighting: str = "uniform",
              pilot_rounds: int = 8,
              straggler: Optional[StragglerModel] = None,
-             skip_max: int = 3, h_cap: Optional[int] = None) -> "Schedule":
+             skip_max: int = 3, h_cap: Optional[int] = None,
+             compression: Union[str, Sequence, None] = None) -> "Schedule":
         """Shorthand for ``Schedule(rounds="auto", delay=DelayModel(...))``
         (``C="auto"`` calibrates C from a pilot run at compile time;
         ``straggler=`` switches to the straggler-aware joint (H, skip)
         planner; ``h_cap=`` keeps the planned H a runtime input so
-        adaptive sessions can replan it without retracing)."""
+        adaptive sessions can replan it without retracing;
+        ``compression="auto"`` lets the same eq.-(12) machinery choose
+        per-level delta compression)."""
         return cls(rounds="auto", weighting=weighting, h_cap=h_cap,
+                   compression=compression,
                    delay=DelayModel(t_total=t_total, C=C, delta=delta,
                                     t_cp=t_cp, h_max=h_max,
                                     pilot_rounds=pilot_rounds,
                                     straggler=straggler, skip_max=skip_max))
+
+    def _normalized_compression(self, D: int) -> Optional[tuple]:
+        """The top-down per-depth spec tuple for a depth-``D`` topology
+        (validated), or ``None``.  ``"auto"`` is resolved elsewhere."""
+        c = self.compression
+        if c is None:
+            return None
+        if isinstance(c, str):
+            comp_mod.parse_spec(c)  # fail fast on typos
+            return (c,) * D
+        out = tuple(None if v in (None, "") else str(v) for v in c)
+        if len(out) != D:
+            raise ValueError(
+                f"per-depth compression must list all {D} internal depths "
+                f"top-down, got {len(out)} entries")
+        for v in out:
+            if v is not None:
+                comp_mod.parse_spec(v)
+        return out
 
     # -----------------------------------------------------------------
     def resolve(self, topology: Topology) -> ResolvedSchedule:
@@ -253,6 +327,11 @@ class Schedule:
         if isinstance(self.rounds, str):
             raise ValueError(
                 f"rounds must be an int, None, or 'auto'; got {self.rounds!r}")
+        if self.compression == "auto":
+            raise ValueError(
+                "compression='auto' needs rounds='auto' (the eq.-(12) "
+                "DelayModel chooses the per-level specs)")
+        comp = self._normalized_compression(topology.depth)
 
         level = dict(enumerate(self.level_rounds or (), start=1))
         tree = _apply_rounds(
@@ -268,8 +347,8 @@ class Schedule:
         chunk = dataclasses.replace(tree, rounds=1)
         resolved = ResolvedSchedule(
             chunk_tree=chunk, rounds=rounds, weighting=self.weighting,
-            per_round_time=chunk.solve_time(), level_plan=None,
-            runtime_h=runtime_h)
+            per_round_time=compressed_time_tree(chunk, comp).solve_time(),
+            level_plan=None, runtime_h=runtime_h, compression=comp)
         if runtime_h is not None:
             # the simulated clock charges the RUNTIME H, not the capacity
             resolved = dataclasses.replace(
@@ -317,6 +396,18 @@ class Schedule:
         m_leaf = topology.tree.leaves()[0].data_size
         delta = dm.delta if dm.delta is not None else 1.0 / m_leaf
         t_cp = dm.t_cp if dm.t_cp is not None else topology.internal_t_cp()
+        D = len(levels)
+        if self.compression == "auto":
+            # eq.-(12) per-level spec choice: cheaper compressed rounds vs.
+            # the diluted improvement constant, innermost-first
+            comp_rows = choose_compression(
+                levels, C=dm.C, delta=delta, t_total=dm.t_total, t_lp=t_lp,
+                t_cp=t_cp, h_max=dm.h_max)
+            comp_levels = [r["spec"] for r in comp_rows]
+            comp = tuple(reversed(comp_levels))  # innermost-first -> top-down
+        else:
+            comp = self._normalized_compression(D)
+            comp_levels = list(reversed(comp)) if comp is not None else None
         lp = plan_hierarchical_h(
             levels, C=dm.C, delta=delta, t_total=dm.t_total, t_lp=t_lp,
             t_cp=t_cp, h_max=dm.h_max,
@@ -326,9 +417,8 @@ class Schedule:
             h_max0=self.h_cap,
             straggler=dm.straggler, skip_max=dm.skip_max,
             base_delays=(topology.leaf_sync_delays()
-                         if dm.straggler is not None else None))
-
-        D = len(levels)
+                         if dm.straggler is not None else None),
+            compression=comp_levels)
         # lp[0] plans the leaves' H; lp[i] (i >= 1) plans how many rounds of
         # the level below one sync at internal depth D-1-i amortizes; the
         # root's own count comes from the time budget.
@@ -343,9 +433,9 @@ class Schedule:
         chunk = dataclasses.replace(tree, rounds=1)
         resolved = ResolvedSchedule(
             chunk_tree=chunk, rounds=root_rounds, weighting=self.weighting,
-            per_round_time=chunk.solve_time(), level_plan=lp,
-            runtime_h=runtime_h, skip=lp[0].get("skip"),
-            straggler_model=dm.straggler)
+            per_round_time=compressed_time_tree(chunk, comp).solve_time(),
+            level_plan=lp, runtime_h=runtime_h, skip=lp[0].get("skip"),
+            straggler_model=dm.straggler, compression=comp)
         if runtime_h is not None:
             resolved = dataclasses.replace(
                 resolved, per_round_time=resolved.round_time_for(runtime_h))

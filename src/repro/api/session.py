@@ -73,7 +73,8 @@ class Session:
 
     def __init__(self, problem: Problem, topology: Topology,
                  resolved: ResolvedSchedule, backend: str, plan, fn,
-                 mesh=None, mesh_axes=None, mesh_use_kernel: bool = True):
+                 mesh=None, mesh_axes=None, mesh_use_kernel: bool = True,
+                 mesh_sync: str = "psum"):
         self.problem = problem
         self.topology = topology
         self.resolved = resolved
@@ -84,6 +85,7 @@ class Session:
         self._mesh = mesh
         self._mesh_axes = mesh_axes
         self._mesh_use_kernel = mesh_use_kernel
+        self._mesh_sync = mesh_sync
         if backend == "mesh":
             from jax.sharding import NamedSharding, PartitionSpec as P
             spec = P(tuple(reversed(mesh_axes)))
@@ -106,13 +108,21 @@ class Session:
         mesh=None,
         mesh_axes: Optional[Sequence[str]] = None,
         mesh_use_kernel: bool = True,
+        mesh_sync: str = "psum",
     ) -> "Session":
         """Lower ``topology`` under ``schedule`` and bind the ``backend``
         executor.  ``mesh``/``mesh_axes`` (axes innermost-first, as in
         ``engine.mesh``) and ``mesh_use_kernel`` (Pallas vs pure-jnp leaf
         solver) apply to ``backend="mesh"`` only; when the mesh is omitted,
         one matching the plan's per-depth fan-outs is built from the
-        available devices."""
+        available devices.
+
+        ``mesh_sync`` selects the mesh sync lowering: ``"psum"``
+        (replicated server state, bit-identical to the host backends) or
+        ``"reduce_scatter"`` (server state sharded across each sync
+        group's devices -- per-device server memory drops from ``O(L*d)``
+        to ``O(L*d/K)``, the big-``d`` path; full participation only, so
+        it composes with compression but not with ``straggler=``)."""
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; use {BACKENDS}")
         schedule = schedule or Schedule()
@@ -128,7 +138,8 @@ class Session:
             schedule, fitted_C = _calibrate_C(problem, topology, schedule)
         resolved = schedule.resolve(topology)
         plan = plan_mod.compile_tree(resolved.chunk_tree,
-                                     weighting=resolved.weighting)
+                                     weighting=resolved.weighting,
+                                     compression=resolved.compression)
 
         if backend in ("vmap", "pallas"):
             fn = host_mod.get_host_executor(
@@ -145,6 +156,9 @@ class Session:
                 "(uniform per-depth fan-out/rounds, congruent leaves)")
         if resolved.weighting != "uniform":
             raise ValueError("backend='mesh' supports weighting='uniform'")
+        if mesh_sync not in mesh_mod.SYNC_MODES:
+            raise ValueError(f"unknown mesh_sync {mesh_sync!r}; use "
+                             f"{mesh_mod.SYNC_MODES}")
         D = plan.depth
         if mesh is None:
             sizes = [plan.levels[d].group_size for d in range(D)]  # top-down
@@ -165,10 +179,10 @@ class Session:
                              "together with an explicit mesh")
         fn = mesh_mod.get_mesh_executor(
             plan, mesh, axes=tuple(mesh_axes), loss=problem.loss,
-            use_kernel=mesh_use_kernel)
+            use_kernel=mesh_use_kernel, sync=mesh_sync)
         sess = cls(problem, topology, resolved, backend, plan, fn,
                    mesh=mesh, mesh_axes=tuple(mesh_axes),
-                   mesh_use_kernel=mesh_use_kernel)
+                   mesh_use_kernel=mesh_use_kernel, mesh_sync=mesh_sync)
         sess.fitted_C = fitted_C
         return sess
 
@@ -181,6 +195,16 @@ class Session:
     @property
     def default_rounds(self) -> int:
         return self.resolved.rounds
+
+    @property
+    def bytes_per_round(self) -> float:
+        """Simulated uplink bytes one root round ships under this plan's
+        per-edge compression (``engine.plan.plan_bytes_per_round``) -- the
+        quantity the delay model's bandwidth terms charge; compare against
+        an uncompressed session of the same topology for the wire saving."""
+        return plan_mod.plan_bytes_per_round(
+            self.plan, self.problem.d,
+            dtype_bytes=self.problem.X.dtype.itemsize)
 
     @staticmethod
     def cache_stats() -> dict:
@@ -280,6 +304,12 @@ class Session:
             record_initial = False
 
         mesh = self.backend == "mesh"
+        if (straggler is not None and mesh
+                and self._mesh_sync == "reduce_scatter"):
+            raise ValueError(
+                "mesh_sync='reduce_scatter' assumes full participation "
+                "(the sharded-server sync has no per-leaf gating); use "
+                "mesh_sync='psum' for straggler-adaptive runs")
         state_exec = None
         if straggler is not None:
             t_compute = tree_mod.strip_delays(
@@ -287,15 +317,18 @@ class Session:
             t_lp = max([l.t_lp for l in chunk_tree.leaves()])
             straggler.bind(self.topology.leaf_sync_delays(), t_compute,
                            t_lp=t_lp)
-            # the flat (alpha, w) pair is not a complete carry once leaves
-            # can skip syncs (absent leaves keep divergent replicas and
-            # stale snapshots), so async runs thread the executors' full
-            # blocked state across chunks instead
+        # the flat (alpha, w) pair is not a complete carry once leaves can
+        # skip syncs (absent leaves keep divergent replicas and stale
+        # snapshots) or once edges compress (error-feedback residuals must
+        # persist across root rounds), so such runs thread the executors'
+        # full blocked state across chunks instead
+        if straggler is not None or plan.has_compression:
             if mesh:
                 state_exec = mesh_mod.get_mesh_executor(
                     plan, self._mesh, axes=self._mesh_axes,
                     loss=self.problem.loss,
-                    use_kernel=self._mesh_use_kernel, carry_state=True)
+                    use_kernel=self._mesh_use_kernel, carry_state=True,
+                    sync=self._mesh_sync)
             else:
                 state_exec = host_mod.get_host_executor(
                     plan, loss=self.problem.loss,
@@ -413,7 +446,7 @@ class Session:
                     if rec_now:
                         record(t, a_carry.reshape(m), extra)
                 else:
-                    state = state_exec.step(self._Xs, self._ys, *state,
+                    state = state_exec.step(self._Xs, self._ys, state,
                                             kys, prt, steps_now, lm_in)
                     if rec_now:
                         record(t, state[0].reshape(m), extra)
@@ -586,6 +619,7 @@ def solve(
     mesh=None,
     mesh_axes: Optional[Sequence[str]] = None,
     mesh_use_kernel: bool = True,
+    mesh_sync: str = "psum",
     on_round: Optional[Callable[[dict], None]] = None,
     straggler=None,
     lam: Optional[float] = None,
@@ -597,7 +631,8 @@ def solve(
     feature parity with a session."""
     sess = Session.compile(problem, topology, schedule, backend=backend,
                            mesh=mesh, mesh_axes=mesh_axes,
-                           mesh_use_kernel=mesh_use_kernel)
+                           mesh_use_kernel=mesh_use_kernel,
+                           mesh_sync=mesh_sync)
     return sess.run(rounds, key=key, warm_start=warm_start,
                     record_history=record_history,
                     history_every=history_every, on_round=on_round,

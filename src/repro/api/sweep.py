@@ -444,8 +444,12 @@ def run_sweep(session, spec: Sweep, *, rounds=None, record_history=True,
     for sidx in sorted(groups, key=lambda s: (s is not None, s)):
         pts = groups[sidx]
         gsess = _session_for(session, spec, sidx)
+        # compressed plans thread EF-residual state through the carry_state
+        # executors, which the fused vmapped dispatch doesn't model; run
+        # those members sequentially (still through cached executors)
         fuse = (gsess.backend in ("vmap", "pallas")
-                and not spec.continuation)
+                and not spec.continuation
+                and not gsess.plan.has_compression)
         group_res = (_run_group_batched(gsess, pts, rounds, record_history,
                                         history_every) if fuse else
                      _run_group_sequential(gsess, pts, rounds,

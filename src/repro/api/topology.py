@@ -33,6 +33,8 @@ def _node_to_dict(node: TreeNode) -> dict:
         "t_lp": node.t_lp,
         "data_size": node.data_size,
     }
+    if node.up_compress:
+        d["up_compress"] = node.up_compress
     if node.children:
         d["children"] = [_node_to_dict(c) for c in node.children]
     return d
@@ -47,6 +49,7 @@ def _node_from_dict(d: dict) -> TreeNode:
         t_cp=float(d.get("t_cp", 0.0)),
         t_lp=float(d.get("t_lp", 0.0)),
         data_size=int(d.get("data_size", 0)),
+        up_compress=str(d.get("up_compress", "")),
     )
 
 
@@ -153,6 +156,35 @@ class Topology:
                 return 0.0
             return max([node.t_cp] + [visit(c) for c in node.children])
         return visit(self.tree)
+
+    def with_compression(
+        self, spec, *, names: Optional[Sequence[str]] = None,
+        min_up_delay: Optional[float] = None,
+    ) -> "Topology":
+        """A copy with ``up_compress=spec`` stamped on matching up-links.
+
+        With no filter every non-root edge gets the spec; ``names``
+        restricts it to those nodes' up-links, ``min_up_delay`` to edges at
+        least that slow -- the topological way to say "compress the
+        cross-pod hops, leave the fast intra-pod links exact".  Filters
+        compose (both must match).  Pass ``spec=""`` to clear overrides.
+        """
+        if spec:
+            from repro.core import compression as comp_mod
+            comp_mod.parse_spec(spec)  # fail fast on typos
+        sel = set(names) if names is not None else None
+
+        def visit(node: TreeNode, is_root: bool) -> TreeNode:
+            kids = tuple(visit(c, False) for c in node.children)
+            node = dataclasses.replace(node, children=kids)
+            if is_root:
+                return node
+            if sel is not None and node.name not in sel:
+                return node
+            if min_up_delay is not None and node.up_delay < min_up_delay:
+                return node
+            return dataclasses.replace(node, up_compress=str(spec))
+        return Topology(tree=visit(self.tree, True))
 
     # ---- serialization -------------------------------------------------
     def to_dict(self) -> dict:

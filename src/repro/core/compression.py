@@ -1,4 +1,5 @@
-"""Gradient/delta compression for the slow cross-pod hop (beyond-paper).
+"""Delta compression for slow tree edges (the CoCoA communication-
+efficiency lineage, arXiv:1409.1458 / arXiv:1711.05305).
 
 Two schemes, both with error feedback (the residual of the compression is
 added back into the next message, so the compression error does not
@@ -8,8 +9,23 @@ accumulate -- Seide et al. 2014 / Stich et al. 2018):
     4x fewer bytes than f32 over the wire.
   * top-k magnitude sparsification: send the k largest-|.| entries.
 
-Both are pure jax (no host callbacks) so they live inside the jitted
-TreeSync step; the dry-run sees the reduced collective bytes directly.
+Both are pure jax (no host callbacks) so they live inside jitted programs;
+the dry-run sees the reduced collective bytes directly.  Two consumer
+layers share this module:
+
+  * the pytree :class:`Compressor` API (``compress``/``decompress`` with
+    explicit wire messages) used by ``repro.core.treesync``;
+  * the *shape-static roundtrip* helpers (:func:`int8_roundtrip`,
+    :func:`topk_roundtrip`) the plan executors call inside ``lax.scan`` /
+    ``fori_loop`` bodies -- compress-then-decompress in one traced op, so
+    the compiled program models the receiver's view without materializing
+    wire buffers (the delay model charges the wire bytes separately, via
+    :func:`wire_ratio`).
+
+Edge specs are strings: ``"none"``, ``"int8"``, ``"topk"`` (default
+fraction) or ``"topk_<frac>"`` (e.g. ``"topk_0.05"``); :func:`parse_spec`
+normalizes them to the ``(kind, frac)`` code pairs the plan IR stores
+per (depth, leaf).
 """
 from __future__ import annotations
 
@@ -23,6 +39,86 @@ Array = jax.Array
 PyTree = Any
 
 BLOCK = 32
+
+# kind codes stored in the plan IR's (D, n) ``compress_kind`` array
+KIND_NONE = 0
+KIND_INT8 = 1
+KIND_TOPK = 2
+
+DEFAULT_TOPK_FRAC = 0.01
+
+# wire bytes / f32 bytes: int8 codes + one f32 absmax scale per BLOCK
+INT8_RATIO = 0.25 + 4.0 / BLOCK / 4.0
+
+
+# ---------------------------------------------------------------------------
+# spec parsing: "none" | "int8" | "topk" | "topk_<frac>" -> (kind, frac)
+# ---------------------------------------------------------------------------
+def parse_spec(spec) -> Tuple[int, float]:
+    """Normalize an edge-compression spec to ``(kind, frac)``.  Accepts
+    ``None`` (no compression), the registry names, ``"topk_<frac>"``, or an
+    already-parsed ``(kind, frac)`` pair."""
+    if spec is None or spec == "" or spec == "none":
+        return KIND_NONE, 0.0
+    if isinstance(spec, tuple):
+        kind, frac = int(spec[0]), float(spec[1])
+        if kind not in (KIND_NONE, KIND_INT8, KIND_TOPK):
+            raise ValueError(f"unknown compression kind code {kind}")
+        return kind, frac
+    if not isinstance(spec, str):
+        raise TypeError(f"compression spec must be a string, got {spec!r}")
+    if spec == "int8":
+        return KIND_INT8, 0.0
+    if spec == "topk":
+        return KIND_TOPK, DEFAULT_TOPK_FRAC
+    if spec.startswith("topk_"):
+        frac = float(spec[len("topk_"):])
+        if not 0.0 < frac <= 1.0:
+            raise ValueError(f"top-k fraction must be in (0, 1], got {frac}")
+        return KIND_TOPK, frac
+    raise ValueError(
+        f"unknown compression spec {spec!r}; use 'none', 'int8', 'topk' "
+        "or 'topk_<frac>'")
+
+
+def spec_name(kind: int, frac: float = 0.0) -> str:
+    """The canonical string form of a ``(kind, frac)`` pair."""
+    if kind == KIND_NONE:
+        return "none"
+    if kind == KIND_INT8:
+        return "int8"
+    if kind == KIND_TOPK:
+        return f"topk_{frac:g}"
+    raise ValueError(f"unknown compression kind code {kind}")
+
+
+def wire_ratio(kind: int, frac: float = 0.0) -> float:
+    """Wire bytes / f32 bytes of one compressed message: the factor the
+    delay model scales an edge's bandwidth term (and the dry-run its byte
+    accounting) by.  Top-k ships (value, index) pairs: 2 * frac."""
+    if kind == KIND_NONE:
+        return 1.0
+    if kind == KIND_INT8:
+        return INT8_RATIO
+    if kind == KIND_TOPK:
+        return min(2.0 * frac, 1.0)
+    raise ValueError(f"unknown compression kind code {kind}")
+
+
+def quality(kind: int, frac: float = 0.0) -> float:
+    """A modeling knob in (0, 1]: how much of one round's eq.-(11)
+    improvement a compressed aggregation retains (error feedback keeps the
+    asymptote, but each round's step is perturbed).  Used by
+    :func:`repro.core.delay.choose_compression` to trade per-round quality
+    against the cheaper round time; int8 is nearly lossless per round,
+    top-k degrades with sparsity."""
+    if kind == KIND_NONE:
+        return 1.0
+    if kind == KIND_INT8:
+        return 0.95
+    if kind == KIND_TOPK:
+        return min(max(frac, 1e-6), 1.0) ** 0.5
+    raise ValueError(f"unknown compression kind code {kind}")
 
 
 # ---------------------------------------------------------------------------
@@ -53,14 +149,35 @@ def dequantize_int8(codes: Array, scale: Array, shape, dtype,
     return flat[..., :n].reshape(shape).astype(dtype)
 
 
+def int8_roundtrip(x: Array, keep_leading: int = 0) -> Array:
+    """What the receiver reconstructs from an int8-quantized ``x``:
+    quantize + dequantize in one traced op (shape- and dtype-preserving),
+    the executors' in-program model of the compressed edge."""
+    codes, scale = quantize_int8(x, keep_leading=keep_leading)
+    return dequantize_int8(codes, scale, x.shape, x.dtype,
+                           keep_leading=keep_leading)
+
+
 # ---------------------------------------------------------------------------
 # top-k sparsification
 # ---------------------------------------------------------------------------
+def topk_count(size: int, frac: float) -> int:
+    """The k for a ``frac`` sparsification of a ``size`` vector: at least
+    one entry (so tiny arrays still make progress), never more than the
+    array holds."""
+    if size <= 0:
+        return 0
+    return min(max(int(size * frac), 1), size)
+
+
 def topk_sparsify(x: Array, frac: float) -> Tuple[Array, Array]:
-    """Keep the `frac` largest-magnitude entries. Returns (values, indices)."""
+    """Keep the `frac` largest-magnitude entries. Returns (values, indices).
+    k is clamped to [1, size] (empty inputs return empty pairs)."""
     flat = x.astype(jnp.float32).reshape(-1)
-    k = max(int(flat.size * frac), 1)
-    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    k = topk_count(flat.size, frac)
+    if k == 0:
+        return flat, jnp.zeros((0,), jnp.int32)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
     return flat[idx], idx
 
 
@@ -72,14 +189,36 @@ def topk_densify(vals: Array, idx: Array, shape, dtype) -> Array:
     return flat.reshape(shape).astype(dtype)
 
 
+def topk_roundtrip(x: Array, k: int) -> Array:
+    """What the receiver reconstructs from a top-``k`` sparsification of
+    each ROW of ``x`` (last axis; leading axes vmapped): the k
+    largest-|.| entries survive, the rest are zeroed.  ``k`` is static
+    (the executors derive it from the feature dimension at trace time), so
+    the op is scan-safe."""
+    k = min(max(int(k), 1), x.shape[-1])
+
+    def one(row):
+        _, idx = jax.lax.top_k(jnp.abs(row), k)
+        return jnp.zeros_like(row).at[idx].set(row[idx])
+
+    f = one
+    for _ in range(x.ndim - 1):
+        f = jax.vmap(f)
+    return f(x)
+
+
 # ---------------------------------------------------------------------------
 # error-feedback compressor over pytrees
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class Compressor:
-    """compress(delta + residual) -> (wire, new_residual); decompress(wire)."""
-    name: str
-    ratio: float  # wire bytes / f32 bytes (approximate, for delay model)
+    """compress(delta + residual) -> (wire, new_residual); decompress(wire).
+
+    Subclasses are plain frozen dataclasses; ``name`` and ``ratio`` (wire
+    bytes / f32 bytes, for the delay model) are derived fields each
+    subclass pins in ``__post_init__``."""
+    name: str = dataclasses.field(init=False, default="none")
+    ratio: float = dataclasses.field(init=False, default=1.0)
 
     def init_residual(self, tree: PyTree) -> PyTree:
         return jax.tree.map(
@@ -93,9 +232,11 @@ class Compressor:
         raise NotImplementedError
 
 
+@dataclasses.dataclass(frozen=True)
 class NoCompression(Compressor):
-    def __init__(self):
-        super().__init__(name="none", ratio=1.0)
+    def __post_init__(self):
+        object.__setattr__(self, "name", "none")
+        object.__setattr__(self, "ratio", 1.0)
 
     def compress(self, tree, residual):
         return tree, residual
@@ -104,9 +245,11 @@ class NoCompression(Compressor):
         return wire
 
 
+@dataclasses.dataclass(frozen=True)
 class Int8Compressor(Compressor):
-    def __init__(self):
-        super().__init__(name="int8", ratio=0.25 + 4.0 / BLOCK / 4.0)
+    def __post_init__(self):
+        object.__setattr__(self, "name", "int8")
+        object.__setattr__(self, "ratio", INT8_RATIO)
 
     def compress(self, tree, residual):
         def one(t, r):
@@ -130,17 +273,21 @@ class Int8Compressor(Compressor):
             wire, is_leaf=is_msg)
 
 
+@dataclasses.dataclass(frozen=True)
 class TopKCompressor(Compressor):
-    def __init__(self, frac: float = 0.01):
-        super().__init__(name=f"topk_{frac:g}", ratio=2.0 * frac)
-        self.__dict__["frac"] = frac  # frozen dataclass workaround
+    frac: float = DEFAULT_TOPK_FRAC
+
+    def __post_init__(self):
+        if not 0.0 < self.frac <= 1.0:
+            raise ValueError(
+                f"top-k fraction must be in (0, 1], got {self.frac}")
+        object.__setattr__(self, "name", f"topk_{self.frac:g}")
+        object.__setattr__(self, "ratio", min(2.0 * self.frac, 1.0))
 
     def compress(self, tree, residual):
-        frac = self.__dict__["frac"]
-
         def one(t, r):
             target = t.astype(jnp.float32) + r
-            vals, idx = topk_sparsify(target, frac)
+            vals, idx = topk_sparsify(target, self.frac)
             approx = topk_densify(vals, idx, t.shape, jnp.float32)
             return {"vals": vals, "idx": idx,
                     "shape": t.shape, "dtype": t.dtype}, target - approx
@@ -164,3 +311,12 @@ COMPRESSORS = {
     "int8": Int8Compressor,
     "topk": TopKCompressor,
 }
+
+
+def get_compressor(spec) -> Compressor:
+    """Instantiate a :class:`Compressor` from an edge spec string
+    (``"none"`` / ``"int8"`` / ``"topk"`` / ``"topk_<frac>"``)."""
+    kind, frac = parse_spec(spec)
+    if kind == KIND_TOPK:
+        return TopKCompressor(frac)
+    return COMPRESSORS[spec_name(kind)]()

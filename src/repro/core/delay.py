@@ -141,8 +141,11 @@ class SyncLevel:
     link: LinkModel
     msg_bytes: float         # size of the averaged state
 
-    def round_delay(self) -> float:
-        return ring_allreduce_delay(self.link, self.msg_bytes, self.group_size)
+    def round_delay(self, wire_ratio: float = 1.0) -> float:
+        """Per-round collective cost; ``wire_ratio`` scales the *bytes* on the
+        wire (delta compression), leaving the latency hops untouched."""
+        return ring_allreduce_delay(
+            self.link, self.msg_bytes * wire_ratio, self.group_size)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,13 +153,21 @@ class FixedLevel:
     """A sync level with an explicitly-given per-round delay (seconds), as
     carried by ``TreeNode.up_delay`` -- interchangeable with
     :class:`SyncLevel` wherever only ``group_size``/``round_delay`` are used
-    (``plan_hierarchical_h``)."""
+    (``plan_hierarchical_h``).
+
+    ``latency_s`` is the part of ``delay_s`` that is pure latency (per-hop
+    setup cost): compression shrinks only the bandwidth-proportional
+    remainder, so ``round_delay(r) = latency_s + (delay_s - latency_s)*r``.
+    The default (0) treats the whole delay as bandwidth-bound -- the most
+    optimistic view of compression, matching ``TreeNode.up_delay`` which
+    does not split the two."""
     name: str
     group_size: int
     delay_s: float
+    latency_s: float = 0.0
 
-    def round_delay(self) -> float:
-        return self.delay_s
+    def round_delay(self, wire_ratio: float = 1.0) -> float:
+        return self.latency_s + (self.delay_s - self.latency_s) * wire_ratio
 
 
 def simulate_bounded_skip(
@@ -255,6 +266,15 @@ def optimal_h_bounded_skip(
     return best
 
 
+def _compression_mods(spec) -> Tuple[float, float]:
+    """(wire_ratio, quality) of a compression spec; (1, 1) for ``None``."""
+    if spec is None:
+        return 1.0, 1.0
+    from repro.core import compression as _comp
+    kind, frac = _comp.parse_spec(spec)
+    return _comp.wire_ratio(kind, frac), _comp.quality(kind, frac)
+
+
 def plan_hierarchical_h(
     levels: Sequence[SyncLevel],
     *,
@@ -271,6 +291,7 @@ def plan_hierarchical_h(
     rel_floor: float = 0.5,
     sim_rounds: int = 512,
     seed: int = 0,
+    compression: Optional[Sequence] = None,
 ) -> list[dict]:
     """Choose per-level local-round counts bottom-up with eq. (12).
 
@@ -299,6 +320,14 @@ def plan_hierarchical_h(
     ``participation`` and its ``round_time``/``delay`` use the
     bounded-skip effective barrier cost, which the outer levels then
     amortize.
+
+    ``compression`` is an optional per-level (bottom-up, same order as
+    ``levels``) list of delta-compression specs (``None``/``"none"``/
+    ``"int8"``/``"topk_<frac>"``): a compressed level's delay shrinks by
+    ``wire_ratio`` (via ``round_delay(wire_ratio)``) while its improvement
+    constant is diluted to ``C*quality`` -- the error-feedback loop re-sends
+    the truncated mass over later rounds, so each round contracts a bit
+    less.  Use :func:`choose_compression` to pick the specs automatically.
     """
     for lvl in levels:
         try:
@@ -309,28 +338,35 @@ def plan_hierarchical_h(
     inner_iter_time = t_lp
     inner_delta = delta
     for i, lvl in enumerate(levels):
-        c_lvl = C
+        spec = None
+        if compression is not None and i < len(compression):
+            spec = compression[i]
+        ratio, qual = _compression_mods(spec)
+        c_in = max(C * qual, 1e-12)
+        c_lvl = c_in
         hm = h_max if (i > 0 or h_max0 is None) else min(h_max, int(h_max0))
         if i == 0 and straggler is not None:
             base = (base_delays if base_delays is not None
-                    else [lvl.round_delay()] * lvl.group_size)
+                    else [lvl.round_delay(ratio)] * lvl.group_size)
             row = optimal_h_bounded_skip(
-                C=C, K=lvl.group_size, delta=inner_delta, t_total=t_total,
+                C=c_in, K=lvl.group_size, delta=inner_delta, t_total=t_total,
                 t_lp=inner_iter_time, t_cp=t_cp, base_delays=base,
                 model=straggler, skip_max=skip_max, h_max=hm,
                 rel_floor=rel_floor, n_rounds=sim_rounds, seed=seed)
             h, t_delay = row["H"], row["t_delay"]
-            c_lvl = max(C * row["participation"], 1e-12)
+            c_lvl = max(c_in * row["participation"], 1e-12)
             extra = {"skip": row["skip"],
                      "participation": row["participation"]}
         else:
-            t_delay = lvl.round_delay()
+            t_delay = lvl.round_delay(ratio)
             h, _ = optimal_h(
-                C=C, K=lvl.group_size, delta=inner_delta, t_total=t_total,
+                C=c_in, K=lvl.group_size, delta=inner_delta, t_total=t_total,
                 t_lp=inner_iter_time, t_delay=t_delay, t_cp=t_cp,
                 h_max=hm,
             )
             extra = {}
+        if spec is not None:
+            extra["compress"] = str(spec)
         round_time = inner_iter_time * h + t_delay + t_cp
         plan.append({"name": lvl.name, "H": h, "round_time": round_time,
                      "delay": t_delay, **extra})
@@ -339,6 +375,73 @@ def plan_hierarchical_h(
         inner_iter_time = round_time
         inner_delta = 1.0 - per_round_factor(h, c_lvl, lvl.group_size,
                                              inner_delta)
+    return plan
+
+
+#: candidate specs ``choose_compression`` evaluates per level; "none" first
+#: so ties (e.g. zero-delay levels) fall back to the exact path.
+DEFAULT_COMPRESSION_CANDIDATES: Tuple[str, ...] = ("none", "int8", "topk")
+
+
+def choose_compression(
+    levels: Sequence[SyncLevel],
+    *,
+    C: float,
+    delta: float,
+    t_total: float,
+    t_lp: float,
+    t_cp: float = 0.0,
+    h_max: int = 10**6,
+    candidates: Sequence[str] = DEFAULT_COMPRESSION_CANDIDATES,
+) -> list[dict]:
+    """Delay-aware per-level compression selection (eq. (12) extended).
+
+    Walks the levels bottom-up like :func:`plan_hierarchical_h`, but at each
+    level evaluates eq. (12)'s bound for every candidate spec: compression
+    scales the level's on-wire bytes by ``wire_ratio(spec)`` (so a slow,
+    bandwidth-bound hop gets cheaper rounds and can afford more of them)
+    while diluting the improvement constant to ``C*quality(spec)`` (the
+    error-feedback loop re-sends the truncated mass later).  The spec with
+    the lowest bound wins; the level above then amortizes the *chosen*
+    round time and contraction.  The net effect is the paper's trade
+    automated: fast intra-pod levels keep ``"none"`` (nothing to win, only
+    quality to lose), slow cross-pod levels pick ``"int8"``/``"topk"``.
+
+    Returns ``[{name, spec, H, round_time, delay, bound}]`` bottom-up.  Feed
+    the ``spec`` column (bottom-up = innermost-first) to
+    ``Schedule(compression=[...])`` or reverse it for ``compile_tree``'s
+    root-first per-depth form.
+    """
+    for lvl in levels:
+        try:
+            _check_improvement_constant(C, lvl.group_size)
+        except ValueError as e:
+            raise ValueError(f"level {lvl.name!r}: {e}") from None
+    if not candidates:
+        raise ValueError("need at least one candidate compression spec")
+    plan = []
+    inner_iter_time = t_lp
+    inner_delta = delta
+    for lvl in levels:
+        best = None
+        for spec in candidates:
+            ratio, qual = _compression_mods(spec)
+            c_eff = max(C * qual, 1e-12)
+            t_delay = lvl.round_delay(ratio)
+            h, bound = optimal_h(
+                C=c_eff, K=lvl.group_size, delta=inner_delta,
+                t_total=t_total, t_lp=inner_iter_time, t_delay=t_delay,
+                t_cp=t_cp, h_max=h_max,
+            )
+            if best is None or bound < best["bound"]:
+                best = {"name": lvl.name, "spec": str(spec), "H": h,
+                        "round_time": inner_iter_time * h + t_delay + t_cp,
+                        "delay": t_delay, "bound": bound, "_c": c_eff}
+        c_eff = best.pop("_c")
+        plan.append(best)
+        inner_iter_time = best["round_time"]
+        inner_delta = 1.0 - per_round_factor(best["H"], c_eff,
+                                             lvl.group_size, inner_delta)
     return plan
 
 

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import on_tpu
+from repro.core import compression as comp_mod
 from repro.core.dual import Loss
 from repro.core.engine.plan import TreePlan
 
@@ -191,6 +192,32 @@ def _build_host_executor(plan: TreePlan, *, loss, record_history,
     else:
         from repro.kernels.sdca.ref import sdca_block_ref
 
+    # ---- static edge-compression structure (tentpole) ------------------
+    # executors branch STATICALLY on has_comp: compression-free plans trace
+    # the exact pre-compression program (bit-identity by construction).
+    # Compressed depths carry an error-feedback residual (n, d) in the scan
+    # carry; leaves are grouped by (kind, frac) so every roundtrip is a
+    # shape-static op (scan-safe), with per-leaf rows = per-edge messages
+    # (all leaves of one child subtree hold the child's identical delta).
+    has_comp = plan.has_compression
+    comp_depths = [dd for dd in range(D)
+                   if (plan.compress_kind[dd] != comp_mod.KIND_NONE).any()]
+    comp_idx = {dd: i for i, dd in enumerate(comp_depths)}
+    comp_groups = {}
+    for dd in comp_depths:
+        groups = {}
+        for li in range(n):
+            k = int(plan.compress_kind[dd, li])
+            if k == comp_mod.KIND_NONE:
+                continue
+            f = float(plan.compress_frac[dd, li])
+            groups.setdefault((k, f), []).append(li)
+        comp_groups[dd] = [(k, f, tuple(ls))
+                           for (k, f), ls in sorted(groups.items())]
+    comp_mask = {dd: jnp.asarray(
+        (plan.compress_kind[dd] != comp_mod.KIND_NONE)[:, None])
+        for dd in comp_depths}
+
     def _scan(X: Array, y: Array, keys: Array, carry0, participation: Array,
               steps: Array, lm: Array):
         """Trace the full tick scan from an explicit blocked carry; returns
@@ -236,8 +263,28 @@ def _build_host_executor(plan: TreePlan, *, loss, record_history,
             pv = reg + jnp.sum(vmask * loss.value(margins, yb)) / m
             return dv, pv
 
+        def roundtrip(dd, target):
+            """The receiver's view of this depth's per-edge messages: each
+            compressed leaf row goes through its edge's (quantize +
+            dequantize) in one traced op; uncompressed rows pass through."""
+            approx = target
+            for kind, frac, rows in comp_groups[dd]:
+                rows_a = jnp.asarray(rows)
+                sub = target[rows_a]
+                if kind == comp_mod.KIND_INT8:
+                    rt = comp_mod.int8_roundtrip(sub, keep_leading=1)
+                else:
+                    k = comp_mod.topk_count(sub.shape[-1], frac)
+                    rt = comp_mod.topk_roundtrip(sub, k)
+                approx = approx.at[rows_a].set(rt)
+            return approx
+
         def tick(carry, xs):
-            a, w, snapA, snapW, srvW = carry
+            if has_comp:
+                a, w, snapA, snapW, srvW, res = carry
+            else:
+                a, w, snapA, snapW, srvW = carry
+                res = ()
             keys_s, smask, sync_s, ref_s, hflag, part_s, steps_s = xs
             da, dw = leaf_batch(a, w, keys_s, smask, steps_s)
             a = a + da
@@ -274,8 +321,23 @@ def _build_host_executor(plan: TreePlan, *, loss, record_history,
                                             num_segments=nchildren[dd])
                 corr = (csize[dd]
                         / jnp.maximum(cnt_c, 1.0)[cids[dd]]).astype(dtype)
+                delta_w = w - snapW[dd]
+                if dd in comp_idx:
+                    # error feedback: compress(delta + residual); the
+                    # residual advances only for leaves that actually
+                    # deliver at this event (e > 0)
+                    ri = comp_idx[dd]
+                    r_prev = res[ri]
+                    target = delta_w.astype(jnp.float32) + r_prev
+                    approx = roundtrip(dd, target)
+                    e_col = (e > 0)[:, None]
+                    res = (res[:ri]
+                           + (jnp.where(e_col, target - approx, r_prev),)
+                           + res[ri + 1:])
+                    delta_w = jnp.where(comp_mask[dd],
+                                        approx.astype(dtype), delta_w)
                 contrib = ((((wcoef[dd] * e) / denom) * corr)
-                           .astype(dtype)[:, None] * (w - snapW[dd]))
+                           .astype(dtype)[:, None] * delta_w)
                 tot = jax.ops.segment_sum(contrib, gids[dd],
                                           num_segments=ngroups[dd])
                 srv_new = srvW[dd] + tot[gids[dd]]
@@ -312,7 +374,9 @@ def _build_host_executor(plan: TreePlan, *, loss, record_history,
                     (a, w))
             else:
                 out = None
-            return (a, w, snapA, snapW, srvW), out
+            carry_out = (a, w, snapA, snapW, srvW, res) if has_comp \
+                else (a, w, snapA, snapW, srvW)
+            return carry_out, out
 
         xs = (keys, solve_mask.astype(dtype), sync_mask.astype(dtype),
               refresh_mask.astype(dtype), root_sync,
@@ -323,21 +387,28 @@ def _build_host_executor(plan: TreePlan, *, loss, record_history,
     def _init_carry(X: Array, alpha0: Array, w0_in: Array):
         """The blocked run-start carry from flat state; snapshots and the
         group servers start at the run-start state (for a cold start that
-        is all-zeros, the pre-warm-start behavior)."""
+        is all-zeros, the pre-warm-start behavior).  Compressed plans
+        append the per-compressed-depth error-feedback residuals (zeros at
+        run start)."""
         dtype = X.dtype
         d_feat = X.shape[1]
         a0 = jnp.zeros((n * m_b,), dtype).at[flat_map].set(
             alpha0.astype(dtype)).reshape(n, m_b)
         w0 = jnp.broadcast_to(w0_in.astype(dtype)[None], (n, d_feat))
-        return (a0, w0, jnp.broadcast_to(a0[None], (D, n, m_b)),
-                jnp.broadcast_to(w0[None], (D, n, d_feat)),
-                jnp.broadcast_to(w0[None], (D, n, d_feat)))
+        carry = (a0, w0, jnp.broadcast_to(a0[None], (D, n, m_b)),
+                 jnp.broadcast_to(w0[None], (D, n, d_feat)),
+                 jnp.broadcast_to(w0[None], (D, n, d_feat)))
+        if has_comp:
+            carry = carry + (tuple(
+                jnp.zeros((n, d_feat), jnp.float32) for _ in comp_depths),)
+        return carry
 
     def solve_fn(X: Array, y: Array, keys: Array, alpha0: Array, w0_in: Array,
                  participation: Array, steps: Array, lm: Array):
         carry0 = _init_carry(X, alpha0, w0_in)
-        (a, w, _, _, _), hist, objective = _scan(X, y, keys, carry0,
-                                                 participation, steps, lm)
+        carry, hist, objective = _scan(X, y, keys, carry0,
+                                       participation, steps, lm)
+        a, w = carry[0], carry[1]
         alpha = a.reshape(-1)[flat_map]
         if record_history:
             d0, p0 = objective(carry0[0], carry0[1])

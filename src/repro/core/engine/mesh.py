@@ -8,7 +8,7 @@ first), so every depth-d sync group is exactly the set of devices sharing
 coordinates on the axes above.  Because mesh plans are level-homogeneous
 (every node at a depth shares (rounds, fan-out) and all leaves are
 congruent), the flat tick schedule factors back into nested ``fori_loop``s
-with one ``psum`` per sync -- the natural lowering on a device mesh, and
+with one collective per sync -- the natural lowering on a device mesh, and
 bit-compatible with the host backend because both consume the same
 per-solve key plan (the legacy-RNG replay from ``engine.plan``).
 
@@ -34,6 +34,32 @@ the Pallas kernel (its ``step_mask`` operand), so heterogeneous / replanned
 H is a runtime input of the one cached device program.  All-ones step
 masks multiply the deltas by exactly 1.0 -- bit-identical to the static-H
 program.
+
+Edge compression (tentpole): a plan whose per-depth compression specs are
+non-trivial routes every sync's ``w``-delta through the edge's
+(quantize + dequantize) roundtrip with an error-feedback residual carried
+in the program state, exactly like the host backend -- mesh plans need ONE
+spec per depth (level-homogeneous compression).  ``compression=None``
+plans trace the pre-compression program unchanged.
+
+Sync lowering (``sync=``):
+
+* ``"psum"`` (default): replicated server state -- every device carries
+  the full per-depth ``snapW``/``srvW`` ``d``-vectors and each sync is one
+  ``psum``.  Bit-identical to the host backend.
+* ``"reduce_scatter"``: the big-``d`` path.  Per-depth server state lives
+  SHARDED over the depth's sync group (each device owns a
+  ``ceil(d / G_d)`` chunk, ``G_d`` the group's device count): a sync is
+  ``psum_scatter`` of the (optionally compressed) local delta into the
+  shard, then one ``all_gather`` to rebuild the full ``w`` the leaf solve
+  needs.  Chunk placement is whatever tiled ``psum_scatter``/``all_gather``
+  agree on, so the lowering never assumes (or computes) a device-ordering
+  convention.  Per-device persistent
+  server state drops from ``2 L d`` to ``2 sum_d ceil(d/G_d)``
+  (:func:`mesh_state_floats`), which is what lets ``d >> VMEM`` problems
+  run.  Requires full participation (the sharded snapshot reconstruction
+  assumes group-coherent server state); numerically equivalent to
+  ``"psum"`` up to float reassociation of the sum.
 """
 from __future__ import annotations
 
@@ -47,6 +73,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import on_tpu, shard_map
+from repro.core import compression as comp_mod
 from repro.core.dual import Loss
 from repro.core.engine.plan import (
     TreePlan, full_participation, full_steps, key_plan)
@@ -56,6 +83,8 @@ Array = jax.Array
 
 _MESH_EXEC_CACHE: OrderedDict = OrderedDict()
 _MESH_EXEC_CACHE_MAX = 16
+
+SYNC_MODES = ("psum", "reduce_scatter")
 
 
 def _check_plan_mesh(plan: TreePlan, mesh: Mesh, axes: Sequence[str]):
@@ -75,6 +104,43 @@ def _check_plan_mesh(plan: TreePlan, mesh: Mesh, axes: Sequence[str]):
         "mesh backend needs equal blocks"
 
 
+def _comp_specs(plan: TreePlan):
+    """The per-depth (kind, frac) compression spec of a mesh-lowerable
+    plan; raises when a depth mixes specs across edges (mesh lowering is
+    one collective per depth, so the spec must be level-uniform)."""
+    specs = []
+    for dd in range(plan.depth):
+        pairs = {(int(k), float(f)) for k, f in
+                 zip(plan.compress_kind[dd], plan.compress_frac[dd])}
+        if len(pairs) != 1:
+            raise ValueError(
+                f"mesh backend needs ONE compression spec per depth; depth "
+                f"{dd} mixes "
+                f"{sorted(comp_mod.spec_name(*p) for p in pairs)}")
+        specs.append(next(iter(pairs)))
+    return specs
+
+
+def mesh_state_floats(plan: TreePlan, d_feat: int, *,
+                      sync: str = "psum") -> int:
+    """Per-device PERSISTENT carry floats of the mesh program (the state a
+    chunked/carry_state session threads: blocked alpha, the ``w`` replica,
+    per-depth snapshots/servers, error-feedback residuals).  The
+    ``reduce_scatter`` lowering keeps per-depth server state sharded over
+    the depth's sync group, which is its big-``d`` memory win."""
+    if sync not in SYNC_MODES:
+        raise ValueError(f"sync must be one of {SYNC_MODES}, got {sync!r}")
+    L, m_b = plan.depth, plan.m_b
+    ks = [plan.levels[d].group_size for d in range(L)]
+    specs = _comp_specs(plan)
+    n_res = sum(1 for k, _ in specs if k != comp_mod.KIND_NONE)
+    base = m_b + d_feat + L * m_b + n_res * d_feat
+    if sync == "psum":
+        return base + 2 * L * d_feat          # snapW + srvW, replicated
+    shard = sum(-(-d_feat // math.prod(ks[d:])) for d in range(L))
+    return base + shard                       # sharded server (snap == srv)
+
+
 def get_mesh_executor(
     plan: TreePlan,
     mesh: Mesh,
@@ -83,6 +149,7 @@ def get_mesh_executor(
     loss: Loss,
     use_kernel: bool = True,
     carry_state: bool = False,
+    sync: str = "psum",
 ):
     """Build (or fetch from cache) the jitted ``shard_map`` program for
     ``plan`` on ``mesh``.
@@ -99,14 +166,23 @@ def get_mesh_executor(
     nor the H schedule is a cache key, so regularization AND local-H grids
     reuse one device program.
 
+    ``sync`` picks the collective lowering: ``"psum"`` (replicated server
+    state, bit-identical to the host backend) or ``"reduce_scatter"``
+    (sharded server state for big ``d``; requires full participation --
+    see the module docstring).
+
     ``carry_state=True`` returns a :class:`~repro.core.engine.host.
-    StateExecutor` threading the full per-leaf state (replica ``w``,
-    per-depth snapshots, group servers) across chunk invocations -- the
-    complete carry async sessions need (the flat ``(alpha, w)`` pair drops
-    absent leaves' divergent replicas)."""
+    StateExecutor` threading the full per-leaf state across chunk
+    invocations as ONE opaque pytree: ``step(Xs, ys, state, kys, part,
+    steps, lm) -> state`` -- the complete carry async and compressed
+    sessions need (the flat ``(alpha, w)`` pair drops absent leaves'
+    divergent replicas and the error-feedback residuals)."""
     _check_plan_mesh(plan, mesh, axes)
+    if sync not in SYNC_MODES:
+        raise ValueError(f"sync must be one of {SYNC_MODES}, got {sync!r}")
     cache_key = (plan.fingerprint, loss.name, loss.gamma,
-                 tuple(axes), mesh, bool(use_kernel), bool(carry_state))
+                 tuple(axes), mesh, bool(use_kernel), bool(carry_state),
+                 sync)
     fn = _MESH_EXEC_CACHE.get(cache_key)
     if fn is not None:
         _MESH_EXEC_CACHE.move_to_end(cache_key)
@@ -123,7 +199,22 @@ def get_mesh_executor(
     axes_from = [tuple(axis_of_depth[d:]) for d in range(L)]
     # uniform per-leaf w-weight at depth d: (1/K_d) / leaves-per-child
     wcoef_leaf = [1.0 / math.prod(ks[d:]) for d in range(L)]
+    group_dev = [math.prod(ks[d:]) for d in range(L)]   # G_d per depth
     H = plan.h_max
+    rs = sync == "reduce_scatter"
+
+    specs = _comp_specs(plan)
+    comp_depths = [dd for dd in range(L)
+                   if specs[dd][0] != comp_mod.KIND_NONE]
+    comp_idx = {dd: i for i, dd in enumerate(comp_depths)}
+
+    def roundtrip_vec(depth, target):
+        """The receiver's view of this depth's compressed (d,) delta."""
+        kind, frac = specs[depth]
+        if kind == comp_mod.KIND_INT8:
+            return comp_mod.int8_roundtrip(target)
+        k = comp_mod.topk_count(target.shape[-1], frac)
+        return comp_mod.topk_roundtrip(target, k)
 
     def leaf_solve(Xs, ys, a, w, k_t, st_t, lm):
         """One Procedure-P call on this shard's (1, m_b) block, drawing the
@@ -142,20 +233,67 @@ def get_mesh_executor(
                                     step_mask=st_t)
         return da, dw[0]
 
+    def _geom(d_feat):
+        """Sharded-server geometry.  ``shard``/``gather`` are each other's
+        inverse BY CONSTRUCTION: a shard is what tiled ``psum_scatter``
+        assigns this device (contributing ``x / G`` from every member of
+        the group, whose sum is ``x`` again for group-uniform ``x``), and
+        ``gather`` is the matching tiled ``all_gather`` -- so chunk
+        placement follows the collectives' own device order and the
+        lowering never materializes a device-position index.  (That is
+        deliberate: device-varying ``dynamic_slice`` offsets derived from
+        ``axis_index``, and participation gates over tiled-collective
+        values, both abort XLA's sharding-propagation pass when they feed
+        a loop carry.)  ``pad_w``/``unpad`` round the leaf's ``w`` replica
+        up to the largest group-padded size: the loop-carried replica must
+        keep a collective-aligned length for the same reason."""
+        p_sz = [-(-d_feat // g) for g in group_dev]
+        d_pad = max(g * p for g, p in zip(group_dev, p_sz))
+
+        def shard(dd, x):
+            # x must be uniform across the depth-dd group (server state is)
+            xp = jnp.pad(x, (0, group_dev[dd] * p_sz[dd] - d_feat))
+            return jax.lax.psum_scatter(
+                xp * (1.0 / group_dev[dd]), axes_from[dd],
+                scatter_dimension=0, tiled=True)
+
+        def gather(dd, sh):
+            return jax.lax.all_gather(
+                sh, axes_from[dd], tiled=True)[:d_feat]
+
+        def scatter_sum(dd, x):
+            xp = jnp.pad(x, (0, group_dev[dd] * p_sz[dd] - d_feat))
+            return jax.lax.psum_scatter(
+                xp, axes_from[dd], scatter_dimension=0, tiled=True)
+
+        def pad_w(x):
+            return jnp.pad(x, (0, d_pad - d_feat))
+
+        def unpad(x):
+            return x[:d_feat]
+
+        return shard, gather, scatter_sum, pad_w, unpad
+
     def make_run(Xs, ys, kys, part, steps, lm):
         """Build the recursive rounds-driver over this shard's inputs:
         Xs (1, m_b, d), kys (1, S, 2), part (1, S), steps (1, S, H);
-        ``lm`` is the replicated runtime lambda*m scalar."""
+        ``lm`` is the replicated runtime lambda*m scalar.  The carry is a
+        tuple whose first three slots are always (a, w, t_c); the server
+        tail is lowering-specific:
+
+        * psum: ``(a, w, t_c, snapA, snapW, srvW, res)``
+        * reduce_scatter: ``(a, w, t_c, snapA, srv_sh, res)`` with
+          ``srv_sh`` the per-depth sharded server/snapshot chunks (one
+          vector under full participation -- snap == srv)."""
         dt = Xs.dtype
         one = jnp.ones((), dt)
+        if rs:
+            shard, gather, scatter_sum, pad_w, unpad = _geom(Xs.shape[-1])
+        else:
+            pad_w = unpad = lambda x: x
 
-        def sync(depth, a, w, t_c, snapA, snapW, srvW, parent_sync):
-            """The depth-`depth` aggregation at tick ``t_c - 1`` with
-            participation-renormalized weights; absent shards keep their
-            state/snapshots, the group server stays coherent for them.
-            ``parent_sync`` flags that the parent also syncs at this tick
-            (its own call handles the shallower bookkeeping then)."""
-            K = ks[depth]
+        def gates(depth, part, t_c):
+            """Participation-renormalized weights of the tick's sync."""
             wc = jnp.asarray(wcoef_leaf[depth], dt)
             p = jax.lax.dynamic_index_in_dim(part, t_c - 1, axis=1,
                                              keepdims=False)[0].astype(dt)
@@ -174,7 +312,35 @@ def get_mesh_executor(
                 corr = size / jnp.maximum(cnt, one)
             else:
                 corr = one
-            tot = jax.lax.psum((p * wc / denom) * corr * (w - snapW[depth]),
+            return p, wc, denom, act, attend, corr
+
+        def compress_delta(depth, delta, res, attend=None):
+            """Error feedback: compress(delta + residual), residual
+            advancing only when this shard actually delivers (``attend``
+            None -- the full-participation reduce_scatter path -- advances
+            unconditionally)."""
+            if depth not in comp_idx:
+                return delta, res
+            ri = comp_idx[depth]
+            target = delta.astype(jnp.float32) + res[ri]
+            approx = roundtrip_vec(depth, target)
+            r_new = target - approx if attend is None else \
+                jnp.where(attend, target - approx, res[ri])
+            res = res[:ri] + (r_new,) + res[ri + 1:]
+            return approx.astype(dt), res
+
+        def sync_psum(depth, carry, parent_sync):
+            """The depth-`depth` aggregation at tick ``t_c - 1`` with
+            participation-renormalized weights; absent shards keep their
+            state/snapshots, the group server stays coherent for them.
+            ``parent_sync`` flags that the parent also syncs at this tick
+            (its own call handles the shallower bookkeeping then)."""
+            a, w, t_c, snapA, snapW, srvW, res = carry
+            K = ks[depth]
+            p, wc, denom, act, attend, corr = gates(depth, part, t_c)
+            delta, res = compress_delta(depth, w - snapW[depth], res,
+                                        attend)
+            tot = jax.lax.psum((p * wc / denom) * corr * delta,
                                axes_from[depth])
             srv_new = srvW[depth] + tot
             a = jnp.where(attend,
@@ -193,55 +359,110 @@ def get_mesh_executor(
             ff = attend & jnp.logical_not(parent_sync)
             for d2 in range(depth):
                 snapW = snapW.at[d2].set(jnp.where(ff, srvW[d2], snapW[d2]))
-            return a, w, snapA, snapW, srvW
+            return a, w, t_c, snapA, snapW, srvW, res
 
-        def run(depth, a, w, t, snapA, snapW, srvW):
+        def sync_rs(depth, carry, parent_sync):
+            """The reduce_scatter lowering of the depth sync: reconstruct
+            the (group-coherent) snapshot from this depth's server shards,
+            ``psum_scatter`` the (optionally compressed) local delta into
+            the shard, then one ``all_gather`` for the full post-sync
+            ``w``.  Deeper server shards rebase by re-slicing that full
+            vector; snap == srv under the full participation this path
+            assumes (the participation mask is NOT consulted -- the
+            session refuses to route partial-participation schedules
+            here), which is also what lets the sync run ungated: XLA's
+            sharding propagation aborts on participation-``where`` gates
+            over tiled-collective values."""
+            a, w, t_c, snapA, srv_sh, res = carry
+            K = ks[depth]
+            wc = jnp.asarray(wcoef_leaf[depth], dt)
+            snap_full = gather(depth, srv_sh[depth])
+            delta, res = compress_delta(depth, unpad(w) - snap_full, res)
+            tot_sh = scatter_sum(depth, wc * delta)
+            w_new = gather(depth, srv_sh[depth] + tot_sh)
+            a = snapA[depth] + (a - snapA[depth]) / K
+            w = pad_w(w_new)
+            for d2 in range(depth, L):
+                snapA = snapA.at[d2].set(a)
+                srv_sh = (srv_sh[:d2] + (shard(d2, w_new),)
+                          + srv_sh[d2 + 1:])
+            return a, w, t_c, snapA, srv_sh, res
+
+        sync = sync_rs if rs else sync_psum
+
+        def leaf_step(carry):
+            a, w, t_c = carry[0], unpad(carry[1]), carry[2]
+            k_t = jax.lax.dynamic_index_in_dim(kys, t_c, axis=1,
+                                               keepdims=False)[0]
+            st_t = jax.lax.dynamic_index_in_dim(steps, t_c, axis=1,
+                                                keepdims=False)
+            da, dw = leaf_solve(Xs, ys, a, w, k_t, st_t, lm)
+            return (carry[0] + da, pad_w(w + dw), t_c + 1) + carry[3:]
+
+        def run(depth, carry):
             """One full solve of a depth-`depth` node: rounds[depth] rounds,
             each recursing below then aggregating over this depth's group
             (Algorithm 2)."""
             T = rounds[depth]
 
-            def one_round(i, carry):
-                a_c, w_c, t_c, sA, sW, sV = carry
-                if depth == L - 1:
-                    k_t = jax.lax.dynamic_index_in_dim(kys, t_c, axis=1,
-                                                       keepdims=False)[0]
-                    st_t = jax.lax.dynamic_index_in_dim(steps, t_c, axis=1,
-                                                        keepdims=False)
-                    da, dw = leaf_solve(Xs, ys, a_c, w_c, k_t, st_t, lm)
-                    a_c, w_c = a_c + da, w_c + dw
-                    t_c = t_c + 1
-                else:
-                    a_c, w_c, t_c, sA, sW, sV = run(
-                        depth + 1, a_c, w_c, t_c, sA, sW, sV)
+            def one_round(i, c):
+                c = leaf_step(c) if depth == L - 1 else run(depth + 1, c)
                 parent_sync = (i == T - 1) if depth > 0 else jnp.bool_(False)
-                a_c, w_c, sA, sW, sV = sync(depth, a_c, w_c, t_c, sA, sW,
-                                            sV, parent_sync)
-                return a_c, w_c, t_c, sA, sW, sV
-            return jax.lax.fori_loop(0, T, one_round,
-                                     (a, w, t, snapA, snapW, srvW))
+                return sync(depth, c, parent_sync)
+            return jax.lax.fori_loop(0, T, one_round, carry)
 
-        return run
+        def init_tail(a0, w0):
+            """The server tail + residuals of a run-start carry (leaf-level
+            shapes: a0 (1, m_b), w0 (d,))."""
+            d_feat = w0.shape[-1]
+            snapA0 = jnp.broadcast_to(a0[None], (L,) + a0.shape)
+            res0 = tuple(jnp.zeros((d_feat,), jnp.float32)
+                         for _ in comp_depths)
+            if rs:
+                srv0 = tuple(shard(dd, w0) for dd in range(L))
+                return (snapA0, srv0, res0)
+            snapW0 = jnp.broadcast_to(w0[None], (L, d_feat))
+            return (snapA0, snapW0, snapW0, res0)
+
+        return run, init_tail, pad_w, unpad
 
     def program(Xs, ys, a0, w0, kys, part, steps, lm):
         # Xs (1, m_b, d), a0 (1, m_b), w0 (d,), kys (1, S, 2),
         # part (1, S), steps (1, S, H) on this shard; lm replicated scalar
         d_feat = Xs.shape[-1]
-        run = make_run(Xs, ys, kys, part, steps, lm)
-        snapA0 = jnp.broadcast_to(a0[None], (L,) + a0.shape)
-        snapW0 = jnp.broadcast_to(w0[None], (L, d_feat))
-        a_end, w_end, _, _, _, _ = run(0, a0, w0, jnp.int32(0),
-                                       snapA0, snapW0, snapW0)
+        run, init_tail, pad_w, unpad = make_run(Xs, ys, kys, part, steps,
+                                                lm)
+        carry = (a0, pad_w(w0), jnp.int32(0)) + init_tail(a0, w0)
+        out = run(0, carry)
+        a_end, w_end = out[0], unpad(out[1])
         return a_end, jnp.broadcast_to(w_end[None], (1, d_feat))
 
-    def program_state(Xs, ys, a0, wrows, sA, sW, sV, kys, part, steps, lm):
-        # state is leaf-major: a0 (1, m_b), wrows (1, d), sA (1, L, m_b),
-        # sW/sV (1, L, d) on this shard; lm replicated scalar
-        run = make_run(Xs, ys, kys, part, steps, lm)
-        a_end, w_end, _, sA2, sW2, sV2 = run(
-            0, a0, wrows[0], jnp.int32(0), sA[0][:, None, :], sW[0], sV[0])
-        return (a_end, w_end[None], sA2[:, 0, :][None], sW2[None],
-                sV2[None])
+    def program_state(Xs, ys, state, kys, part, steps, lm):
+        # state is leaf-major (every leaf owns dim 0 of each element):
+        # a0 (1, m_b), wrows (1, d), sA (1, L, m_b), then the lowering's
+        # server tail (psum: sW/sV (1, L, d); rs: per-depth (1, p_d)
+        # shards), then per-compressed-depth residuals (1, d)
+        run, _, pad_w, unpad = make_run(Xs, ys, kys, part, steps, lm)
+        a0, wrows, sA = state[0], state[1], state[2]
+        n_res = len(comp_depths)
+        if rs:
+            srv = tuple(s[0] for s in state[3:3 + L])
+            res = tuple(r[0] for r in state[3 + L:])
+            carry = (a0, pad_w(wrows[0]), jnp.int32(0),
+                     sA[0][:, None, :], srv, res)
+            out = run(0, carry)
+            a2, w2, _, sA2, srv2, res2 = out
+            return ((a2, unpad(w2)[None], sA2[:, 0, :][None])
+                    + tuple(s[None] for s in srv2)
+                    + tuple(r[None] for r in res2))
+        sW, sV = state[3], state[4]
+        res = tuple(r[0] for r in state[5:5 + n_res])
+        carry = (a0, wrows[0], jnp.int32(0), sA[0][:, None, :], sW[0],
+                 sV[0], res)
+        out = run(0, carry)
+        a2, w2, _, sA2, sW2, sV2, res2 = out
+        return ((a2, w2[None], sA2[:, 0, :][None], sW2[None], sV2[None])
+                + tuple(r[None] for r in res2))
 
     spec_in = P(tuple(reversed(axes)))
     if carry_state:
@@ -250,17 +471,36 @@ def get_mesh_executor(
         sharding = NamedSharding(mesh, spec_in)
         step = jax.jit(shard_map(
             program_state, mesh=mesh,
-            in_specs=(spec_in,) * 10 + (P(),), out_specs=(spec_in,) * 5))
+            in_specs=(spec_in, spec_in, spec_in, spec_in, spec_in,
+                      spec_in, P()),
+            out_specs=spec_in))
+
+        def init_state(a0, wr):
+            # run-start server tail from replicated-per-leaf (a, w) rows;
+            # a device computation because the rs shards are
+            # position-dependent (the geometry lives inside shard_map)
+            _, init_tail, _, _ = make_run(
+                jnp.zeros((1, m_b, wr.shape[-1]), wr.dtype),
+                None, None, None, None, None)
+            sA, *tail = init_tail(a0, wr[0])
+            flat = []
+            for t in tail:
+                flat.extend(t) if isinstance(t, tuple) else flat.append(t)
+            return ((a0, wr, sA[:, 0, :][None])
+                    + tuple(x[None] for x in flat))
+
+        init_prog = jax.jit(shard_map(
+            init_state, mesh=mesh, in_specs=(spec_in, spec_in),
+            out_specs=spec_in))
 
         def init(X, alpha, w):
             dt = X.dtype
             d_feat = X.shape[1]
             a0 = jnp.asarray(alpha, dt).reshape(n, m_b)
             wr = jnp.broadcast_to(jnp.asarray(w, dt)[None], (n, d_feat))
-            sA = jnp.broadcast_to(a0[:, None, :], (n, L, m_b))
-            sW = jnp.broadcast_to(wr[:, None, :], (n, L, d_feat))
-            return tuple(jax.device_put(x, sharding)
-                         for x in (a0, wr, sA, sW, sW))
+            a0 = jax.device_put(a0, sharding)
+            wr = jax.device_put(wr, sharding)
+            return init_prog(a0, wr)
 
         def finalize(state):
             return state[0].reshape(-1), state[1][0]
@@ -295,20 +535,22 @@ def execute_plan_mesh(
     w0: Array = None,
     participation: Array = None,
     steps: Array = None,
+    sync: str = "psum",
 ) -> Tuple[Array, Array]:
     """Run the plan on ``mesh``; returns (alpha (m,), w (d,)).  ``alpha0``/
     ``w0`` warm-start the run (cold all-zeros by default);
     ``participation`` is the (S, n) sync-attendance mask (all-ones -- the
     synchronous schedule -- by default); ``steps`` the (S, n, h_max)
-    runtime step mask (all-ones -- the static-H schedule -- by
-    default)."""
+    runtime step mask (all-ones -- the static-H schedule -- by default);
+    ``sync`` the collective lowering (``"psum"`` / ``"reduce_scatter"``,
+    see :func:`get_mesh_executor`)."""
     _check_plan_mesh(plan, mesh, axes)
     n, m_b = plan.n_leaves, plan.m_b
     m, d_feat = X.shape
     assert n * m_b == m, (n, m_b, m)
 
     fn = get_mesh_executor(plan, mesh, axes=axes, loss=loss,
-                           use_kernel=use_kernel)
+                           use_kernel=use_kernel, sync=sync)
     keys = key_plan(tree, plan, key)                        # (S, n, 2)
     keys_leaf = jnp.asarray(keys.transpose(1, 0, 2))        # (n, S, 2)
     if participation is None:

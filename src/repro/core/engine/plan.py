@@ -86,6 +86,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import compression as comp_mod
 from repro.core.tree import TreeNode
 
 
@@ -130,20 +131,43 @@ class TreePlan:
     # ---- metadata ------------------------------------------------------
     weighting: str
     levels: Optional[Tuple[LevelSpec, ...]]  # set iff level-homogeneous
+    # ---- per-(depth, leaf) edge compression ----------------------------
+    # entry [d, l]: the spec of the up-link from leaf l's depth-(d+1)-side
+    # child subtree into its depth-d ancestor (every leaf of one child
+    # shares the edge, so per-edge == per-leaf-range); kind codes are
+    # ``repro.core.compression.KIND_*``, frac the top-k fraction.
+    compress_kind: Optional[np.ndarray] = None   # (D, n) int8
+    compress_frac: Optional[np.ndarray] = None   # (D, n) f32
     fingerprint: str = ""
 
     def __post_init__(self):
+        if self.compress_kind is None:
+            object.__setattr__(
+                self, "compress_kind",
+                np.zeros((self.depth, self.n_leaves), np.int8))
+        if self.compress_frac is None:
+            object.__setattr__(
+                self, "compress_frac",
+                np.zeros((self.depth, self.n_leaves), np.float32))
         if not self.fingerprint:
             h = hashlib.sha1()
             for a in (self.solve_mask, self.sync_mask, self.refresh_mask,
                       self.alpha_scale, self.w_coeff, self.group_ids,
                       self.child_ids, self.child_sizes,
-                      self.leaf_sizes, self.leaf_offsets, self.leaf_h):
+                      self.leaf_sizes, self.leaf_offsets, self.leaf_h,
+                      self.compress_kind, self.compress_frac):
                 h.update(np.ascontiguousarray(a).tobytes())
             h.update(repr((self.n_leaves, self.m_b, self.m_total,
                            self.n_ticks, self.depth, self.h_max,
                            self.weighting, self.n_groups)).encode())
             object.__setattr__(self, "fingerprint", h.hexdigest())
+
+    @property
+    def has_compression(self) -> bool:
+        """True iff any edge compresses -- executors branch STATICALLY on
+        this, so ``compression=None`` programs are structurally untouched
+        (and bit-identical to pre-compression executors)."""
+        return bool((self.compress_kind != comp_mod.KIND_NONE).any())
 
 
 # ---------------------------------------------------------------------------
@@ -216,13 +240,31 @@ def _walk(tree: TreeNode, key, on_solve, on_sync):
 # ---------------------------------------------------------------------------
 # plan compilation
 # ---------------------------------------------------------------------------
-@functools.lru_cache(maxsize=64)
-def compile_tree(tree: TreeNode, *, weighting: str = "uniform") -> TreePlan:
+def compile_tree(tree: TreeNode, *, weighting: str = "uniform",
+                 compression=None) -> TreePlan:
     """Lower ``tree`` into a :class:`TreePlan`.
+
+    ``compression`` sets the per-depth edge-compression default: ``None``
+    (no compression), one spec string applied to every depth, or a
+    top-down per-depth sequence (entry ``d`` compresses the up-links INTO
+    depth-``d`` nodes; specs as in ``repro.core.compression.parse_spec``).
+    A node's own ``up_compress`` (when non-empty) overrides the default
+    for that edge.
 
     Memoized on the (frozen, hashable) tree so sweep workloads that re-solve
     the same topology skip plan construction; treat the returned plan's
     arrays as read-only."""
+    if compression is None or isinstance(compression, str):
+        comp = compression
+    else:
+        comp = tuple(None if c in (None, "") else str(c)
+                     for c in compression)
+    return _compile_tree_cached(tree, weighting, comp)
+
+
+@functools.lru_cache(maxsize=64)
+def _compile_tree_cached(tree: TreeNode, weighting: str,
+                         compression) -> TreePlan:
     assert not tree.is_leaf, "the root must be an internal node"
     leaves = tree.leaves()
     names = tuple(l.name for l in leaves)
@@ -264,6 +306,21 @@ def compile_tree(tree: TreeNode, *, weighting: str = "uniform") -> TreePlan:
     gid_of: List[Dict[tuple, int]] = [dict() for _ in range(D)]
     cid_count = [0] * D
 
+    # per-depth edge-compression defaults (top-down); a child node's own
+    # ``up_compress`` overrides the default for its edge below
+    if compression is None:
+        level_spec: List = [None] * D
+    elif isinstance(compression, str):
+        level_spec = [compression] * D
+    else:
+        if len(compression) != D:
+            raise ValueError(
+                f"per-depth compression must list all {D} internal depths "
+                f"top-down, got {len(compression)} entries")
+        level_spec = list(compression)
+    compress_kind = np.zeros((D, n), np.int8)
+    compress_frac = np.zeros((D, n), np.float32)
+
     # static per-(depth, leaf) aggregation coefficients
     for path, (node, depth, lo, hi) in node_info.items():
         if path not in gid_of[depth]:
@@ -282,6 +339,9 @@ def compile_tree(tree: TreeNode, *, weighting: str = "uniform") -> TreePlan:
             child_ids[depth, clo:chi] = cid_count[depth]
             child_sizes[depth, clo:chi] = chi - clo
             cid_count[depth] += 1
+            ck, cf = comp_mod.parse_spec(c.up_compress or level_spec[depth])
+            compress_kind[depth, clo:chi] = ck
+            compress_frac[depth, clo:chi] = cf
 
     def on_solve(tick, path, _key):
         solve_mask[tick, leaf_of_path[path]] = 1.0
@@ -308,6 +368,7 @@ def compile_tree(tree: TreeNode, *, weighting: str = "uniform") -> TreePlan:
         child_ids=child_ids, child_sizes=child_sizes,
         n_children=tuple(max(c, 1) for c in cid_count),
         weighting=weighting, levels=levels,
+        compress_kind=compress_kind, compress_frac=compress_frac,
     )
 
 
@@ -510,6 +571,37 @@ def steps_for_h(plan: TreePlan, h) -> np.ndarray:
     h_eff = np.minimum(np.maximum(h, 0), plan.leaf_h[None, :])
     j = np.arange(h_max)
     return (j[None, None, :] < h_eff[:, :, None]).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# simulated communication accounting
+# ---------------------------------------------------------------------------
+def plan_bytes_per_round(plan: TreePlan, d_feat: int, *,
+                         dtype_bytes: int = 4) -> float:
+    """Simulated UPLINK bytes one root round ships: every sync event in
+    the plan delivers one ``d``-vector delta per distinct child edge,
+    scaled by that edge's compression wire ratio
+    (:func:`repro.core.compression.wire_ratio`); the plan's total is
+    normalized by its root-round count.  This is the quantity the delay
+    model's bandwidth terms charge -- the ``BENCH_engine.json``
+    ``compression`` scenario records it compressed vs. uncompressed."""
+    total = 0.0
+    for s in range(plan.n_ticks):
+        for dd in range(plan.depth):
+            ev = plan.sync_mask[s, dd] > 0
+            if not ev.any():
+                continue
+            seen = set()
+            for li in np.nonzero(ev)[0]:
+                cid = int(plan.child_ids[dd, li])
+                if cid in seen:
+                    continue
+                seen.add(cid)
+                ratio = comp_mod.wire_ratio(
+                    int(plan.compress_kind[dd, li]),
+                    float(plan.compress_frac[dd, li]))
+                total += float(d_feat) * dtype_bytes * ratio
+    return total / max(int(plan.root_sync.sum()), 1)
 
 
 # ---------------------------------------------------------------------------

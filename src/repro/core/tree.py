@@ -6,6 +6,10 @@ internal node with K children. Every node carries:
   * ``up_delay`` -- round-trip communication delay to its *parent* (seconds)
   * ``t_cp``     -- computation time of one aggregation at this node (internal)
   * ``t_lp``     -- computation time of one coordinate step (leaf)
+  * ``up_compress`` -- delta-compression spec of the up-link to the parent
+    (``""`` inherits the schedule's per-level default; otherwise ``"none"``,
+    ``"int8"``, ``"topk"`` or ``"topk_<frac>"`` -- see
+    ``repro.core.compression``)
 
 Data assignment: leaves, in left-to-right order, own contiguous column blocks
 whose sizes are given by ``data_size`` (leaf-only).
@@ -25,6 +29,7 @@ class TreeNode:
     t_cp: float = 0.0
     t_lp: float = 0.0
     data_size: int = 0  # leaves only
+    up_compress: str = ""  # per-edge compression override ("" = inherit)
 
     @property
     def is_leaf(self) -> bool:

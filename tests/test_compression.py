@@ -1,0 +1,352 @@
+"""Compressed per-edge tree sync: spec parsing/dataclasses, roundtrip
+invariants, error feedback, plan-IR compression fields and byte
+accounting, the exactness guarantee of ``compression="none"`` on every
+backend, compressed convergence, the delay-aware auto-selection, and the
+``mesh_sync="reduce_scatter"`` sharded-server path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Problem, Schedule, Session, Topology, solve
+from repro.core import compression as comp
+from repro.core.delay import FixedLevel, choose_compression
+from repro.core.engine import mesh as mesh_mod
+from repro.core.engine.plan import compile_tree, plan_bytes_per_round
+from repro.core.tree import TreeNode, star
+from repro.data.synthetic import gaussian_regression
+
+LAM = 0.1
+
+
+# ---------------------------------------------------------------------------
+# compressor dataclasses and spec parsing
+# ---------------------------------------------------------------------------
+def test_compressors_are_plain_frozen_dataclasses():
+    """Real dataclass fields (no __init__ workarounds): construction by
+    field, frozen-ness, and derived name/ratio all behave."""
+    c = comp.TopKCompressor(0.25)
+    assert c.frac == 0.25
+    assert {f.name for f in dataclasses.fields(c)} >= {"frac", "name",
+                                                       "ratio"}
+    assert c.name == "topk_0.25" and c.ratio == 0.5
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        c.frac = 0.5
+    with pytest.raises(ValueError):
+        comp.TopKCompressor(0.0)
+    assert comp.Int8Compressor().ratio == comp.INT8_RATIO
+    assert comp.NoCompression().ratio == 1.0
+    # the registry default and the spec path agree
+    assert comp.COMPRESSORS["topk"]().frac == comp.DEFAULT_TOPK_FRAC
+    assert comp.get_compressor("topk_0.05").frac == 0.05
+
+
+def test_parse_spec_and_ratios():
+    assert comp.parse_spec(None) == (comp.KIND_NONE, 0.0)
+    assert comp.parse_spec("int8") == (comp.KIND_INT8, 0.0)
+    assert comp.parse_spec("topk_0.1") == (comp.KIND_TOPK, 0.1)
+    for bad in ("gzip", "topk_0", "topk_1.5"):
+        with pytest.raises(ValueError):
+            comp.parse_spec(bad)
+    # int8: 1 byte/code + one f32 scale per 32-block, exactly
+    assert comp.INT8_RATIO == 0.28125
+    assert comp.wire_ratio(comp.KIND_INT8) == 0.28125
+    # top-k ships (value, index) pairs, capped at the dense size
+    assert comp.wire_ratio(comp.KIND_TOPK, 0.1) == 0.2
+    assert comp.wire_ratio(comp.KIND_TOPK, 0.9) == 1.0
+
+
+def test_topk_small_arrays_never_empty():
+    """k clamps to >= 1 so tiny vectors still make progress (the k==0
+    guard)."""
+    assert comp.topk_count(10, 0.001) == 1
+    assert comp.topk_count(10, 1.0) == 10
+    assert comp.topk_count(0, 0.5) == 0
+    x = jnp.asarray([0.1, -3.0, 0.2])
+    vals, idx = comp.topk_sparsify(x, 0.01)
+    assert vals.shape == (1,) and int(idx[0]) == 1
+    # roundtrip with k below 1 behaves as k=1
+    y = comp.topk_roundtrip(x, 0)
+    np.testing.assert_array_equal(np.asarray(y), [0.0, -3.0, 0.0])
+
+
+@pytest.mark.parametrize("n", [1, 5, 32, 33, 100])
+def test_roundtrips_preserve_shape_and_dtype(n):
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,), jnp.float32)
+    for y in (comp.int8_roundtrip(x), comp.topk_roundtrip(x, max(n // 4, 1))):
+        assert y.shape == x.shape and y.dtype == x.dtype
+    # blockwise int8 error bound holds on non-multiple-of-BLOCK sizes too
+    err = np.abs(np.asarray(comp.int8_roundtrip(x) - x)).max()
+    assert err <= np.abs(np.asarray(x)).max() / 254.0 + 1e-7
+
+
+def test_error_feedback_recovers_truncated_mass():
+    """EF loop: with a constant per-round delta, the cumulative
+    reconstruction tracks the cumulative truth -- the residual re-sends
+    what compression dropped instead of losing it."""
+    d = 64
+    delta = jax.random.normal(jax.random.PRNGKey(0), (d,), jnp.float32)
+    k = comp.topk_count(d, 0.1)
+    res = jnp.zeros((d,), jnp.float32)
+    got = jnp.zeros((d,), jnp.float32)
+    for t in range(1, 41):
+        target = delta + res
+        approx = comp.topk_roundtrip(target, k)
+        res = target - approx
+        got = got + approx
+        # invariant: sent-so-far + residual == truth-so-far, exactly
+        np.testing.assert_allclose(np.asarray(got + res),
+                                   np.asarray(t * delta.astype(jnp.float32)),
+                                   rtol=1e-4, atol=1e-4)
+    # and the carried residual stays bounded (no drift)
+    assert float(jnp.abs(res).max()) <= float(jnp.abs(delta).max()) * d
+
+
+# ---------------------------------------------------------------------------
+# plan IR: per-(depth, leaf) compression fields and byte accounting
+# ---------------------------------------------------------------------------
+def test_plan_compression_fields_and_fingerprint():
+    tree = star(4, 8, outer_rounds=1, local_steps=4)
+    p0 = compile_tree(tree)
+    p1 = compile_tree(tree, compression="int8")
+    assert not p0.has_compression and p1.has_compression
+    assert p1.compress_kind.shape == (1, 4)
+    assert (p1.compress_kind == comp.KIND_INT8).all()
+    assert p0.fingerprint != p1.fingerprint
+    # "none" IS the uncompressed plan (same fingerprint -> same cached
+    # executor -> bit-identity by construction)
+    assert compile_tree(tree, compression="none").fingerprint == \
+        p0.fingerprint
+
+
+def test_plan_per_edge_override_beats_level_default():
+    kids = tuple(
+        TreeNode(name=f"W{k}", rounds=4, data_size=8,
+                 up_compress="topk_0.2" if k == 0 else "")
+        for k in range(3))
+    tree = TreeNode(name="root", children=kids, rounds=1)
+    p = compile_tree(tree, compression="int8")
+    assert p.compress_kind[0, 0] == comp.KIND_TOPK
+    assert p.compress_frac[0, 0] == np.float32(0.2)
+    assert (p.compress_kind[0, 1:] == comp.KIND_INT8).all()
+
+
+def test_plan_bytes_per_round_exact_ratio():
+    tree = star(4, 8, outer_rounds=1, local_steps=4)
+    d = 320
+    b0 = plan_bytes_per_round(compile_tree(tree), d)
+    b1 = plan_bytes_per_round(compile_tree(tree, compression="int8"), d)
+    assert b0 == 4 * 4 * d          # 4 edges x one f32 d-vector per round
+    assert b1 / b0 == comp.INT8_RATIO
+
+
+# ---------------------------------------------------------------------------
+# executors: "none" exactness, compressed convergence, EF across chunks
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def small_problem():
+    topo = Topology.star(4, 32, rounds=30, local_steps=32, t_lp=1e-6,
+                         t_delay=1e-3)
+    X, y = gaussian_regression(m=topo.m_total, d=24)
+    return Problem.ridge(X, y, lam=LAM), topo
+
+
+@pytest.mark.parametrize("backend", ["vmap", "pallas", "mesh"])
+def test_none_is_bit_identical_on_every_backend(backend, small_problem):
+    prob, _ = small_problem
+    n = len(jax.devices()) if backend == "mesh" else 4
+    topo = Topology.star(n, 128 // n, rounds=10, local_steps=32)
+    X, y = gaussian_regression(m=topo.m_total, d=24)
+    prob = Problem.ridge(X, y, lam=LAM)
+    key = jax.random.PRNGKey(3)
+    r0 = solve(prob, topo, Schedule(), backend=backend, key=key)
+    r1 = solve(prob, topo, Schedule(compression="none"), backend=backend,
+               key=key)
+    np.testing.assert_array_equal(np.asarray(r0.alpha), np.asarray(r1.alpha))
+    np.testing.assert_array_equal(np.asarray(r0.w), np.asarray(r1.w))
+
+
+@pytest.mark.parametrize("spec", ["int8", "topk_0.25"])
+def test_compressed_run_reaches_same_gap(spec, small_problem):
+    """EF-compressed syncs converge to the same duality gap as the exact
+    run -- while shipping >= 2x fewer simulated bytes per round."""
+    prob, topo = small_problem
+    key = jax.random.PRNGKey(0)
+    s_ex = Session.compile(prob, topo)
+    s_c = Session.compile(prob, topo, Schedule(compression=spec))
+    assert s_c.plan.has_compression
+    g_ex = s_ex.run(key=key).history[-1]["gap"]
+    g_c = s_c.run(key=key).history[-1]["gap"]
+    target = 1e-3
+    assert g_ex < target and g_c < target, (g_ex, g_c)
+    assert s_ex.bytes_per_round / s_c.bytes_per_round >= 2.0
+    # and the simulated clock reflects the cheaper wire
+    assert s_c.resolved.per_round_time < s_ex.resolved.per_round_time
+
+
+def test_compressed_host_split_runs_match_state_carry(small_problem):
+    """Chunked execution threads the EF residuals across root rounds
+    (carry_state executors): 30 chunked rounds == the same 30 rounds run
+    in one session call, and histories are reproducible."""
+    prob, topo = small_problem
+    key = jax.random.PRNGKey(5)
+    sess = Session.compile(prob, topo, Schedule(compression="int8"))
+    r1 = sess.run(rounds=30, key=key, record_history=False)
+    r2 = sess.run(rounds=30, key=key, record_history=False)
+    np.testing.assert_array_equal(np.asarray(r1.alpha), np.asarray(r2.alpha))
+    np.testing.assert_array_equal(np.asarray(r1.w), np.asarray(r2.w))
+
+
+def test_compressed_sweep_members_match_standalone(small_problem):
+    """Compressed plans opt out of the fused vmapped dispatch (EF state
+    isn't modeled there) but sweep members still reproduce standalone
+    runs exactly."""
+    prob, topo = small_problem
+    sess = Session.compile(prob, topo, Schedule(compression="int8"))
+    lams = [0.2, 0.05]
+    rs = sess.sweep(lams=lams, rounds=8, record_history=False)
+    for lam, a in zip(lams, rs.alphas):
+        ref = sess.run(rounds=8, key=jax.random.PRNGKey(0), lam=lam,
+                       record_history=False)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(ref.alpha))
+
+
+# ---------------------------------------------------------------------------
+# mesh backend: reduce_scatter sync + compression
+# ---------------------------------------------------------------------------
+def test_mesh_reduce_scatter_matches_psum():
+    n = len(jax.devices())
+    topo = Topology.star(n, 128 // n, rounds=8, local_steps=32)
+    X, y = gaussian_regression(m=topo.m_total, d=37)   # odd d: padded shards
+    prob = Problem.ridge(X, y, lam=LAM)
+    key = jax.random.PRNGKey(1)
+    r_ps = solve(prob, topo, backend="mesh", key=key)
+    r_rs = solve(prob, topo, backend="mesh", key=key,
+                 mesh_sync="reduce_scatter")
+    np.testing.assert_allclose(np.asarray(r_rs.w), np.asarray(r_ps.w),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(r_rs.alpha),
+                               np.asarray(r_ps.alpha), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("sync", ["psum", "reduce_scatter"])
+def test_mesh_compressed_matches_host(sync):
+    n = len(jax.devices())
+    topo = Topology.star(n, 128 // n, rounds=8, local_steps=32)
+    X, y = gaussian_regression(m=topo.m_total, d=24)
+    prob = Problem.ridge(X, y, lam=LAM)
+    key = jax.random.PRNGKey(2)
+    sched = Schedule(compression="int8")
+    r_h = solve(prob, topo, sched, backend="vmap", key=key)
+    r_m = solve(prob, topo, sched, backend="mesh", key=key, mesh_sync=sync)
+    np.testing.assert_allclose(np.asarray(r_m.w), np.asarray(r_h.w),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_mesh_state_floats_sharded_server_saves_memory():
+    tree = star(8, 4, outer_rounds=1, local_steps=2)
+    plan = compile_tree(tree)
+    d = 10_000
+    f_ps = mesh_mod.mesh_state_floats(plan, d, sync="psum")
+    f_rs = mesh_mod.mesh_state_floats(plan, d, sync="reduce_scatter")
+    # replicated: snapshot + server w per level; sharded: one d/K shard
+    assert f_rs < f_ps
+    assert f_ps - f_rs == 2 * d - -(-d // 8)
+
+
+def test_mesh_rejects_mixed_specs_within_a_depth():
+    kids = tuple(
+        TreeNode(name=f"W{k}", rounds=2, data_size=4,
+                 up_compress="int8" if k == 0 else "topk_0.5")
+        for k in range(2))
+    plan = compile_tree(TreeNode(name="root", children=kids, rounds=1))
+    with pytest.raises(ValueError, match="ONE compression spec per depth"):
+        mesh_mod._comp_specs(plan)
+
+
+def test_reduce_scatter_refuses_stragglers():
+    n = len(jax.devices())
+    topo = Topology.star(n, 32 * n, rounds=4, local_steps=8, t_lp=1e-6)
+    X, y = gaussian_regression(m=topo.m_total, d=8)
+    sess = Session.compile(Problem.ridge(X, y, lam=LAM), topo,
+                           backend="mesh", mesh_sync="reduce_scatter")
+    from repro.core.delay import StragglerModel
+    from repro.runtime.straggler import StragglerPolicy
+    pol = StragglerPolicy(model=StragglerModel(slow_prob=0.5,
+                                               slow_factor=10.0),
+                          max_consecutive=1, seed=0)
+    with pytest.raises(ValueError, match="full participation"):
+        sess.run(key=jax.random.PRNGKey(0), straggler=pol)
+
+
+# ---------------------------------------------------------------------------
+# API: serialization, schedule knobs, delay-aware auto-selection
+# ---------------------------------------------------------------------------
+def test_topology_compression_roundtrip_and_filters():
+    topo = Topology.two_level(2, 2, 8, root_delay=1e-3, group_delay=1e-5)
+    tc = topo.with_compression("int8", min_up_delay=1e-4)
+    assert [c.up_compress for c in tc.tree.children] == ["int8", "int8"]
+    assert all(l.up_compress == "" for l in tc.tree.leaves())
+    t2 = Topology.from_json(tc.to_json())
+    assert t2 == tc
+    # the override survives into the plan fingerprint via the wire format
+    assert compile_tree(t2.tree).fingerprint == \
+        compile_tree(tc.tree).fingerprint
+    assert compile_tree(tc.tree).has_compression
+    with pytest.raises(ValueError):
+        topo.with_compression("gzip")
+
+
+def test_schedule_compression_validation():
+    topo = Topology.star(4, 8)
+    with pytest.raises(ValueError):
+        Schedule(compression="gzip").resolve(topo)
+    with pytest.raises(ValueError, match="all 1 internal depths"):
+        Schedule(compression=["int8", "int8"]).resolve(topo)
+    with pytest.raises(ValueError, match="rounds='auto'"):
+        Schedule(compression="auto").resolve(topo)
+    r = Schedule(compression="topk_0.1").resolve(topo)
+    assert r.compression == ("topk_0.1",)
+
+
+def test_choose_compression_slow_links_compress_fast_dont():
+    """The eq.-(12) trade: a pure-latency level gains nothing on the wire
+    (compression only dilutes C -> "none"); a bandwidth-bound slow level
+    buys cheaper rounds with a small quality hit -> compressed."""
+    levels = [
+        FixedLevel("fast", 4, delay_s=1e-4, latency_s=1e-4),  # pure latency
+        FixedLevel("slow", 4, delay_s=0.05),                  # all bandwidth
+    ]
+    rows = choose_compression(levels, C=0.5, delta=0.01, t_total=10.0,
+                              t_lp=1e-6)
+    assert rows[0]["spec"] == "none"
+    assert rows[1]["spec"] != "none"
+    # the compressed level's planned delay really is the scaled one
+    k, f = comp.parse_spec(rows[1]["spec"])
+    assert rows[1]["delay"] == pytest.approx(
+        0.05 * comp.wire_ratio(k, f))
+
+
+def test_schedule_auto_compression_end_to_end():
+    topo = Topology.two_level(2, 2, 16, root_delay=5e-2, group_delay=1e-5,
+                              local_steps=8)
+    # give leaves a compute cost so rounds='auto' is well-posed
+    topo = Topology.from_tree(
+        Schedule(local_steps=8).resolve(topo).full_tree)
+    tree = topo.tree
+    import dataclasses as dc
+
+    def with_tlp(node):
+        kids = tuple(with_tlp(c) for c in node.children)
+        return dc.replace(node, children=kids,
+                          t_lp=1e-6 if node.is_leaf else 0.0)
+    topo = Topology.from_tree(with_tlp(tree))
+    res = Schedule.auto(1.0, C=0.5, compression="auto").resolve(topo)
+    assert res.compression is not None and len(res.compression) == 2
+    # the planner's per-level rows carry the chosen specs
+    assert all("compress" in row for row in res.level_plan)
+    # the slow root link (50 ms, bandwidth-bound in the FixedLevel view)
+    # must compress
+    assert res.compression[0] != "none"
