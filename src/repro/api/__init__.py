@@ -38,6 +38,11 @@ from repro.api.session import Session, solve                # noqa: F401
 from repro.api.sweep import RunSet, Sweep, sweep            # noqa: F401
 from repro.api.topology import Topology                     # noqa: F401
 from repro.core.instrument import SolveResult               # noqa: F401
+from repro.runtime.fault import (                           # noqa: F401
+    CheckpointPolicy, ElasticSession, FaultModel, MembershipLog,
+    run_with_faults)
 
 __all__ = ["Problem", "Topology", "Schedule", "DelayModel", "Session",
-           "SolveResult", "Sweep", "RunSet", "solve", "sweep"]
+           "SolveResult", "Sweep", "RunSet", "solve", "sweep",
+           "CheckpointPolicy", "ElasticSession", "FaultModel",
+           "MembershipLog", "run_with_faults"]

@@ -36,8 +36,8 @@ from typing import Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.core import compression as comp_mod
-from repro.core.delay import (StragglerModel, choose_compression,
-                              plan_hierarchical_h)
+from repro.core.delay import (StragglerModel, checkpoint_period,
+                              choose_compression, plan_hierarchical_h)
 from repro.core.tree import TreeNode
 
 from repro.api.topology import Topology
@@ -66,7 +66,16 @@ class DelayModel:
     over the topology's per-leaf sync delays
     (:func:`repro.core.delay.optimal_h_bounded_skip`) -- dropping
     stragglers shrinks the effective barrier delay but dilutes eq. (11)'s
-    per-round improvement by the participation fraction."""
+    per-round improvement by the participation fraction.
+
+    ``mtbf`` (mean time between failures, simulated seconds) together
+    with ``ckpt_write`` (the cost of one checkpoint write) makes the
+    round-time model fault-aware: the resolved schedule carries the
+    Young/Daly-optimal checkpoint period
+    (:func:`repro.core.delay.checkpoint_period`) as
+    ``resolved.ckpt_every`` -- what ``CheckpointPolicy(every="auto")``
+    executes -- and ``rounds="auto"``'s time budget charges the amortized
+    write cost (``t_round + ckpt_write / period`` per root round)."""
     t_total: float
     C: Union[float, str] = 0.5
     delta: Optional[float] = None
@@ -75,6 +84,8 @@ class DelayModel:
     pilot_rounds: int = 8
     straggler: Optional[StragglerModel] = None
     skip_max: int = 3
+    ckpt_write: float = 0.0
+    mtbf: Optional[float] = None
 
     def __post_init__(self):
         if isinstance(self.C, str) and self.C != "auto":
@@ -88,6 +99,11 @@ class DelayModel:
         if self.skip_max < 0:
             raise ValueError(
                 f"skip_max must be >= 0, got {self.skip_max}")
+        if self.ckpt_write < 0:
+            raise ValueError(
+                f"ckpt_write must be >= 0, got {self.ckpt_write}")
+        if self.mtbf is not None and not self.mtbf > 0:
+            raise ValueError(f"mtbf must be > 0, got {self.mtbf}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,7 +127,12 @@ class ResolvedSchedule:
     nodes -- the form ``engine.plan.compile_tree`` consumes) or ``None``;
     the simulated clocks (``per_round_time``/``round_time_for``) charge
     the COMPRESSED link delays (each edge's ``up_delay`` scaled by its
-    spec's wire ratio)."""
+    spec's wire ratio).
+
+    ``ckpt_every`` (set iff the schedule's :class:`DelayModel` declared an
+    ``mtbf``) is the Young/Daly-optimal checkpoint period in root rounds
+    (:func:`repro.core.delay.checkpoint_period`) -- what
+    ``CheckpointPolicy(every="auto")`` resolves to."""
     chunk_tree: TreeNode
     rounds: int                      # default root-round count for run()
     weighting: str
@@ -121,6 +142,7 @@ class ResolvedSchedule:
     skip: Optional[int] = None         # planned BoundedSkip threshold
     straggler_model: Optional[StragglerModel] = None
     compression: Optional[tuple] = None  # top-down per-depth specs
+    ckpt_every: Optional[int] = None   # Young/Daly period (root rounds)
 
     @property
     def full_tree(self) -> TreeNode:
@@ -353,7 +375,18 @@ class Schedule:
             # the simulated clock charges the RUNTIME H, not the capacity
             resolved = dataclasses.replace(
                 resolved, per_round_time=resolved.round_time_for(runtime_h))
-        return resolved
+        return self._with_ckpt_plan(resolved)
+
+    def _with_ckpt_plan(self, resolved: ResolvedSchedule) -> ResolvedSchedule:
+        """Attach the Young/Daly checkpoint period when the DelayModel is
+        fault-aware (``mtbf`` declared)."""
+        dm = self.delay
+        if dm is None or dm.mtbf is None:
+            return resolved
+        every = checkpoint_period(
+            resolved.per_round_time, dm.ckpt_write, dm.mtbf,
+            max_period=max(resolved.rounds, 1))
+        return dataclasses.replace(resolved, ckpt_every=every)
 
     def _apply_h_cap(self, tree: TreeNode):
         """Pad the leaves to the ``h_cap`` capacity; the displaced per-leaf
@@ -428,7 +461,14 @@ class Schedule:
             topology.tree, 0, [0],
             leaf_steps_of=lambda i, name: local_steps,
             rounds_of_depth=lambda d: None if d == 0 else rounds_of.get(d))
-        root_rounds = max(1, int(dm.t_total / lp[-1]["round_time"]))
+        # fault-aware budget: every root round additionally pays the
+        # AMORTIZED checkpoint-write cost at the Young/Daly period
+        budget_round_time = lp[-1]["round_time"]
+        if dm.mtbf is not None:
+            period = checkpoint_period(budget_round_time, dm.ckpt_write,
+                                       dm.mtbf)
+            budget_round_time += dm.ckpt_write / period
+        root_rounds = max(1, int(dm.t_total / budget_round_time))
         tree, runtime_h = self._apply_h_cap(tree)
         chunk = dataclasses.replace(tree, rounds=1)
         resolved = ResolvedSchedule(
@@ -439,4 +479,4 @@ class Schedule:
         if runtime_h is not None:
             resolved = dataclasses.replace(
                 resolved, per_round_time=resolved.round_time_for(runtime_h))
-        return resolved
+        return self._with_ckpt_plan(resolved)

@@ -224,6 +224,10 @@ class Session:
         straggler=None,
         lam: Optional[float] = None,
         local_h=None,
+        checkpoint=None,
+        _ef_state=None,
+        _history_prefix=(),
+        _final_save: bool = True,
     ) -> SolveResult:
         """Run ``rounds`` root rounds (default: the schedule's).
 
@@ -275,7 +279,21 @@ class Session:
         its replanned H is fed back into the NEXT chunk's step-mask
         operand (clamped to the compiled capacity): the session replans
         with ZERO retraces, and each chunk's executed H is recorded in the
-        history (``"h"``)."""
+        history (``"h"``).
+
+        ``checkpoint`` (a directory path or a
+        :class:`~repro.runtime.fault.CheckpointPolicy`) snapshots the
+        exact chunk carry every ``policy.every`` root rounds (plus always
+        the final round): flat (alpha, w), the advanced root RNG key and
+        any error-feedback residuals, with enough metadata (plan
+        fingerprint, round/time cursors, lambda, local_h, recorded
+        history) that :meth:`resume` restarts bit-identically on ANY
+        backend -- including a mesh with a different device count.
+        Checkpointing composes with compression but not with
+        ``straggler=`` (a mid-run blocked state under skipped syncs holds
+        divergent per-leaf replicas the flat payload cannot represent).
+        ``_ef_state`` / ``_history_prefix`` / ``_final_save`` are
+        :meth:`resume`'s private restore hooks."""
         T = self.resolved.rounds if rounds is None else int(rounds)
         if T < 0:
             raise ValueError(f"rounds must be >= 0, got {T}")
@@ -302,6 +320,22 @@ class Session:
             t0_round = int(warm_start.history[-1]["round"])
             t0_time = float(warm_start.history[-1]["time"])
             record_initial = False
+
+        ckpt_mgr, ck_every, k_cur = None, 0, k
+        ckpt_pending, k_lag = None, 0
+        if checkpoint is not None:
+            if straggler is not None:
+                raise ValueError(
+                    "checkpoint= does not compose with straggler=: a "
+                    "mid-run blocked state under skipped syncs holds "
+                    "divergent per-leaf replicas and stale snapshots the "
+                    "flat chunk-carry payload cannot represent; checkpoint "
+                    "synchronous (or compressed) runs only")
+            from repro.runtime import fault as fault_mod
+            _, ckpt_mgr, ck_every = fault_mod.bind_policy(
+                checkpoint, self.resolved)
+            h_meta = None if local_h is None else \
+                np.asarray(local_h).tolist()
 
         mesh = self.backend == "mesh"
         if (straggler is not None and mesh
@@ -393,6 +427,12 @@ class Session:
         state = None
         if state_exec is not None:
             state = state_exec.init(X, a_carry, w)
+            if _ef_state:
+                # restore path: substitute the checkpointed error-feedback
+                # residuals (the one piece of the blocked carry that does
+                # not collapse into (alpha, w) at a root-round boundary)
+                from repro.runtime import fault as fault_mod
+                state = fault_mod.with_ef_residuals(self, state, _ef_state)
 
         # all rounds' keys in one walk of the equivalent monolithic tree
         # (the legacy chain), so the chunk loop does no host RNG work
@@ -460,7 +500,52 @@ class Session:
                                         prt, steps_now, lm_in)
                 if rec_now:
                     record(t, state_exec.finalize(state)[0], extra)
+            if ckpt_mgr is not None:
+                k_lag += 1
+                # period alignment is on the GLOBAL round cursor, so a
+                # resumed leg checkpoints at the same rounds the
+                # uninterrupted run would have
+                if ((t0_round + t) % ck_every == 0
+                        or (t == T and _final_save)):
+                    from repro.runtime import fault as fault_mod
+                    # the RNG chain advances lazily: one dispatch per
+                    # snapshot instead of one per round (a handful of
+                    # static lag values -> a handful of compiles)
+                    k_cur = plan_mod.advance_root_key(k_cur, k_lag, K_root)
+                    k_lag = 0
+                    if state_exec is not None:
+                        af, wf = state_exec.finalize(state)
+                    else:
+                        af, wf = a_carry, w
+                    payload = {
+                        "alpha": af.reshape(m) if mesh else af,
+                        "w": wf,
+                        "key": k_cur,
+                        "res": fault_mod.ef_residuals(self, state),
+                    }
+                    meta = {
+                        "version": fault_mod.PAYLOAD_VERSION,
+                        "round": t0_round + t,
+                        "sim_time": t0_time + t * dt,
+                        "rounds_total": t0_round + T,
+                        "lam": float(lam),
+                        "m": int(m), "d": int(self.problem.d),
+                        "plan": plan.fingerprint,
+                        "local_h": h_meta,
+                        "history": list(_history_prefix) + history,
+                    }
+                    # the write lags one period: payload leaves stay device
+                    # arrays until the NEXT snapshot point, when they have
+                    # long materialized -- the host transfer never stalls
+                    # the async round-dispatch pipeline
+                    if ckpt_pending is not None:
+                        ckpt_mgr.save(*ckpt_pending)
+                    ckpt_pending = (t0_round + t, payload, meta)
         k = plan_mod.advance_root_key(k, T, K_root)
+        if ckpt_mgr is not None:
+            if ckpt_pending is not None:
+                ckpt_mgr.save(*ckpt_pending)
+            ckpt_mgr.wait()       # surface async-save failures before exit
 
         if state_exec is not None:
             alpha_out, w = state_exec.finalize(state)
@@ -470,6 +555,84 @@ class Session:
             alpha_out = a_carry.reshape(m) if mesh else a_carry
         return SolveResult(alpha=alpha_out, w=w, history=history,
                            next_key=k, lam=lam)
+
+    # ------------------------------------------------------------------
+    def resume(
+        self,
+        checkpoint,
+        *,
+        rounds: Optional[int] = None,
+        record_history: bool = True,
+        history_every: int = 1,
+        on_round: Optional[Callable[[dict], None]] = None,
+        lam: Optional[float] = None,
+        local_h=None,
+        _final_save: bool = True,
+    ) -> SolveResult:
+        """Restart a checkpointed solve from its newest complete snapshot,
+        bit-identically to the uninterrupted run.
+
+        ``checkpoint`` is the directory (or
+        :class:`~repro.runtime.fault.CheckpointPolicy`) a previous
+        ``run(checkpoint=...)`` wrote.  The restored payload is
+        backend-portable: a carry saved by a vmap session resumes on a
+        pallas or mesh session of the SAME problem/topology/schedule (the
+        plan fingerprint is validated) -- on mesh the flat state is
+        re-sharded onto the *current* mesh, so the device count may
+        differ from the saving process.  Runs the remaining rounds
+        (``rounds_total - step``, or ``rounds=`` to override), continues
+        checkpointing into the same directory, and returns a result whose
+        history is the full concatenated series from round 0.  ``lam`` /
+        ``local_h`` default to the values recorded at save time -- only
+        override them with the values the original run used if you want
+        bit-identity."""
+        from repro.runtime import fault as fault_mod
+        policy, mgr, _ = fault_mod.bind_policy(checkpoint, self.resolved)
+        step = mgr.latest_step()
+        if step is None:
+            raise FileNotFoundError(
+                f"no complete checkpoints under {policy.directory!r}")
+        meta = mgr.metadata(step)
+        if meta.get("plan") != self.plan.fingerprint:
+            raise ValueError(
+                "checkpoint was written under a different plan "
+                "(topology/schedule/weighting/compression changed between "
+                "save and resume); compile a matching session")
+        m, d = self.problem.m, self.problem.d
+        if int(meta["m"]) != m or int(meta["d"]) != d:
+            raise ValueError(
+                f"checkpoint is for an (m={meta['m']}, d={meta['d']}) "
+                f"problem; this session has (m={m}, d={d})")
+        template = fault_mod.payload_template(
+            self.plan, m, d, self.problem.X.dtype)
+        step, payload = mgr.restore(template, step)
+        remaining = int(meta["rounds_total"]) - step if rounds is None \
+            else int(rounds)
+        if remaining < 0:
+            raise ValueError(f"rounds must be >= 0, got {remaining}")
+        lam_run = float(meta["lam"]) if lam is None else float(lam)
+        h_run = meta.get("local_h") if local_h is None else local_h
+        prefix = [dict(e) for e in meta.get("history", [])]
+        # the warm-start anchor continues the round/time axes from the
+        # restored cursor (NOT from the last recorded entry -- decimation
+        # may have skipped the checkpoint round)
+        anchor = {"round": step, "time": float(meta["sim_time"]),
+                  "dual": float("nan"), "primal": float("nan"),
+                  "gap": float("nan")}
+        ws = SolveResult(
+            alpha=jnp.asarray(payload["alpha"]),
+            w=jnp.asarray(payload["w"]),
+            history=[anchor],
+            next_key=jnp.asarray(np.asarray(payload["key"], np.uint32)),
+            lam=lam_run)
+        out = self.run(remaining, warm_start=ws,
+                       record_history=record_history,
+                       history_every=history_every, on_round=on_round,
+                       lam=lam_run, local_h=h_run, checkpoint=policy,
+                       _ef_state=[np.asarray(r) for r in payload["res"]],
+                       _history_prefix=prefix, _final_save=_final_save)
+        out.history = prefix + out.history
+        return out
 
     # ------------------------------------------------------------------
     def straggler_policy(self, *, seed: int = 0, adaptive=None, **kw):
@@ -505,6 +668,7 @@ class Session:
         rounds: Optional[int] = None,
         record_history: bool = True,
         history_every: int = 1,
+        checkpoint=None,
     ):
         """Run a config grid through this session and return a
         :class:`~repro.api.sweep.RunSet`.
@@ -538,7 +702,8 @@ class Session:
                 "both")
         return run_sweep(self, spec, rounds=rounds,
                          record_history=record_history,
-                         history_every=history_every)
+                         history_every=history_every,
+                         checkpoint=checkpoint)
 
     # ------------------------------------------------------------------
     def _start_state(self, warm_start, key, lam_run):
@@ -624,11 +789,12 @@ def solve(
     straggler=None,
     lam: Optional[float] = None,
     local_h=None,
+    checkpoint=None,
 ) -> SolveResult:
     """One-shot convenience: ``Session.compile(...).run(...)``.  Forwards
-    the full ``run`` surface -- including ``warm_start``, ``straggler``
-    and the ``lam``/``local_h`` overrides -- so the one-shot path has
-    feature parity with a session."""
+    the full ``run`` surface -- including ``warm_start``, ``straggler``,
+    ``checkpoint`` and the ``lam``/``local_h`` overrides -- so the
+    one-shot path has feature parity with a session."""
     sess = Session.compile(problem, topology, schedule, backend=backend,
                            mesh=mesh, mesh_axes=mesh_axes,
                            mesh_use_kernel=mesh_use_kernel,
@@ -636,4 +802,5 @@ def solve(
     return sess.run(rounds, key=key, warm_start=warm_start,
                     record_history=record_history,
                     history_every=history_every, on_round=on_round,
-                    straggler=straggler, lam=lam, local_h=local_h)
+                    straggler=straggler, lam=lam, local_h=local_h,
+                    checkpoint=checkpoint)

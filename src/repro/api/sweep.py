@@ -53,7 +53,10 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Optional, Sequence, Tuple
+import json
+import os
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -128,6 +131,12 @@ class Sweep:
     * ``continuation=True`` -- warm-started regularization path over the
       lambda axis (descending lambda), per (schedule, local_h, seed)
       chain.
+    * ``resume=`` -- a fleet checkpoint directory a previous
+      ``run_sweep(..., checkpoint=...)`` of the SAME spec wrote
+      (validated against its ``fleet.json``): completed members restore
+      instantly, interrupted members continue from their newest
+      snapshot, untouched members run from scratch -- every member
+      bit-identical to its uninterrupted run, on any process / mesh.
     """
     lams: Optional[Sequence[float]] = None
     seeds: Optional[Sequence] = None
@@ -135,6 +144,7 @@ class Sweep:
     local_hs: Optional[Sequence] = None
     mode: str = "grid"
     continuation: bool = False
+    resume: Optional[Union[str, os.PathLike]] = None
 
     def __post_init__(self):
         if self.mode not in ("grid", "zip"):
@@ -323,12 +333,31 @@ def _steps_for_point(gsess, pt: SweepPoint) -> np.ndarray:
         plan_mod.steps_for_h(plan, h)
 
 
+def _fleet_every(policy, resolved) -> int:
+    """Resolve a fleet policy's ``every`` against a group's schedule."""
+    every = policy.every
+    if every == "auto":
+        every = getattr(resolved, "ckpt_every", None)
+        if every is None:
+            raise ValueError(
+                "CheckpointPolicy(every='auto') needs a schedule compiled "
+                "with DelayModel(mtbf=..., ckpt_write=...)")
+    return int(every)
+
+
 def _run_group_batched(gsess, pts: List[SweepPoint], rounds, record_history,
-                       history_every):
+                       history_every, fleet=None):
     """The fused path: all of a schedule-group's (lambda x local-H x seed)
     configs through ONE vmapped chunk program per root round -- lambda
     enters as the per-config ``lm`` scalar, the H axis as the per-config
-    step-mask operand."""
+    step-mask operand.
+
+    ``fleet`` is ``(policy, group_dir, resuming)`` when the sweep
+    checkpoints: the group snapshots its stacked ``(B, m)/(B, d)``
+    iterates at chunk boundaries (ONE file per group, not per member --
+    all members advance in lockstep in this path), and a resume restores
+    the stack, re-derives the per-member key plans from the (validated
+    identical) spec, and continues the loop mid-run bit-identically."""
     from repro.api.session import _objective
     prob, plan, resolved = gsess.problem, gsess.plan, gsess.resolved
     X, y, loss = prob.X, prob.y, prob.loss
@@ -360,6 +389,32 @@ def _run_group_batched(gsess, pts: List[SweepPoint], rounds, record_history,
     a = jnp.zeros((B, m), X.dtype)
     w = jnp.zeros((B, prob.d), X.dtype)
 
+    mgr, ck_every, t0 = None, 0, 0
+    hist_prefix: List[List[dict]] = [[] for _ in pts]
+    if fleet is not None:
+        from repro.runtime.checkpoint import CheckpointManager
+        policy, gdir, resuming = fleet
+        mgr = CheckpointManager(directory=str(gdir), keep=policy.keep,
+                                async_save=policy.async_save)
+        ck_every = _fleet_every(policy, resolved)
+        if resuming and mgr.latest_step() is not None:
+            meta = mgr.metadata()
+            if meta.get("plan") != plan.fingerprint:
+                raise ValueError(
+                    "fleet group checkpoint was written under a different "
+                    "plan; resume with the identical spec and session")
+            if int(meta["rounds_total"]) != T:
+                raise ValueError(
+                    f"fleet group was launched for {meta['rounds_total']} "
+                    f"rounds, this resume asks for {T}")
+            template = {"a": np.zeros((B, m), X.dtype),
+                        "w": np.zeros((B, prob.d), X.dtype)}
+            t0, payload = mgr.restore(template)
+            a = jnp.asarray(payload["a"])
+            w = jnp.asarray(payload["w"])
+            hist_prefix = [list(h) for h in meta.get(
+                "histories", [[] for _ in pts])]
+
     # deferred history: queue the (tiny) objective dispatches inside the
     # chunk loop and pull everything to the host ONCE at the end, so
     # recording never forces a per-round device sync.  Values come from
@@ -373,18 +428,30 @@ def _run_group_batched(gsess, pts: List[SweepPoint], rounds, record_history,
             _objective(a_batch[b], X, y, loss, float(pt.lam))
             for b, pt in enumerate(pts)]))
 
-    if record_history:
+    def hists_now() -> List[List[dict]]:
+        out = [list(h) for h in hist_prefix]
+        for t_r, vals in recorded:
+            for b, (dv, pv) in enumerate(vals):
+                record_round(out[b], t_r, t_r * dts[b], float(dv),
+                             float(pv))
+        return out
+
+    if record_history and t0 == 0:
         rec(0, a)
-    for t in range(1, T + 1):
+    for t in range(t0 + 1, T + 1):
         a, w = fnb(X, y, keys_all[:, t - 1], a, w, part, steps, lms)
         if record_history and (t % every == 0 or t == T):
             rec(t, a)
+        if mgr is not None and (t % ck_every == 0 or t == T):
+            mgr.save(t, {"a": a, "w": w},
+                     {"round": t, "rounds_total": T,
+                      "plan": plan.fingerprint,
+                      "histories": hists_now()})
     next_keys = [plan_mod.advance_root_key(k, T, K_root) for k in raw_keys]
+    if mgr is not None:
+        mgr.wait()
 
-    histories: List[List[dict]] = [[] for _ in pts]
-    for t, vals in recorded:
-        for b, (dv, pv) in enumerate(vals):
-            record_round(histories[b], t, t * dts[b], float(dv), float(pv))
+    histories = hists_now()
     results = [
         SolveResult(alpha=a[b], w=w[b], history=histories[b],
                     next_key=next_keys[b], lam=pts[b].lam)
@@ -393,8 +460,37 @@ def _run_group_batched(gsess, pts: List[SweepPoint], rounds, record_history,
     return results
 
 
+def _member_result(gsess, pt: SweepPoint, rounds, record_history,
+                   history_every, warm, fleet):
+    """One sequential member, optionally through its own per-member
+    checkpoint directory (``member_<index>`` under the fleet root): on
+    resume, a completed member restores instantly (its final round is
+    always snapshotted), an interrupted one continues mid-run, and an
+    untouched one runs from scratch -- each bit-identical to its
+    uninterrupted run."""
+    if fleet is None:
+        return gsess.run(rounds, key=pt.key(), lam=pt.lam,
+                         local_h=pt.local_h, warm_start=warm,
+                         record_history=record_history,
+                         history_every=history_every)
+    policy, root, resuming = fleet
+    mp = dataclasses.replace(
+        policy, directory=str(Path(root) / f"member_{pt.index:04d}"))
+    if resuming:
+        try:
+            return gsess.resume(mp, record_history=record_history,
+                                history_every=history_every, lam=pt.lam,
+                                local_h=pt.local_h)
+        except FileNotFoundError:
+            pass                      # never started: fall through
+    return gsess.run(rounds, key=pt.key(), lam=pt.lam, local_h=pt.local_h,
+                     warm_start=warm, record_history=record_history,
+                     history_every=history_every, checkpoint=mp)
+
+
 def _run_group_sequential(gsess, pts: List[SweepPoint], rounds,
-                          record_history, history_every, continuation):
+                          record_history, history_every, continuation,
+                          fleet=None):
     """Member-at-a-time fallback (mesh backend, continuation paths); every
     member still reuses the group's one cached lambda-free executor."""
     results = {}
@@ -414,28 +510,74 @@ def _run_group_sequential(gsess, pts: List[SweepPoint], rounds,
         for chain in chains.values():
             prev = None
             for pt in sorted(chain, key=lambda p: -p.lam):
-                res = gsess.run(
-                    rounds, key=pt.key(), lam=pt.lam, local_h=pt.local_h,
-                    warm_start=None if prev is None
-                    else (prev.alpha, w_of_alpha(prev.alpha, X, pt.lam)),
-                    record_history=record_history,
-                    history_every=history_every)
+                warm = None if prev is None \
+                    else (prev.alpha, w_of_alpha(prev.alpha, X, pt.lam))
+                res = _member_result(gsess, pt, rounds, record_history,
+                                     history_every, warm, fleet)
                 results[pt.index] = res
                 prev = res
     else:
         for pt in pts:
-            results[pt.index] = gsess.run(
-                rounds, key=pt.key(), lam=pt.lam, local_h=pt.local_h,
-                record_history=record_history, history_every=history_every)
+            results[pt.index] = _member_result(
+                gsess, pt, rounds, record_history, history_every, None,
+                fleet)
     return [results[pt.index] for pt in pts]
 
 
+def _fleet_policy(checkpoint, spec: Sweep):
+    """Normalize ``run_sweep``'s ``checkpoint=`` / ``Sweep.resume`` pair
+    into one :class:`~repro.runtime.fault.CheckpointPolicy` rooted at the
+    fleet directory (or ``None`` when the sweep doesn't checkpoint)."""
+    from repro.runtime.fault import CheckpointPolicy
+    if isinstance(checkpoint, (str, os.PathLike)):
+        checkpoint = CheckpointPolicy(directory=str(checkpoint))
+    if spec.resume is None:
+        return checkpoint
+    if checkpoint is not None and \
+            str(checkpoint.directory) != str(spec.resume):
+        raise ValueError(
+            f"Sweep(resume={str(spec.resume)!r}) and checkpoint directory "
+            f"{str(checkpoint.directory)!r} disagree; point both at the "
+            "interrupted fleet")
+    if checkpoint is None:
+        checkpoint = CheckpointPolicy(directory=str(spec.resume))
+    return checkpoint
+
+
 def run_sweep(session, spec: Sweep, *, rounds=None, record_history=True,
-              history_every=1) -> RunSet:
+              history_every=1, checkpoint=None) -> RunSet:
     """Execute ``spec`` through ``session`` (the engine behind
     ``Session.sweep``); see the module docstring for the batching
-    rules."""
+    rules.
+
+    ``checkpoint`` (a directory or
+    :class:`~repro.runtime.fault.CheckpointPolicy`) makes the fleet
+    resumable: the root holds a ``fleet.json`` spec record, fused groups
+    snapshot their stacked iterates under ``group_<i>/``, sequential
+    members checkpoint individually under ``member_<i>/``.  A later
+    ``Sweep(resume=<dir>)`` of the IDENTICAL spec (validated) continues
+    the interrupted fleet -- on any process or mesh -- with every member
+    bit-identical to its uninterrupted run."""
     points = spec.expand(float(session.problem.lam))
+    policy = _fleet_policy(checkpoint, spec)
+    resuming = spec.resume is not None
+    fleet_root = None
+    if policy is not None:
+        fleet_root = Path(str(policy.directory))
+        fleet_root.mkdir(parents=True, exist_ok=True)
+        cfg = {"points": [p.to_dict() for p in points],
+               "rounds": None if rounds is None else int(rounds)}
+        cfg_path = fleet_root / "fleet.json"
+        if resuming and cfg_path.exists():
+            old = json.loads(cfg_path.read_text())
+            if old != cfg:
+                raise ValueError(
+                    "fleet.json mismatch: this Sweep's (points, rounds) "
+                    "differ from the interrupted fleet's; resume with the "
+                    "identical spec")
+        else:
+            cfg_path.write_text(json.dumps(cfg))
+
     groups: Dict[Optional[int], List[SweepPoint]] = {}
     for pt in points:
         groups.setdefault(pt.schedule, []).append(pt)
@@ -450,11 +592,18 @@ def run_sweep(session, spec: Sweep, *, rounds=None, record_history=True,
         fuse = (gsess.backend in ("vmap", "pallas")
                 and not spec.continuation
                 and not gsess.plan.has_compression)
+        gfleet = None
+        if policy is not None:
+            gname = f"group_{sidx}" if sidx is not None else "group_base"
+            gdir = fleet_root / gname if fuse else fleet_root
+            gfleet = (policy, gdir, resuming)
         group_res = (_run_group_batched(gsess, pts, rounds, record_history,
-                                        history_every) if fuse else
+                                        history_every, fleet=gfleet)
+                     if fuse else
                      _run_group_sequential(gsess, pts, rounds,
                                            record_history, history_every,
-                                           spec.continuation))
+                                           spec.continuation,
+                                           fleet=gfleet))
         for pt, res in zip(pts, group_res):
             results[pt.index] = res
 
@@ -487,6 +636,7 @@ def sweep(
     rounds: Optional[int] = None,
     record_history: bool = True,
     history_every: int = 1,
+    checkpoint=None,
     mesh=None,
     mesh_axes=None,
     mesh_use_kernel: bool = True,
@@ -505,4 +655,4 @@ def sweep(
                       local_hs=local_hs, mode=mode,
                       continuation=continuation,
                       rounds=rounds, record_history=record_history,
-                      history_every=history_every)
+                      history_every=history_every, checkpoint=checkpoint)

@@ -186,6 +186,86 @@ class Topology:
             return dataclasses.replace(node, up_compress=str(spec))
         return Topology(tree=visit(self.tree, True))
 
+    # ---- membership editing (elastic sessions) -------------------------
+    def leaf_names(self) -> List[str]:
+        return [l.name for l in self.tree.leaves()]
+
+    def leaf_span(self, name: str) -> "tuple[int, int]":
+        """``(offset, size)`` of leaf ``name``'s block in the flat dual
+        vector (leaves in tree order) -- where membership events splice
+        alpha and the stacked (X, y) rows."""
+        off = 0
+        for l in self.tree.leaves():
+            if l.name == name:
+                return off, l.data_size
+            off += l.data_size
+        raise KeyError(f"no leaf named {name!r}")
+
+    def without_leaf(self, name: str) -> "Topology":
+        """A copy with leaf ``name`` permanently removed (the *leave* half
+        of a membership event).  Internal nodes left childless are pruned
+        with it; removing the last leaf is an error."""
+        found = [False]
+
+        def visit(node: TreeNode) -> Optional[TreeNode]:
+            if node.is_leaf:
+                if node.name == name:
+                    found[0] = True
+                    return None
+                return node
+            kids = tuple(k for k in (visit(c) for c in node.children)
+                         if k is not None)
+            if not kids:
+                return None
+            return dataclasses.replace(node, children=kids)
+
+        new_root = visit(self.tree)
+        if not found[0]:
+            raise KeyError(f"no leaf named {name!r}")
+        if new_root is None or new_root.is_leaf:
+            raise ValueError(
+                f"removing {name!r} leaves no usable tree (the root must "
+                "keep at least one leaf under an internal node)")
+        return Topology(tree=new_root)
+
+    def with_leaf(
+        self, name: str, *, parent: Optional[str] = None,
+        data_size: int, local_steps: Optional[int] = None,
+        up_delay: float = 0.0, t_lp: Optional[float] = None,
+    ) -> "Topology":
+        """A copy with a new leaf appended under internal node ``parent``
+        (default: the root) -- the *join* half of a membership event.
+        ``local_steps`` / ``t_lp`` default to the values shared by the
+        existing leaves (their max / first, respectively)."""
+        if name in self.leaf_names():
+            raise ValueError(f"leaf name {name!r} already exists")
+        leaves = self.tree.leaves()
+        if local_steps is None:
+            local_steps = max(l.rounds for l in leaves)
+        if t_lp is None:
+            t_lp = leaves[0].t_lp
+        target = parent if parent is not None else self.tree.name
+        hit = [0]
+
+        def visit(node: TreeNode) -> TreeNode:
+            if node.is_leaf:
+                return node
+            kids = tuple(visit(c) for c in node.children)
+            if node.name == target:
+                hit[0] += 1
+                kids = kids + (TreeNode(
+                    name=name, rounds=int(local_steps),
+                    data_size=int(data_size), up_delay=float(up_delay),
+                    t_lp=float(t_lp)),)
+            return dataclasses.replace(node, children=kids)
+
+        new_root = visit(self.tree)
+        if hit[0] != 1:
+            raise KeyError(
+                f"parent {target!r} matched {hit[0]} internal nodes; "
+                "need exactly one")
+        return Topology(tree=new_root)
+
     # ---- serialization -------------------------------------------------
     def to_dict(self) -> dict:
         return _node_to_dict(self.tree)

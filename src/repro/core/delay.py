@@ -485,6 +485,38 @@ def fit_C(history, *, K: int, H: float, delta: float,
 
 
 # ---------------------------------------------------------------------------
+# checkpoint-period planning: write cost vs. expected rework after a crash
+# ---------------------------------------------------------------------------
+def checkpoint_period(t_round: float, t_write: float, mtbf: float, *,
+                      max_period: Optional[int] = None) -> int:
+    """The checkpoint period (in ROOT ROUNDS) minimizing expected lost +
+    overhead time on preemptible hardware: the Young/Daly optimum
+    ``tau = sqrt(2 * t_write * MTBF)`` converted to rounds of length
+    ``t_round`` and clamped to ``[1, max_period]``.
+
+    Checkpointing every round pays ``t_write`` per round; never
+    checkpointing loses half the run (in expectation) per failure.  The
+    square-root optimum balances the amortized write cost
+    (``t_write / tau``) against the expected rework (``tau / (2 MTBF)``).
+    This is the term the eq.-(12) round-time model adds when a
+    ``DelayModel`` declares ``ckpt_write``/``mtbf``: the per-round charge
+    becomes ``t_round + t_write / period``, so ``rounds="auto"``'s time
+    budget accounts the checkpoint overhead it planned."""
+    if not t_round > 0:
+        raise ValueError(f"t_round must be > 0, got {t_round}")
+    if t_write < 0 or mtbf <= 0:
+        raise ValueError(
+            f"need t_write >= 0 and mtbf > 0, got {t_write}, {mtbf}")
+    if t_write == 0:
+        return 1                      # free writes: checkpoint every round
+    tau = math.sqrt(2.0 * t_write * mtbf)
+    period = max(1, int(round(tau / t_round)))
+    if max_period is not None:
+        period = min(period, int(max_period))
+    return period
+
+
+# ---------------------------------------------------------------------------
 # straggler delay sampling: randomized per-leaf sync-path delays
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)

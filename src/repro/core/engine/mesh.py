@@ -505,7 +505,7 @@ def get_mesh_executor(
         def finalize(state):
             return state[0].reshape(-1), state[1][0]
 
-        fn = StateExecutor(init=init, step=step, finalize=finalize)
+        fn = StateExecutor(init=init, step=step, finalize=jax.jit(finalize))
     else:
         fn = jax.jit(shard_map(
             program, mesh=mesh,

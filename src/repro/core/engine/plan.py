@@ -605,6 +605,58 @@ def plan_bytes_per_round(plan: TreePlan, d_feat: int, *,
 
 
 # ---------------------------------------------------------------------------
+# plan diffing (elastic membership: recompile bookkeeping)
+# ---------------------------------------------------------------------------
+def plan_diff(old: TreePlan, new: TreePlan) -> Dict[str, object]:
+    """Structural diff between two compiled plans, keyed by leaf NAME (the
+    stable identity across membership events -- leaf *indices* shift when
+    leaves leave/join).
+
+    Drives the elastic-session recompile story: the executor caches key on
+    ``plan.fingerprint``, so ``fingerprint_changed`` says whether a
+    membership event costs a retrace at all, and the per-leaf entries say
+    *which* plan slices moved -- ``weights_changed`` lists surviving leaves
+    whose aggregation column (alpha_scale / w_coeff / compression / size /
+    H capacity) was re-weighted, the imbalanced-data rule of
+    arXiv:2308.14783 recomputing |child| ratios from the surviving leaves.
+    """
+    old_idx = {nm: i for i, nm in enumerate(old.leaf_names)}
+    new_idx = {nm: i for i, nm in enumerate(new.leaf_names)}
+    added = [nm for nm in new.leaf_names if nm not in old_idx]
+    removed = [nm for nm in old.leaf_names if nm not in new_idx]
+    structure_changed = (old.depth != new.depth
+                         or old.n_ticks != new.n_ticks
+                         or old.n_groups != new.n_groups
+                         or old.n_children != new.n_children)
+    weights_changed = []
+    for nm in new.leaf_names:
+        if nm not in old_idx:
+            continue
+        oi, ni = old_idx[nm], new_idx[nm]
+        same = (old.depth == new.depth
+                and int(old.leaf_sizes[oi]) == int(new.leaf_sizes[ni])
+                and int(old.leaf_h[oi]) == int(new.leaf_h[ni])
+                and np.array_equal(old.alpha_scale[:, oi],
+                                   new.alpha_scale[:, ni])
+                and np.array_equal(old.w_coeff[:, oi], new.w_coeff[:, ni])
+                and np.array_equal(old.compress_kind[:, oi],
+                                   new.compress_kind[:, ni])
+                and np.array_equal(old.compress_frac[:, oi],
+                                   new.compress_frac[:, ni]))
+        if not same:
+            weights_changed.append(nm)
+    return {
+        "fingerprint_changed": old.fingerprint != new.fingerprint,
+        "leaves_added": added,
+        "leaves_removed": removed,
+        "weights_changed": weights_changed,
+        "structure_changed": structure_changed,
+        "unchanged": (not added and not removed and not weights_changed
+                      and not structure_changed),
+    }
+
+
+# ---------------------------------------------------------------------------
 # tree constructors for plan-driven workflows
 # ---------------------------------------------------------------------------
 def balanced_tree(

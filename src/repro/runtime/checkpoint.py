@@ -47,8 +47,7 @@ def _unflatten(template: PyTree, arrays: Dict[str, np.ndarray]) -> PyTree:
         if want is not None and arr.dtype != want:
             arr = arr.astype(want)
         leaves.append(arr)
-    return jax.tree_util.tree_unflatten(tdef, [l for _, l in flat].__class__(
-        leaves) if False else leaves)
+    return jax.tree_util.tree_unflatten(tdef, leaves)
 
 
 @dataclasses.dataclass
@@ -58,21 +57,34 @@ class CheckpointManager:
     async_save: bool = False
 
     def __post_init__(self):
+        if self.keep < 1:
+            raise ValueError(f"keep must be >= 1, got {self.keep}")
         self.dir = Path(self.directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
 
     # ---- save -----------------------------------------------------------
     def save(self, step: int, state: PyTree,
              metadata: Optional[Dict] = None) -> Path:
         if self.async_save:
-            self.wait()  # one in flight at a time
+            self.wait()  # one in flight at a time; re-raises a failed save
             host_state = jax.tree.map(np.asarray, state)  # snapshot now
             self._thread = threading.Thread(
-                target=self._save_sync, args=(step, host_state, metadata))
+                target=self._save_guarded,
+                args=(step, host_state, metadata))
             self._thread.start()
             return self._path(step)
         return self._save_sync(step, state, metadata)
+
+    def _save_guarded(self, step: int, state: PyTree,
+                      metadata: Optional[Dict]) -> None:
+        """Thread target: capture the exception instead of dying silently
+        on the save thread; ``wait()`` / the next ``save()`` re-raise it."""
+        try:
+            self._save_sync(step, state, metadata)
+        except BaseException as e:       # noqa: BLE001 -- surfaced later
+            self._error = e
 
     def _save_sync(self, step: int, state: PyTree,
                    metadata: Optional[Dict]) -> Path:
@@ -103,6 +115,11 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                "async checkpoint save failed; the checkpoint was NOT "
+                "written") from err
 
     # ---- restore --------------------------------------------------------
     def latest_step(self) -> Optional[int]:
@@ -119,9 +136,21 @@ class CheckpointManager:
 
     def restore(self, template: PyTree, step: Optional[int] = None
                 ) -> Tuple[int, PyTree]:
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        implicit = step is None
+        # an implicit restore retries once with a fresh listing: a
+        # concurrent save's GC may have retired the step it first picked
+        for attempt in (0, 1):
+            s = self.latest_step() if implicit else step
+            if s is None:
+                raise FileNotFoundError(f"no checkpoints in {self.dir}")
+            try:
+                return s, self._read(s, template)
+            except FileNotFoundError:
+                if not implicit or attempt:
+                    raise
+        raise AssertionError("unreachable")
+
+    def _read(self, step: int, template: PyTree) -> PyTree:
         final = self._path(step)
         meta = json.loads(final.with_suffix(".json").read_text())
         with np.load(final) as z:
@@ -131,14 +160,30 @@ class CheckpointManager:
                 if meta["dtypes"].get(k) == "bfloat16":
                     v = v.view(jax.numpy.bfloat16)
                 arrays[k] = v
-        return step, _unflatten(template, arrays)
+        return _unflatten(template, arrays)
+
+    def metadata(self, step: Optional[int] = None) -> Dict:
+        """The JSON sidecar of ``step`` (default: the newest complete
+        checkpoint) -- step/time/dtypes plus whatever ``save`` attached."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        return json.loads(self._path(step).with_suffix(".json").read_text())
 
     # ---- retention ------------------------------------------------------
     def _gc(self):
+        # ONE listing snapshot decides retention, and the newest complete
+        # step is never deleted -- a concurrent restore that just listed it
+        # can still read it (plus restore's own implicit-step retry above).
         steps = self.all_steps()
+        newest = steps[-1] if steps else None
         for s in steps[: max(len(steps) - self.keep, 0)]:
-            self._path(s).unlink(missing_ok=True)
+            if s == newest:
+                continue
+            # sidecar first: the step turns "incomplete" (invisible to
+            # all_steps/latest_step) before its payload disappears
             self._path(s).with_suffix(".json").unlink(missing_ok=True)
+            self._path(s).unlink(missing_ok=True)
 
     def _path(self, step: int) -> Path:
         return self.dir / f"step_{step:010d}.npz"

@@ -11,6 +11,13 @@ per-replica batch so the global batch size is invariant across remeshes
 The contract that makes this trivially correct: every sharding in the
 framework is a *function of (config, mesh, rules)* -- nothing is baked into
 the state itself.
+
+The tree-DCA sessions reuse the same contract: a chunk-carry checkpoint
+(see ``runtime/fault.py``) stores global host arrays, and
+``Session.resume`` rebuilds the mesh carry by ``init`` + `remesh_state`
+of the error-feedback residuals onto the *current* mesh's shardings via
+`replicated` -- so a carry saved on one device count restores onto any
+other (the elastic-remesh path of ROADMAP item 2).
 """
 from __future__ import annotations
 
@@ -34,6 +41,14 @@ def remesh_state(state: PyTree, shardings: PyTree) -> PyTree:
     """Place a host (or differently-sharded) state onto new shardings."""
     return jax.tree.map(
         lambda t, s: jax.device_put(t, s), state, shardings)
+
+
+def replicated(sharding, tree: PyTree) -> PyTree:
+    """A shardings pytree placing every leaf of ``tree`` with the same
+    ``sharding`` -- the leaf-matched structure `remesh_state` needs when a
+    whole state restores under one spec (e.g. the per-depth EF residuals
+    of a checkpointed chunk carry, all row-sharded the same way)."""
+    return jax.tree.map(lambda _: sharding, tree)
 
 
 def remesh_params(cfg, params: PyTree, new_mesh: Mesh,

@@ -1,0 +1,445 @@
+"""The elasticity subsystem: checkpointed chunk carries, permanent
+membership events, and fault injection for tree-DCA sessions.
+
+The paper's synchronous schedule assumes every leaf answers every round;
+production networks lose and gain leaves mid-solve.  Three layers turn the
+seed's unintegrated ``runtime/checkpoint.py`` / ``runtime/elastic.py``
+modules into the fault-tolerance story:
+
+* **Checkpointed carries** -- :class:`CheckpointPolicy` drives
+  ``Session.run(checkpoint=...)``.  The key fact making the snapshot small
+  and backend-portable: at every root-round boundary under full
+  participation the executor's blocked state *collapses* -- the root sync
+  refreshes every snapshot, so all per-leaf ``w`` replicas are equal and
+  every snapshot equals the live state.  A COMPLETE carry is therefore
+  just ``{alpha (m,), w (d,), per-compressed-depth error-feedback
+  residuals (n, d), root RNG key}`` plus scalar metadata; restore on ANY
+  backend is ``init(X, alpha, w)`` + residual substitution (on mesh, a
+  :func:`repro.runtime.elastic.remesh_state` onto the new mesh's
+  shardings -- the device count may differ between save and resume).
+
+* **Membership events** -- :class:`MembershipLog` records permanent
+  ``leave(name, at_round)`` / ``join(name, X, y, at_round)`` events;
+  :class:`ElasticSession` runs the solve in segments, splicing the data /
+  dual rows at each boundary, rebuilding ``w = X^T alpha / (lam m)`` (the
+  eq.-(13) invariant survives any row deletion/insertion), re-weighting
+  aggregation from the *surviving* leaves (``weighting="size"`` -- the
+  imbalanced-data rule of arXiv:2308.14783) and recompiling only what
+  changed (executors are memoized on the plan fingerprint;
+  :func:`repro.core.engine.plan.plan_diff` reports the changed slices).
+  A join warm-starts exactly like PR 3's stale-snapshot re-join: the new
+  leaf enters with a zero dual block against the current global ``w``.
+
+* **Fault injection** -- :class:`FaultModel` samples crash rounds and
+  permanent-leave processes (layered on the transient
+  :class:`~repro.core.delay.StragglerModel`);
+  :func:`run_with_faults` drives simulated kill-and-resume runs whose
+  final iterates are bit-identical to the uninterrupted solve.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, List, Optional, Sequence, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression as comp_mod
+from repro.runtime.checkpoint import CheckpointManager
+
+Array = Any
+
+PAYLOAD_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# checkpoint policy
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CheckpointPolicy:
+    """How a session checkpoints: where, how often, how many to keep.
+
+    ``every`` is the snapshot period in root rounds; ``"auto"`` uses the
+    Young/Daly period the schedule planned (``resolved.ckpt_every``, set
+    when the schedule was compiled with ``DelayModel(mtbf=...)`` --
+    ``tau = sqrt(2 t_write MTBF)`` over the modeled round time).  The
+    final round is always snapshotted so ``Session.resume`` of a
+    completed run is a no-op restore.  ``async_save`` moves the write off
+    the round loop (one in flight at a time; a failed write surfaces on
+    the next save/wait)."""
+    directory: Union[str, os.PathLike]
+    every: Union[int, str] = 1
+    keep: int = 3
+    async_save: bool = False
+
+    def __post_init__(self):
+        if isinstance(self.every, str):
+            if self.every != "auto":
+                raise ValueError(
+                    f"every must be a positive int or 'auto', "
+                    f"got {self.every!r}")
+        elif int(self.every) < 1:
+            raise ValueError(f"every must be >= 1, got {self.every}")
+
+    def manager(self) -> CheckpointManager:
+        return CheckpointManager(directory=str(self.directory),
+                                 keep=self.keep, async_save=self.async_save)
+
+
+def bind_policy(checkpoint, resolved=None):
+    """Normalize ``Session.run(checkpoint=...)``'s argument (a directory
+    path or a :class:`CheckpointPolicy`) into ``(policy, manager,
+    every_int)``, resolving ``every="auto"`` against the schedule."""
+    if isinstance(checkpoint, (str, os.PathLike)):
+        checkpoint = CheckpointPolicy(directory=checkpoint)
+    every = checkpoint.every
+    if every == "auto":
+        ck = getattr(resolved, "ckpt_every", None)
+        if ck is None:
+            raise ValueError(
+                "CheckpointPolicy(every='auto') needs a schedule compiled "
+                "with DelayModel(mtbf=..., ckpt_write=...): the Young/Daly "
+                "period lives in resolved.ckpt_every")
+        every = int(ck)
+    return checkpoint, checkpoint.manager(), int(every)
+
+
+# ---------------------------------------------------------------------------
+# the chunk-carry payload (backend-portable)
+# ---------------------------------------------------------------------------
+def n_residuals(plan) -> int:
+    """Per-compressed-depth error-feedback residual count of a plan."""
+    return sum(
+        1 for dd in range(plan.depth)
+        if (plan.compress_kind[dd] != comp_mod.KIND_NONE).any())
+
+
+def payload_template(plan, m: int, d: int, dtype):
+    """The pytree a checkpointed chunk carry restores into: flat dual,
+    primal, per-compressed-depth EF residuals, raw root RNG key."""
+    return {
+        "alpha": np.zeros((m,), dtype),
+        "w": np.zeros((d,), dtype),
+        "key": np.zeros((2,), np.uint32),
+        "res": [np.zeros((plan.n_leaves, d), np.float32)
+                for _ in range(n_residuals(plan))],
+    }
+
+
+def ef_residuals(session, state) -> List[Array]:
+    """Extract the per-compressed-depth ``(n, d)`` f32 error-feedback
+    residuals from a live StateExecutor carry (empty for uncompressed
+    plans) -- the only part of the blocked state that does NOT collapse
+    into (alpha, w) at a root-round boundary.  Returned as live device
+    arrays: the checkpoint writer gathers to host at write time (the
+    save may be deferred past the stall window on purpose)."""
+    plan = session.plan
+    if state is None or not plan.has_compression:
+        return []
+    if session.backend in ("vmap", "pallas"):
+        return list(state[5])
+    if session._mesh_sync == "reduce_scatter":
+        return list(state[3 + plan.depth:])
+    return list(state[5:])
+
+
+def with_ef_residuals(session, state, res: Sequence[np.ndarray]):
+    """Substitute restored EF residuals into a freshly ``init``-ed carry.
+    On mesh the host arrays are remeshed onto the *current* mesh's
+    shardings (:func:`repro.runtime.elastic.remesh_state`), so a carry
+    checkpointed on one device count restores onto any other."""
+    res = tuple(res)
+    if not res:
+        return state
+    plan = session.plan
+    n_res = n_residuals(plan)
+    if len(res) != n_res:
+        raise ValueError(
+            f"checkpoint carries {len(res)} EF residuals but the plan "
+            f"compresses {n_res} depths -- was the schedule's compression "
+            "changed between save and resume?")
+    if session.backend in ("vmap", "pallas"):
+        sub = tuple(jnp.asarray(np.asarray(r), jnp.float32) for r in res)
+        return state[:5] + (sub,)
+    from repro.runtime.elastic import remesh_state, replicated
+    host = tuple(np.asarray(r, np.float32) for r in res)
+    sub = remesh_state(host, replicated(session._spec_sharding, host))
+    if session._mesh_sync == "reduce_scatter":
+        return state[:3 + plan.depth] + sub
+    return state[:5] + sub
+
+
+# ---------------------------------------------------------------------------
+# membership events (permanent leave / join)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MembershipEvent:
+    kind: str                 # "leave" | "join"
+    name: str
+    at_round: int
+    X: Optional[Array] = None   # join only: the new leaf's data block
+    y: Optional[Array] = None
+    parent: Optional[str] = None  # join only: internal node (default root)
+
+    def __post_init__(self):
+        if self.kind not in ("leave", "join"):
+            raise ValueError(f"unknown event kind {self.kind!r}")
+        if self.at_round < 0:
+            raise ValueError(f"at_round must be >= 0, got {self.at_round}")
+        if self.kind == "join" and (self.X is None or self.y is None):
+            raise ValueError("a join event needs the new leaf's (X, y)")
+
+
+class MembershipLog:
+    """An ordered log of permanent membership events, applied at root-round
+    boundaries by :class:`ElasticSession` (a leave/join ``at_round=t``
+    takes effect after round ``t`` completes; ``at_round=0`` before the
+    first round)."""
+
+    def __init__(self, events: Sequence[MembershipEvent] = ()):
+        self.events: List[MembershipEvent] = list(events)
+
+    def leave(self, name: str, *, at_round: int) -> "MembershipLog":
+        self.events.append(MembershipEvent("leave", name, int(at_round)))
+        return self
+
+    def join(self, name: str, X, y, *, at_round: int,
+             parent: Optional[str] = None) -> "MembershipLog":
+        self.events.append(MembershipEvent(
+            "join", name, int(at_round), X=X, y=y, parent=parent))
+        return self
+
+    def boundaries(self) -> List[int]:
+        return sorted({e.at_round for e in self.events})
+
+    def at(self, t: int) -> List[MembershipEvent]:
+        return [e for e in self.events if e.at_round == t]
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+
+class ElasticSession:
+    """A session whose leaf set changes mid-solve.
+
+    Runs ``rounds`` root rounds against a :class:`MembershipLog`: at every
+    event boundary the data matrix / dual vector rows are spliced (a
+    leaving leaf's block is deleted outright -- its dual mass leaves with
+    it; a joining leaf enters with a zero dual block, the PR 3
+    stale-snapshot re-join warm start), the primal is rebuilt as
+    ``w = X^T alpha / (lam m)`` over the NEW data (eq. (13) -- note ``m``
+    changed, so ``w`` genuinely moves), and the session recompiles against
+    the edited topology.  Aggregation re-weights from the surviving
+    leaves: the default ``weighting="size"`` schedule is exactly the
+    data-proportional rule of arXiv:2308.14783.  Executor memoization
+    makes recompiles cheap (an unchanged plan fingerprint is a cache hit);
+    ``self.plan_diffs`` records what each event actually changed
+    (:func:`repro.core.engine.plan.plan_diff`)."""
+
+    def __init__(self, problem, topology, schedule=None, *,
+                 backend: str = "vmap"):
+        from repro.api.schedule import Schedule
+        self.schedule = schedule if schedule is not None \
+            else Schedule(weighting="size")
+        self.problem = problem
+        self.topology = topology
+        self.backend = backend
+        self.plan_diffs: List[dict] = []
+        # post-run views (the final membership's problem/topology)
+        self.current_problem = problem
+        self.current_topology = topology
+
+    def run(self, rounds: int, *, membership: Optional[MembershipLog] = None,
+            key=None, lam: Optional[float] = None,
+            record_history: bool = True, history_every: int = 1):
+        from repro.api.session import Session
+        from repro.core import dual as dual_mod
+        from repro.core.engine import plan as plan_mod
+        from repro.core.instrument import SolveResult
+
+        T = int(rounds)
+        events = list(membership.events) if membership is not None else []
+        for e in events:
+            if e.at_round >= T:
+                raise ValueError(
+                    f"event {e.kind}({e.name!r}) at round {e.at_round} "
+                    f"never takes effect in a {T}-round run")
+        boundaries = sorted({e.at_round for e in events})
+
+        prob, topo = self.problem, self.topology
+        sess = Session.compile(prob, topo, self.schedule,
+                               backend=self.backend)
+        lam_run = prob.lam if lam is None else float(lam)
+        history: List[dict] = []
+        diffs: List[dict] = []
+        prev: Optional[SolveResult] = None
+        cur = 0
+        for b in boundaries + [T]:
+            seg = b - cur
+            if seg > 0:
+                res = sess.run(
+                    seg, key=(key if prev is None else None),
+                    warm_start=prev, lam=lam_run,
+                    record_history=record_history,
+                    history_every=history_every)
+                history += res.history
+                prev = res
+                cur = b
+            if b == T:
+                break
+
+            # apply this boundary's events: splice rows by leaf NAME
+            if prev is not None:
+                alpha = np.asarray(prev.alpha)
+                next_key = prev.next_key
+            else:
+                alpha = np.asarray(jnp.zeros((prob.m,), prob.X.dtype))
+                next_key = key
+            X = np.asarray(prob.X)
+            y = np.asarray(prob.y)
+            old_plan = sess.plan
+            for e in [ev for ev in events if ev.at_round == b]:
+                if e.kind == "leave":
+                    off, sz = topo.leaf_span(e.name)
+                    topo = topo.without_leaf(e.name)
+                    keep = np.r_[0:off, off + sz:len(y)]
+                    X, y, alpha = X[keep], y[keep], alpha[keep]
+                else:
+                    Xn = np.asarray(e.X, X.dtype)
+                    yn = np.asarray(e.y, y.dtype)
+                    if Xn.ndim != 2 or Xn.shape[1] != X.shape[1]:
+                        raise ValueError(
+                            f"join {e.name!r}: X must be (k, {X.shape[1]}),"
+                            f" got {Xn.shape}")
+                    topo = topo.with_leaf(e.name, parent=e.parent,
+                                          data_size=len(yn))
+                    off, _ = topo.leaf_span(e.name)
+                    X = np.concatenate([X[:off], Xn, X[off:]])
+                    y = np.concatenate([y[:off], yn, y[off:]])
+                    alpha = np.concatenate(
+                        [alpha[:off], np.zeros(len(yn), alpha.dtype),
+                         alpha[off:]])
+            prob = dataclasses.replace(prob, X=jnp.asarray(X),
+                                       y=jnp.asarray(y))
+            sess = Session.compile(prob, topo, self.schedule,
+                                   backend=self.backend)
+            diffs.append({"round": b,
+                          **plan_mod.plan_diff(old_plan, sess.plan)})
+            # m changed -> the eq.-(13) primal must be rebuilt, and a
+            # joining leaf's zero dual block sees the warm global w
+            alpha_j = jnp.asarray(alpha, prob.X.dtype)
+            w = dual_mod.w_of_alpha(alpha_j, prob.X, lam_run)
+            anchor = history[-1] if history else \
+                {"round": 0, "time": 0.0, "dual": float("nan"),
+                 "primal": float("nan"), "gap": float("nan")}
+            prev = SolveResult(alpha=alpha_j, w=w, history=[dict(anchor)],
+                               next_key=next_key, lam=lam_run)
+
+        self.plan_diffs = diffs
+        self.current_problem = prob
+        self.current_topology = topo
+        if prev is None:    # T == 0 with no events
+            z = jnp.zeros((prob.m,), prob.X.dtype)
+            prev = SolveResult(alpha=z,
+                               w=jnp.zeros((prob.d,), prob.X.dtype),
+                               history=[], next_key=key, lam=lam_run)
+        return SolveResult(alpha=prev.alpha, w=prev.w, history=history,
+                           next_key=prev.next_key, lam=lam_run)
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Stochastic fault processes for simulated runs.
+
+    ``crash_prob`` is the per-root-round probability the coordinator dies
+    (kill-and-resume via :func:`run_with_faults`); ``leave_prob`` the
+    per-round per-leaf probability of *permanent* loss (a
+    :class:`MembershipLog` for :class:`ElasticSession`, never shrinking
+    below ``min_leaves``).  ``straggler`` optionally carries the
+    *transient*-delay layer (a :class:`~repro.core.delay.StragglerModel`
+    to hand a ``StragglerPolicy``): stragglers skip syncs and re-join,
+    faults here never come back."""
+    crash_prob: float = 0.0
+    leave_prob: float = 0.0
+    min_leaves: int = 2
+    straggler: Optional[Any] = None
+
+    def __post_init__(self):
+        for nm in ("crash_prob", "leave_prob"):
+            v = getattr(self, nm)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{nm} must be in [0, 1], got {v}")
+        if self.min_leaves < 1:
+            raise ValueError(
+                f"min_leaves must be >= 1, got {self.min_leaves}")
+
+    def sample_crashes(self, rounds: int, seed: int = 0) -> List[int]:
+        """Rounds (1..rounds-1) after which the coordinator dies."""
+        rng = np.random.default_rng(seed)
+        return [t for t in range(1, int(rounds))
+                if rng.random() < self.crash_prob]
+
+    def sample_leaves(self, leaf_names: Sequence[str], rounds: int,
+                      seed: int = 0) -> MembershipLog:
+        """A permanent-loss :class:`MembershipLog` over ``rounds``."""
+        rng = np.random.default_rng(seed)
+        log = MembershipLog()
+        alive = list(leaf_names)
+        for t in range(1, int(rounds)):
+            for nm in list(alive):
+                if len(alive) <= self.min_leaves:
+                    break
+                if rng.random() < self.leave_prob:
+                    log.leave(nm, at_round=t)
+                    alive.remove(nm)
+        return log
+
+
+def run_with_faults(session, rounds: Optional[int] = None, *, checkpoint,
+                    fault: FaultModel, key=None, seed: int = 0,
+                    lam: Optional[float] = None, local_h=None,
+                    record_history: bool = True, history_every: int = 1):
+    """Drive a simulated kill-and-resume run: at every sampled crash round
+    the in-memory state is DISCARDED (the kill) and the solve restarts
+    from the newest complete checkpoint via ``Session.resume`` -- exactly
+    the production restart path, so the returned result is bit-identical
+    to an uninterrupted checkpointed run.  Returns ``(result, report)``
+    where the report lists each crash / restart (``resumed_from`` < the
+    crash round whenever the crash out-ran the checkpoint period: that
+    work is recomputed)."""
+    T = session.resolved.rounds if rounds is None else int(rounds)
+    policy, mgr, _ = bind_policy(checkpoint, session.resolved)
+    crashes = fault.sample_crashes(T, seed)
+    kw = dict(lam=lam, local_h=local_h, record_history=record_history,
+              history_every=history_every)
+    stops = crashes + [T]
+    restarts = []
+    result = None
+    for i, stop in enumerate(stops):
+        # a leg that ends in a crash dies WITHOUT the forced final-round
+        # save: only period-aligned checkpoints survive the kill, so the
+        # resume genuinely recomputes the rounds the crash out-ran
+        is_crash = i < len(crashes)
+        if i == 0:
+            result = session.run(stop, key=key, checkpoint=policy,
+                                 _final_save=not is_crash, **kw)
+        else:
+            step = mgr.latest_step()
+            if step is None:       # crashed before the first save: scratch
+                step = 0
+                result = session.run(stop, key=key, checkpoint=policy,
+                                     _final_save=not is_crash, **kw)
+            else:
+                result = session.resume(policy, rounds=stop - step,
+                                        _final_save=not is_crash, **kw)
+            restarts.append({"crash_at": int(crashes[i - 1]),
+                             "resumed_from": int(step),
+                             "ran_to": int(stop)})
+        if is_crash:
+            result = None                          # the simulated kill
+    return result, {"rounds": T, "crashes": [int(c) for c in crashes],
+                    "restarts": restarts}

@@ -1,0 +1,403 @@
+"""Elastic fault-tolerant sessions (ROADMAP item 2): checkpointed chunk
+carries, kill-and-resume bit-identity on every backend (including a
+subprocess remesh onto a different device count), permanent leaf
+leave/join with size re-weighting, fault-injected fleets."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (CheckpointPolicy, DelayModel, ElasticSession,
+                       FaultModel, MembershipLog, Problem, Schedule, Session,
+                       Sweep, Topology, run_with_faults)
+from repro.core import dual as dual_mod
+from repro.core.delay import checkpoint_period
+from repro.data.synthetic import gaussian_regression
+from repro.runtime.checkpoint import CheckpointManager
+
+LAM = 0.1
+
+
+@pytest.fixture(scope="module")
+def data():
+    return gaussian_regression(m=64, d=8)
+
+
+def _problem(data, lam=LAM):
+    X, y = data
+    return Problem(X, y, loss="squared", lam=lam)
+
+
+def _star(rounds=6):
+    return Topology.star(4, 16, rounds=rounds, local_steps=8)
+
+
+def _assert_same(res, ref):
+    np.testing.assert_array_equal(np.asarray(res.alpha),
+                                  np.asarray(ref.alpha))
+    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(ref.w))
+    np.testing.assert_array_equal(np.asarray(res.next_key),
+                                  np.asarray(ref.next_key))
+    assert res.history == ref.history
+
+
+# ---------------------------------------------------------------------------
+# crash-mid-solve bit-identity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["vmap", "pallas"])
+def test_resume_bit_identity(data, backend, tmp_path):
+    """Kill after round 3 of 6; the resumed run's iterates, RNG chain and
+    concatenated history are bit-identical to the uninterrupted solve."""
+    sess = Session.compile(_problem(data), _star(), Schedule(),
+                           backend=backend)
+    key = jax.random.PRNGKey(7)
+    ref = sess.run(6, key=key)
+    sess.run(3, key=key, checkpoint=CheckpointPolicy(directory=tmp_path,
+                                                     every=1))
+    res = sess.resume(tmp_path, rounds=3)
+    _assert_same(res, ref)
+
+
+def test_resume_bit_identity_mesh(data, tmp_path):
+    n = len(jax.devices())
+    topo = Topology.star(n, 64 // n, rounds=6, local_steps=8)
+    sess = Session.compile(_problem(data), topo, Schedule(), backend="mesh")
+    key = jax.random.PRNGKey(7)
+    ref = sess.run(6, key=key)
+    sess.run(3, key=key, checkpoint=str(tmp_path))   # plain-dir shorthand
+    res = sess.resume(tmp_path, rounds=3)
+    _assert_same(res, ref)
+
+
+def test_resume_of_completed_run_restores(data, tmp_path):
+    """rounds_total is reached: resume is a pure restore (0 extra rounds),
+    returning the final iterates and the FULL recorded history."""
+    sess = Session.compile(_problem(data), _star(), Schedule(),
+                           backend="vmap")
+    key = jax.random.PRNGKey(3)
+    ref = sess.run(6, key=key, checkpoint=CheckpointPolicy(
+        directory=tmp_path, every=2))
+    res = sess.resume(tmp_path)
+    np.testing.assert_array_equal(np.asarray(res.alpha),
+                                  np.asarray(ref.alpha))
+    np.testing.assert_array_equal(np.asarray(res.next_key),
+                                  np.asarray(ref.next_key))
+    assert [h["round"] for h in res.history] == \
+        [h["round"] for h in ref.history]
+
+
+@pytest.mark.parametrize("backend", ["vmap", "mesh"])
+def test_resume_compressed_plan_carries_residuals(data, backend, tmp_path):
+    """Compressed plans thread error-feedback residuals through the carry;
+    the checkpoint payload must include them for bit-identical resume."""
+    sched = Schedule(compression="topk_0.2")
+    n = len(jax.devices())
+    topo = _star() if backend == "vmap" else \
+        Topology.star(n, 64 // n, rounds=6, local_steps=8)
+    sess = Session.compile(_problem(data), topo, sched, backend=backend)
+    key = jax.random.PRNGKey(11)
+    ref = sess.run(6, key=key)
+    sess.run(3, key=key, checkpoint=CheckpointPolicy(directory=tmp_path,
+                                                     every=1))
+    # the payload genuinely carries (n, d) residuals
+    with np.load(tmp_path / "step_0000000003.npz") as z:
+        res_keys = [k for k in z.files if k.startswith("res")]
+        assert res_keys, list(z.files)
+    res = sess.resume(tmp_path, rounds=3)
+    _assert_same(res, ref)
+
+
+def test_resume_cross_backend(data, tmp_path):
+    """A carry checkpointed by the host backend restores on the device
+    backend (and vice versa): the payload is backend-portable."""
+    prob, topo = _problem(data), _star()
+    n = len(jax.devices())
+    topo_m = Topology.star(n, 64 // n, rounds=6, local_steps=8)
+    if n == 4:
+        topo = topo_m   # identical trees -> identical plan fingerprints
+    sess_v = Session.compile(prob, topo_m, Schedule(), backend="vmap")
+    sess_m = Session.compile(prob, topo_m, Schedule(), backend="mesh")
+    key = jax.random.PRNGKey(5)
+    ref = sess_v.run(6, key=key)
+    sess_v.run(3, key=key, checkpoint=CheckpointPolicy(directory=tmp_path,
+                                                       every=1))
+    res = sess_m.resume(tmp_path, rounds=3)
+    np.testing.assert_array_equal(np.asarray(res.alpha),
+                                  np.asarray(ref.alpha))
+    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(ref.w))
+
+
+_REMESH_CHILD = """
+import numpy as np, jax
+from repro.api import Problem, Topology, Schedule, Session
+z = np.load({data!r})
+prob = Problem(z["X"], z["y"], loss="squared", lam={lam})
+topo = Topology.star(2, 32, rounds=6, local_steps=8)
+assert len(jax.devices()) == 2, jax.devices()
+sess = Session.compile(prob, topo, Schedule(), backend="mesh")
+res = sess.resume({ckpt!r}, rounds=3)
+np.savez({out!r}, alpha=np.asarray(res.alpha), w=np.asarray(res.w),
+         key=np.asarray(res.next_key))
+"""
+
+
+def test_resume_remesh_subprocess_different_device_count(data, tmp_path):
+    """The elastic-remesh contract end to end: a carry checkpointed by a
+    single-process vmap session is resumed by a SEPARATE process running a
+    2-device mesh -- a device count that never existed at save time."""
+    X, y = data
+    topo = Topology.star(2, 32, rounds=6, local_steps=8)
+    sess = Session.compile(_problem(data), topo, Schedule(), backend="vmap")
+    key = jax.random.PRNGKey(9)
+    ref = sess.run(6, key=key)
+    ckpt = tmp_path / "ckpt"
+    sess.run(3, key=key, checkpoint=CheckpointPolicy(directory=ckpt,
+                                                     every=1))
+    datap = tmp_path / "data.npz"
+    np.savez(datap, X=np.asarray(X), y=np.asarray(y))
+    out = tmp_path / "out.npz"
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               JAX_PLATFORMS="cpu")
+    script = _REMESH_CHILD.format(data=str(datap), lam=LAM,
+                                  ckpt=str(ckpt), out=str(out))
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    with np.load(out) as z:
+        np.testing.assert_array_equal(z["alpha"], np.asarray(ref.alpha))
+        np.testing.assert_array_equal(z["w"], np.asarray(ref.w))
+        np.testing.assert_array_equal(z["key"], np.asarray(ref.next_key))
+
+
+def test_resume_refuses_changed_plan(data, tmp_path):
+    sess = Session.compile(_problem(data), _star(), Schedule(),
+                           backend="vmap")
+    sess.run(2, key=jax.random.PRNGKey(0), checkpoint=str(tmp_path))
+    other = Session.compile(
+        _problem(data), Topology.star(4, 16, rounds=6, local_steps=9),
+        Schedule(), backend="vmap")
+    with pytest.raises(ValueError, match="fingerprint|plan"):
+        other.resume(tmp_path)
+
+
+def test_checkpoint_refuses_straggler(data, tmp_path):
+    from repro.runtime.straggler import StragglerPolicy
+    sess = Session.compile(_problem(data), _star(), Schedule(),
+                           backend="vmap")
+    with pytest.raises(ValueError, match="straggler"):
+        sess.run(2, key=jax.random.PRNGKey(0), straggler=StragglerPolicy(),
+                 checkpoint=str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# the Young/Daly checkpoint period (eq.-(12) round-time model extension)
+# ---------------------------------------------------------------------------
+def test_checkpoint_period_young_daly():
+    # tau = sqrt(2 t_write MTBF) in wall time, floored to >= 1 round
+    assert checkpoint_period(1.0, 0.5, 100.0) == 10
+    assert checkpoint_period(1.0, 0.0, 100.0) == 1      # free writes
+    assert checkpoint_period(50.0, 0.5, 100.0) == 1     # slow rounds clamp
+    assert checkpoint_period(1.0, 0.5, 100.0, max_period=4) == 4
+    # monotone in MTBF: rarer faults -> sparser checkpoints
+    ps = [checkpoint_period(1.0, 0.5, mtbf) for mtbf in (10, 100, 1000)]
+    assert ps == sorted(ps)
+
+
+def test_schedule_plans_ckpt_every(data):
+    """DelayModel(mtbf=, ckpt_write=) makes the schedule fault-aware: the
+    resolved plan carries the Young/Daly period, rounds='auto' charges the
+    amortized write cost, and CheckpointPolicy(every='auto') consumes it."""
+    topo = Topology.star(4, 16, rounds=6, local_steps=8, t_lp=1e-4)
+    plain = Schedule(rounds="auto",
+                     delay=DelayModel(t_total=0.2, C=1.0)).resolve(topo)
+    faulty = Schedule(rounds="auto",
+                      delay=DelayModel(t_total=0.2, C=1.0, mtbf=1.0,
+                                       ckpt_write=0.01)).resolve(topo)
+    assert plain.ckpt_every is None
+    assert faulty.ckpt_every is not None and faulty.ckpt_every >= 1
+    # the write cost eats budget: never MORE rounds than the fault-free plan
+    assert faulty.rounds <= plain.rounds
+    # fixed-rounds schedules get the period too
+    fixed = Schedule(delay=DelayModel(t_total=0.2, C=1.0, mtbf=1.0,
+                                      ckpt_write=0.01)).resolve(topo)
+    assert fixed.ckpt_every is not None
+
+
+def test_every_auto_needs_fault_aware_schedule(data, tmp_path):
+    sess = Session.compile(_problem(data), _star(), Schedule(),
+                           backend="vmap")
+    with pytest.raises(ValueError, match="auto"):
+        sess.run(2, key=jax.random.PRNGKey(0),
+                 checkpoint=CheckpointPolicy(directory=tmp_path,
+                                             every="auto"))
+
+
+# ---------------------------------------------------------------------------
+# membership: permanent leave / join
+# ---------------------------------------------------------------------------
+def test_elastic_leave_join_converges(data):
+    """Leaves leave and join mid-solve; each boundary splices the dual and
+    rebuilds w = X^T alpha / (lam m); the solve keeps converging on the
+    CURRENT problem and the final iterates satisfy eq. (13)."""
+    X, y = data
+    prob = _problem(data)
+    rng = np.random.default_rng(0)
+    Xn = rng.normal(size=(12, X.shape[1])).astype(np.float32)
+    yn = rng.normal(size=(12,)).astype(np.float32)
+    log = (MembershipLog()
+           .leave("W1", at_round=2)
+           .join("W9", Xn, yn, at_round=4))
+    es = ElasticSession(prob, _star(), backend="vmap")
+    res = es.run(12, membership=log, key=jax.random.PRNGKey(1))
+
+    assert es.current_topology.leaf_names() == ["W0", "W2", "W3", "W9"]
+    assert es.current_problem.m == 64 - 16 + 12
+    assert len(res.alpha) == es.current_problem.m
+    # the returned primal is the eq.-(13) image of the returned dual
+    w_ref = dual_mod.w_of_alpha(res.alpha, es.current_problem.X, LAM)
+    np.testing.assert_allclose(np.asarray(res.w), np.asarray(w_ref),
+                               rtol=1e-5, atol=1e-6)
+    # history spans all 12 rounds and the tail converges on the final
+    # membership's problem
+    assert [h["round"] for h in res.history][-1] == 12
+    gaps = [h["gap"] for h in res.history]
+    assert gaps[-1] < gaps[-6]
+
+    # plan_diff reports exactly what each event changed
+    assert [d["round"] for d in es.plan_diffs] == [2, 4]
+    assert es.plan_diffs[0]["leaves_removed"] == ["W1"]
+    assert es.plan_diffs[1]["leaves_added"] == ["W9"]
+    assert all(d["fingerprint_changed"] for d in es.plan_diffs)
+
+
+def test_elastic_reweights_by_size(data):
+    """The default schedule re-weights aggregation data-proportionally
+    (arXiv:2308.14783): after an unbalanced leave, the surviving leaves'
+    plan weights track |data block| / m."""
+    es = ElasticSession(_problem(data), _star(), backend="vmap")
+    log = MembershipLog().leave("W0", at_round=1)
+    es.run(3, membership=log, key=jax.random.PRNGKey(0))
+    assert es.schedule.weighting == "size"
+    assert "W0" not in es.current_topology.leaf_names()
+    assert es.plan_diffs[0]["weights_changed"]  # survivors re-weighted
+    sizes = [es.current_topology.leaf_span(nm)[1]
+             for nm in es.current_topology.leaf_names()]
+    assert sum(sizes) == es.current_problem.m
+
+
+def test_elastic_event_past_horizon_refused(data):
+    es = ElasticSession(_problem(data), _star(), backend="vmap")
+    log = MembershipLog().leave("W1", at_round=5)
+    with pytest.raises(ValueError, match="never takes effect"):
+        es.run(4, membership=log, key=jax.random.PRNGKey(0))
+
+
+def test_topology_leaf_editing():
+    topo = Topology.star(3, 8, rounds=4, local_steps=4)
+    assert topo.leaf_names() == ["W0", "W1", "W2"]
+    assert topo.leaf_span("W1") == (8, 8)
+    smaller = topo.without_leaf("W1")
+    assert smaller.leaf_names() == ["W0", "W2"]
+    assert smaller.leaf_span("W2") == (8, 8)
+    bigger = smaller.with_leaf("W7", data_size=5)
+    assert bigger.leaf_names() == ["W0", "W2", "W7"]
+    assert bigger.leaf_span("W7") == (16, 5)
+    with pytest.raises(KeyError):
+        topo.without_leaf("nope")
+    with pytest.raises(ValueError):
+        bigger.with_leaf("W7", data_size=3)   # duplicate name
+
+
+# ---------------------------------------------------------------------------
+# fault injection + fleets
+# ---------------------------------------------------------------------------
+def test_fault_model_sampling():
+    fm = FaultModel(crash_prob=0.5, leave_prob=0.5, min_leaves=2)
+    c1 = fm.sample_crashes(20, seed=4)
+    assert c1 == fm.sample_crashes(20, seed=4)       # deterministic
+    assert c1 and all(1 <= t < 20 for t in c1)
+    log = fm.sample_leaves(["a", "b", "c", "d"], 20, seed=4)
+    left = {e.name for e in log.events}
+    assert len(left) <= 2                             # min_leaves respected
+    with pytest.raises(ValueError):
+        FaultModel(crash_prob=1.5)
+
+
+def test_run_with_faults_bit_identity(data, tmp_path):
+    """Kill-and-resume through the production restart path: crashes strike
+    mid-period (every=2) so real work is lost and recomputed, yet the
+    final iterates/history equal the uninterrupted run's."""
+    sess = Session.compile(_problem(data), _star(), Schedule(),
+                           backend="vmap")
+    key = jax.random.PRNGKey(2)
+    ref = sess.run(6, key=key)
+    res, report = run_with_faults(
+        sess, 6, checkpoint=CheckpointPolicy(directory=tmp_path, every=2),
+        fault=FaultModel(crash_prob=0.5), key=key, seed=3)
+    assert report["crashes"], report
+    _assert_same(res, ref)
+    for r in report["restarts"]:
+        assert r["resumed_from"] <= r["crash_at"] < r["ran_to"] <= 6
+
+
+def test_sweep_fleet_resume(data, tmp_path):
+    """An interrupted checkpointed fleet continues under Sweep(resume=):
+    both the fused-batched and the sequential-member layout restart
+    bit-identically (crash simulated by dropping post-round-4 snapshots)."""
+    prob, topo = _problem(data), _star()
+    lams = [0.05, 0.1, 0.4]
+
+    def crash_after(root, round_):
+        for f in Path(root).rglob("step_*.*"):
+            if int(f.stem.split("_")[1]) > round_:
+                f.unlink()
+
+    # fused/batched groups -> group_base/ stacked snapshots
+    sess = Session.compile(prob, topo, Schedule(), backend="vmap")
+    ref = sess.sweep(Sweep(lams=lams, seeds=[0, 1]), rounds=6)
+    d1 = tmp_path / "batched"
+    sess.sweep(Sweep(lams=lams, seeds=[0, 1]), rounds=6,
+               checkpoint=CheckpointPolicy(directory=d1, every=1))
+    assert (d1 / "fleet.json").exists()
+    assert (d1 / "group_base").is_dir()
+    crash_after(d1, 4)
+    rs = sess.sweep(Sweep(lams=lams, seeds=[0, 1], resume=d1), rounds=6)
+    np.testing.assert_array_equal(np.asarray(rs.alphas),
+                                  np.asarray(ref.alphas))
+    np.testing.assert_array_equal(np.asarray(rs.ws), np.asarray(ref.ws))
+
+    # compressed plans run members sequentially -> member_*/ checkpoints
+    sess_c = Session.compile(prob, topo, Schedule(compression="topk_0.2"),
+                             backend="vmap")
+    ref_c = sess_c.sweep(Sweep(lams=lams), rounds=6)
+    d2 = tmp_path / "sequential"
+    sess_c.sweep(Sweep(lams=lams), rounds=6,
+                 checkpoint=CheckpointPolicy(directory=d2, every=1))
+    assert sorted(p.name for p in d2.glob("member_*")) == \
+        ["member_0000", "member_0001", "member_0002"]
+    crash_after(d2, 4)
+    rs_c = sess_c.sweep(Sweep(lams=lams, resume=d2), rounds=6)
+    np.testing.assert_array_equal(np.asarray(rs_c.alphas),
+                                  np.asarray(ref_c.alphas))
+    np.testing.assert_array_equal(np.asarray(rs_c.ws),
+                                  np.asarray(ref_c.ws))
+
+
+def test_sweep_fleet_resume_refuses_changed_spec(data, tmp_path):
+    sess = Session.compile(_problem(data), _star(), Schedule(),
+                           backend="vmap")
+    sess.sweep(Sweep(lams=[0.1, 0.2]), rounds=4,
+               checkpoint=CheckpointPolicy(directory=tmp_path, every=2))
+    with pytest.raises(ValueError, match="fleet.json mismatch"):
+        sess.sweep(Sweep(lams=[0.3], resume=tmp_path), rounds=4)
+    with pytest.raises(ValueError, match="disagree"):
+        sess.sweep(Sweep(lams=[0.1, 0.2], resume=tmp_path), rounds=4,
+                   checkpoint=CheckpointPolicy(directory=tmp_path / "x"))

@@ -50,12 +50,67 @@ def test_checkpoint_ignores_partial_writes(tmp_path):
     assert step == 1
 
 
+def test_checkpoint_mixed_dtype_nested_roundtrip(tmp_path):
+    """Exact dtype + structure preservation through the npz flatten:
+    nested dict/list/tuple with bf16 (no numpy dtype: viewed as uint16),
+    f32, f64, int32 and uint32 leaves."""
+    s = {"k": jnp.arange(2, dtype=jnp.uint32),
+         "nest": {"a": [jnp.full((3,), 1.5, jnp.bfloat16),
+                        jnp.full((2, 2), -2.0, jnp.float32)],
+                  "b": (jnp.int32(7), np.float64(0.25))},
+         "c": np.arange(4, dtype=np.float64)}
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, s)
+    step, r = mgr.restore(jax.tree.map(np.zeros_like, s))
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(r), jax.tree.leaves(s)):
+        assert a.dtype == b.dtype, (a.dtype, b.dtype)
+        np.testing.assert_array_equal(np.asarray(a, np.float64),
+                                      np.asarray(b, np.float64))
+
+
 def test_checkpoint_async_save(tmp_path):
     mgr = CheckpointManager(str(tmp_path), keep=2, async_save=True)
     mgr.save(1, _state(1.0))
     mgr.save(2, _state(2.0))
     mgr.wait()
     assert mgr.latest_step() == 2
+
+
+def test_checkpoint_async_save_failure_surfaces(tmp_path, monkeypatch):
+    """A failed background write must NOT die silently on the save thread:
+    wait() (or the next save) re-raises it, naming the failed step."""
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+
+    def boom(*a, **kw):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(np, "savez", boom)
+    mgr.save(1, _state(1.0))
+    with pytest.raises(RuntimeError, match="async checkpoint save failed"):
+        mgr.wait()
+    assert mgr.latest_step() is None          # nothing published
+    monkeypatch.undo()
+    mgr.save(2, _state(2.0))                  # the manager recovers
+    mgr.wait()
+    assert mgr.latest_step() == 2
+
+
+def test_checkpoint_keep_one_always_restorable(tmp_path):
+    """keep=1 retention: after every save the newest complete checkpoint
+    is restorable (GC never deletes the step it just published), and
+    retired steps are fully gone -- payload AND sidecar."""
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    for s in (1, 2, 3, 4, 5):
+        mgr.save(s, _state(float(s)))
+        assert mgr.all_steps() == [s]
+        step, r = mgr.restore(_state())
+        assert step == s and float(r["params"]["w"][0, 0]) == float(s)
+    assert len(list(tmp_path.glob("step_*"))) == 2   # one npz + one json
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(_state(), step=1)                # retired explicitly
+    with pytest.raises(ValueError):
+        CheckpointManager(str(tmp_path), keep=0)
 
 
 def test_resume_or_init(tmp_path):
