@@ -23,7 +23,11 @@ at equal final duality gap) plus the replicated-vs-sharded
 and an ELASTIC scenario: chunk-carry checkpointing overhead at snapshot
 periods 1 and 5 (acceptance target: <= 10% wall overhead at every=5) plus
 crash-at-50% recovery, resume-from-snapshot vs scratch restart compared
-on simulated time-to-1e-3-gap from solve start.
+on simulated time-to-1e-3-gap from solve start, and a TREESYNC scenario:
+the LM workload on the shared schedule engine -- the Session-driven
+train program vs the legacy ``make_treesync_step`` loop (bit-identical;
+>= 1x wall-clock parity gate) and eq.-(12) adaptive periods vs a fixed
+every-step barrier on simulated time-to-loss.
 Everything is recorded in ``BENCH_engine.json`` so the perf trajectory is
 tracked across commits.
 
@@ -412,6 +416,128 @@ def elastic_scenario(verbose: bool = True) -> Dict[str, float]:
     return out
 
 
+def treesync_scenario(verbose: bool = True) -> Dict[str, float]:
+    """The LM workload on the shared schedule engine, two comparisons.
+
+    PARITY: the Session-driven LM train program (``Problem.lm`` +
+    ``Session.compile(backend="mesh")``) vs the legacy
+    ``make_treesync_step`` loop, steady-state wall-clock at the same
+    fixed periods/seed.  The two paths jit the SAME math (the refactor
+    only moved the periods from trace constants to a runtime operand),
+    so the gate is parity: >= 1x within a 10% host-dispatch noise floor.
+
+    ADAPTIVE: eq.-(12) replanned periods vs a fixed every-step barrier
+    under the same simulated delay model, compared on simulated
+    time-to-loss.  The fixed schedule pays the sync delay every
+    optimizer step; the adaptive one feeds the replanned H into the
+    runtime periods operand (zero retraces) and amortizes the barrier."""
+    import dataclasses
+    import warnings
+
+    from repro.configs.base import ModelConfig
+    from repro.core import treesync as tsy
+    from repro.data.lm import lm_batch
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim import make_sgd
+    from repro.runtime.straggler import AdaptiveSchedule, StragglerPolicy
+
+    cfg = dataclasses.replace(
+        ModelConfig(name="tiny", family="dense", num_layers=2, d_model=32,
+                    num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+                    vocab_size=64, q_chunk_size=16, logits_chunk=16,
+                    remat=False),
+        activation_dtype="float32")
+    mesh = make_host_mesh()
+    opt = make_sgd(lr=0.05, momentum=0.0)
+    prob = Problem.lm(cfg, opt, batch=8, seq=32, seed=0)
+    steps = 24
+    key = jax.random.PRNGKey(0)
+
+    topo = Topology.from_mesh(mesh, sync_axes=("data",), periods=(4,))
+    sess = Session.compile(prob, topo, backend="mesh", mesh=mesh)
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        ts = tsy.TreeSyncConfig(sync_axes=("data",), periods=(4,))
+        n = tsy.replica_count(ts, mesh)
+        step = jax.jit(tsy.make_treesync_step(cfg, opt, ts, mesh))
+
+    def legacy():
+        # a full run, like the session's: init the replica-stacked state
+        # and generate each step's batch in-loop (both paths pay the
+        # same host-side init + data stream)
+        st = tsy.init_state(cfg, opt, key, mesh, ts)
+        for i in range(steps):
+            st, _ = step(st, tsy.split_batch(lm_batch(cfg, 8, 32, i,
+                                                      seed=0), n))
+        return st
+
+    def session():
+        return sess.run(steps=steps, key=key, record_history=False)
+
+    # warm both jits, and confirm the refactor is lossless while at it
+    st_leg, out_sess = legacy(), session()
+    for a, b in zip(jax.tree.leaves(st_leg.params),
+                    jax.tree.leaves(out_sess.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    t_legacy = t_session = float("inf")
+    for _ in range(5):                           # interleaved best-of
+        t0 = time.perf_counter()
+        jax.block_until_ready(legacy().params)
+        t_legacy = min(t_legacy, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(session().state.params)
+        t_session = min(t_session, time.perf_counter() - t0)
+    parity = t_legacy / t_session
+
+    # adaptive periods vs a fixed every-step barrier, simulated clocks:
+    # the fixed schedule pays the 20ms link every optimizer step, the
+    # adaptive one replans H from the measured delays and amortizes it
+    loss_target = 4.2           # crossed ~step 30 of the seeded stream
+    lm_steps = 160
+    topo_d = Topology.from_mesh(mesh, sync_axes=("data",), periods=(1,),
+                                level_delays=[0.02], t_lp=1e-4)
+    sess_d = Session.compile(prob, topo_d, backend="mesh", mesh=mesh)
+    model = StragglerModel(slow_prob=0.15, slow_factor=20.0, jitter=0.002)
+    r_fixed = sess_d.run(steps=lm_steps, key=key, straggler=StragglerPolicy(
+        model=model, max_consecutive=0, seed=0))
+    r_adapt = sess_d.run(steps=lm_steps, key=key, straggler=StragglerPolicy(
+        model=model, max_consecutive=0, seed=0,
+        adaptive=AdaptiveSchedule(C=1.0, delta=0.05, t_total=4.0,
+                                  h_max=16)))
+    hit_f = [h["time"] for h in r_fixed.history if h["loss"] <= loss_target]
+    hit_a = [h["time"] for h in r_adapt.history if h["loss"] <= loss_target]
+    assert hit_f and hit_a, (
+        f"loss target {loss_target} not reached "
+        f"(fixed {r_fixed.final_loss:.3f}, adaptive {r_adapt.final_loss:.3f})")
+    t_fixed, t_adapt = hit_f[0], hit_a[0]
+
+    out = {
+        "steps": steps,
+        "t_legacy_s": t_legacy,
+        "t_session_s": t_session,
+        "parity": parity,
+        "loss_target": loss_target,
+        "t_fixed_to_loss_s": t_fixed,
+        "t_adaptive_to_loss_s": t_adapt,
+        "time_saved_ratio": t_fixed / t_adapt,
+        "adaptive_final_h": r_adapt.history[-1].get("h", 1),
+    }
+    if verbose:
+        print(f"bench_engine treesync scenario: tiny LM x {steps} steps, "
+              f"{sess.n_replicas} replica(s), periods=(4,)")
+        print(f"  legacy step loop : {t_legacy * 1e3:9.2f} ms")
+        print(f"  Session program  : {t_session * 1e3:9.2f} ms  "
+              f"({parity:.2f}x, bit-identical)")
+        print(f"  fixed periods=(1,) time-to-{loss_target:.3f}-loss : "
+              f"{t_fixed:9.3f} s (simulated)")
+        print(f"  eq.-(12) adaptive time-to-{loss_target:.3f}-loss : "
+              f"{t_adapt:9.3f} s  ({out['time_saved_ratio']:.1f}x faster, "
+              f"final H={out['adaptive_final_h']})")
+    return out
+
+
 def run(verbose: bool = True) -> Dict[str, float]:
     # depth-3, 8-leaf balanced tree: 10 root x 2 x 2 rounds, H=128
     topo = Topology.balanced([2, 2, 2], m_leaf=32, local_steps=128,
@@ -456,6 +582,7 @@ def run(verbose: bool = True) -> Dict[str, float]:
     results["adaptive_h"] = adaptive_h_scenario(verbose=verbose)
     results["compression"] = compression_scenario(verbose=verbose)
     results["elastic"] = elastic_scenario(verbose=verbose)
+    results["treesync"] = treesync_scenario(verbose=verbose)
     if verbose:
         print("bench_engine: depth-3, 8-leaf tree "
               f"(m={m}, 40 ticks x H=128), host path")
@@ -489,6 +616,15 @@ def run(verbose: bool = True) -> Dict[str, float]:
         f"every=5 checkpointing costs "
         f"{results['elastic']['overhead_every5'] * 100:.1f}% wall overhead "
         "(<= 10% target)")
+    # the two LM paths jit identical programs, so this is a parity gate
+    # (>= 1x) with a 10% floor for host dispatch noise
+    assert results["treesync"]["parity"] >= 0.9, (
+        f"Session-driven LM program runs {results['treesync']['parity']:.2f}x "
+        "the legacy treesync loop (>= 1x parity target)")
+    assert results["treesync"]["time_saved_ratio"] >= 1.0, (
+        f"adaptive periods reach the loss target only "
+        f"{results['treesync']['time_saved_ratio']:.2f}x faster than the "
+        "fixed barrier (>= 1x target)")
     return results
 
 

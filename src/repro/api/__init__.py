@@ -28,11 +28,20 @@ program and vmaps into a single dispatch per round) and return a
     rs = sweep(prob, topo, lams=np.logspace(-3, 0, 8), seeds=[0, 1])
     rs.best().w
 
+LM training is the second workload on the same engine:
+``Problem.lm(cfg, optimizer, batch=8, seq=128)`` compiled with
+``backend="mesh"`` returns an :class:`LMSession` driven by the SAME
+Schedule/planner/straggler/checkpoint machinery (the plan IR is
+method-agnostic; see ``repro.core.engine.method``), and ``Sweep(lrs=,
+seeds=, local_hs=)`` grids fuse into one vmapped dispatch.
+
 The legacy entry points (``tree_dual_solve``, ``cocoa_star_solve``,
-``mesh_tree_dual_solve``, ``engine.solve``) are thin shims over this
-surface; see ``docs/api.md`` for the migration table.
+``mesh_tree_dual_solve``, ``engine.solve``, ``make_treesync_step``) are
+thin shims over this surface; see ``docs/api.md`` for the migration
+table.
 """
-from repro.api.problem import Problem                       # noqa: F401
+from repro.api.lm import LMResult, LMRunSet, LMSession      # noqa: F401
+from repro.api.problem import LMProblem, Problem            # noqa: F401
 from repro.api.schedule import DelayModel, Schedule         # noqa: F401
 from repro.api.session import Session, solve                # noqa: F401
 from repro.api.sweep import RunSet, Sweep, sweep            # noqa: F401
@@ -42,7 +51,8 @@ from repro.runtime.fault import (                           # noqa: F401
     CheckpointPolicy, ElasticSession, FaultModel, MembershipLog,
     run_with_faults)
 
-__all__ = ["Problem", "Topology", "Schedule", "DelayModel", "Session",
+__all__ = ["Problem", "LMProblem", "Topology", "Schedule", "DelayModel",
+           "Session", "LMSession", "LMResult", "LMRunSet",
            "SolveResult", "Sweep", "RunSet", "solve", "sweep",
            "CheckpointPolicy", "ElasticSession", "FaultModel",
            "MembershipLog", "run_with_faults"]

@@ -69,3 +69,44 @@ class Problem:
     @classmethod
     def logistic(cls, X, y, *, lam: float = 0.1) -> "Problem":
         return cls(X, y, loss="logistic", lam=lam)
+
+    # ---- the second workload -------------------------------------------
+    @staticmethod
+    def lm(cfg, optimizer, *, batch: int, seq: int, seed: int = 0,
+           average_opt_state: bool = True) -> "LMProblem":
+        """Data-parallel LM training on the same schedule engine.
+
+        Returns an :class:`LMProblem` that :meth:`Session.compile
+        <repro.api.session.Session.compile>` dispatches to the
+        ``"lm_treesync"`` method (mesh backend): the local step is one
+        ``optimizer`` update on a synthetic-LM batch, the per-level
+        combine a parameter/opt-state mean over the level's mesh axis.
+        """
+        return LMProblem(cfg=cfg, optimizer=optimizer, batch=batch, seq=seq,
+                         seed=seed, average_opt_state=average_opt_state)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMProblem:
+    """LM-training *what*: model config + optimizer + deterministic data
+    stream (``repro.data.lm.lm_batch`` is a pure function of
+    ``(seed, step)``, so resume = restore state + continue the stream).
+
+    Where/how stay :class:`~repro.api.topology.Topology` /
+    :class:`~repro.api.schedule.Schedule`, exactly as for SDCA; the
+    ``method`` marker routes :meth:`Session.compile
+    <repro.api.session.Session.compile>` to
+    :class:`repro.api.lm.LMSession`.
+    """
+    cfg: "object"            # repro.configs.base.ModelConfig (frozen)
+    optimizer: "object"      # repro.optim.Optimizer (frozen)
+    batch: int = 8
+    seq: int = 128
+    seed: int = 0
+    average_opt_state: bool = True
+    method: str = dataclasses.field(default="lm_treesync")
+
+    def __post_init__(self):
+        if self.batch <= 0 or self.seq <= 0:
+            raise ValueError(
+                f"batch/seq must be positive, got {self.batch}/{self.seq}")

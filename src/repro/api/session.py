@@ -41,6 +41,7 @@ from repro.core import tree as tree_mod
 from repro.core.engine import host as host_mod
 from repro.core.engine import mesh as mesh_mod
 from repro.core.engine import plan as plan_mod
+from repro.core.engine.method import get_method
 from repro.core.instrument import SolveResult, record_round
 from repro.api.problem import Problem
 from repro.api.schedule import (
@@ -122,7 +123,15 @@ class Session:
         ``"reduce_scatter"`` (server state sharded across each sync
         group's devices -- per-device server memory drops from ``O(L*d)``
         to ``O(L*d/K)``, the big-``d`` path; full participation only, so
-        it composes with compression but not with ``straggler=``)."""
+        it composes with compression but not with ``straggler=``).
+
+        A non-SDCA problem (``Problem.lm(...)``) dispatches by its
+        ``method`` marker to that method's session type (the plan IR is
+        method-agnostic; the Method supplies local step + combine)."""
+        if getattr(problem, "method", "sdca") not in ("sdca", None):
+            from repro.api.lm import LMSession
+            return LMSession.compile(problem, topology, schedule,
+                                     backend=backend, mesh=mesh)
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; use {BACKENDS}")
         schedule = schedule or Schedule()
@@ -142,9 +151,9 @@ class Session:
                                      compression=resolved.compression)
 
         if backend in ("vmap", "pallas"):
-            fn = host_mod.get_host_executor(
-                plan, loss=problem.loss,
-                record_history=False, backend=backend)
+            fn = get_method("sdca").executor(
+                plan=plan, backend=backend, loss=problem.loss,
+                record_history=False)
             sess = cls(problem, topology, resolved, backend, plan, fn)
             sess.fitted_C = fitted_C
             return sess
@@ -177,9 +186,9 @@ class Session:
         elif mesh_axes is None:
             raise ValueError("pass mesh_axes (innermost level first) "
                              "together with an explicit mesh")
-        fn = mesh_mod.get_mesh_executor(
-            plan, mesh, axes=tuple(mesh_axes), loss=problem.loss,
-            use_kernel=mesh_use_kernel, sync=mesh_sync)
+        fn = get_method("sdca").executor(
+            plan=plan, backend="mesh", mesh=mesh, axes=tuple(mesh_axes),
+            loss=problem.loss, use_kernel=mesh_use_kernel, sync=mesh_sync)
         sess = cls(problem, topology, resolved, backend, plan, fn,
                    mesh=mesh, mesh_axes=tuple(mesh_axes),
                    mesh_use_kernel=mesh_use_kernel, mesh_sync=mesh_sync)

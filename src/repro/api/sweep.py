@@ -86,6 +86,7 @@ class SweepPoint:
     seed: Optional[object] = None
     schedule: Optional[int] = None
     local_h: Optional[object] = None
+    lr: Optional[float] = None
 
     def key(self):
         if self.seed is None:
@@ -104,10 +105,13 @@ class SweepPoint:
         if h is not None:
             h = int(h) if np.ndim(h) == 0 else \
                 [int(v) for v in np.asarray(h).reshape(-1)]
-        return {"lam": float(self.lam),
-                "seed": seed,
-                "schedule": self.schedule,
-                "local_h": h}
+        out = {"lam": float(self.lam),
+               "seed": seed,
+               "schedule": self.schedule,
+               "local_h": h}
+        if self.lr is not None:        # LM-only axis; SDCA dicts unchanged
+            out["lr"] = float(self.lr)
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,6 +146,7 @@ class Sweep:
     seeds: Optional[Sequence] = None
     schedules: Optional[Sequence[Schedule]] = None
     local_hs: Optional[Sequence] = None
+    lrs: Optional[Sequence[float]] = None
     mode: str = "grid"
     continuation: bool = False
     resume: Optional[Union[str, os.PathLike]] = None
@@ -151,17 +156,18 @@ class Sweep:
             raise ValueError(f"mode must be 'grid' or 'zip', got "
                              f"{self.mode!r}")
         if all(ax is None for ax in (self.lams, self.seeds,
-                                     self.schedules, self.local_hs)):
+                                     self.schedules, self.local_hs,
+                                     self.lrs)):
             raise ValueError("a Sweep needs at least one axis: lams=, "
-                             "seeds=, schedules=, or local_hs=")
+                             "seeds=, schedules=, local_hs=, or lrs=")
         for name, ax in (("lams", self.lams), ("seeds", self.seeds),
                          ("schedules", self.schedules),
-                         ("local_hs", self.local_hs)):
+                         ("local_hs", self.local_hs), ("lrs", self.lrs)):
             if ax is not None and len(ax) == 0:
                 raise ValueError(f"{name} must be non-empty when given")
         if self.mode == "zip":
             sizes = {len(ax) for ax in (self.schedules, self.lams,
-                                        self.local_hs, self.seeds)
+                                        self.lrs, self.local_hs, self.seeds)
                      if ax is not None}
             if len(sizes) > 1:
                 raise ValueError(
@@ -181,7 +187,7 @@ class Sweep:
         """Lengths of the PROVIDED axes, (schedules, lams, local_hs,
         seeds) order for ``"grid"``; the common (post-init-validated)
         length for ``"zip"``."""
-        sizes = [len(ax) for ax in (self.schedules, self.lams,
+        sizes = [len(ax) for ax in (self.schedules, self.lams, self.lrs,
                                     self.local_hs, self.seeds)
                  if ax is not None]
         if self.mode == "zip":
@@ -200,20 +206,24 @@ class Sweep:
                     seed=self.seeds[i] if self.seeds is not None else None,
                     schedule=i if self.schedules is not None else None,
                     local_h=(self.local_hs[i]
-                             if self.local_hs is not None else None))
+                             if self.local_hs is not None else None),
+                    lr=(float(self.lrs[i])
+                        if self.lrs is not None else None))
                 for i in range(B)
             ]
         scheds = (range(len(self.schedules))
                   if self.schedules is not None else [None])
         lams = ([float(v) for v in self.lams]
                 if self.lams is not None else [float(default_lam)])
+        lrs = ([float(v) for v in self.lrs]
+               if self.lrs is not None else [None])
         hs = list(self.local_hs) if self.local_hs is not None else [None]
         seeds = list(self.seeds) if self.seeds is not None else [None]
         return [
             SweepPoint(index=i, lam=lam, seed=seed, schedule=si,
-                       local_h=h)
-            for i, (si, lam, h, seed) in enumerate(
-                itertools.product(scheds, lams, hs, seeds))
+                       local_h=h, lr=lr)
+            for i, (si, lam, lr, h, seed) in enumerate(
+                itertools.product(scheds, lams, lrs, hs, seeds))
         ]
 
 
@@ -558,6 +568,11 @@ def run_sweep(session, spec: Sweep, *, rounds=None, record_history=True,
     ``Sweep(resume=<dir>)`` of the IDENTICAL spec (validated) continues
     the interrupted fleet -- on any process or mesh -- with every member
     bit-identical to its uninterrupted run."""
+    if spec.lrs is not None:
+        raise ValueError(
+            "lrs= is an LM-training axis (the optimizer step size); SDCA "
+            "has no learning rate -- sweep lams= instead, or compile an "
+            "LM session (Problem.lm) and sweep through it")
     points = spec.expand(float(session.problem.lam))
     policy = _fleet_policy(checkpoint, spec)
     resuming = spec.resume is not None

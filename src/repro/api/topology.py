@@ -341,6 +341,60 @@ class Topology:
         return cls(tree=build(0, (), 0.0))
 
     @classmethod
+    def from_mesh(
+        cls, mesh, *, sync_axes: Sequence[str] = ("data", "pod"),
+        periods: Optional[Sequence[int]] = None,
+        level_delays: Optional[Sequence[float]] = None,
+        t_lp: float = 0.0, t_cp: float = 0.0, m_leaf: int = 1,
+    ) -> "Topology":
+        """The LM-training tree of a device mesh: one leaf per replica,
+        one internal level per sync axis.
+
+        ``sync_axes`` are bottom-up (fastest link first), as in
+        ``TreeSyncConfig``; axes missing from the mesh or of size 1 are
+        dropped.  ``periods[i]`` (bottom-up, default all 1) is the number
+        of level-i rounds per level-(i+1) sync -- the leaves' local-H and
+        the internal rounds of the tree, exactly what
+        ``Schedule(rounds="auto")`` re-plans from ``level_delays[i]``,
+        the delay of the link *crossing* axis ``i``.  The root's rounds
+        stay 1: the run length is the Schedule's business.
+
+        ``m_leaf`` is a nominal per-leaf data size (LM training has no
+        (m, d) design matrix; it only feeds the delay model's bandwidth
+        terms)."""
+        from repro.launch.mesh import axis_size
+
+        axes = tuple(a for a in sync_axes
+                     if a in mesh.axis_names and axis_size(mesh, a) > 1)
+        sizes = [axis_size(mesh, a) for a in axes]       # bottom-up
+        L = len(axes)
+        if L == 0:
+            # single replica: a one-leaf star so the plan/delay machinery
+            # still has a (trivial) tree; keep the first link delay so
+            # eq.-(12) replanning stays meaningful on one device
+            return cls.balanced(
+                [1], m_leaf=m_leaf,
+                local_steps=(list(periods) or [1])[0] if periods else 1,
+                level_delays=[level_delays[0]] if level_delays else None,
+                t_lp=t_lp, t_cp=t_cp)
+        ps = list(periods) if periods is not None else [1] * L
+        if len(ps) != L:
+            raise ValueError(
+                f"{len(ps)} periods for {L} present sync axes {axes}")
+        ds = list(level_delays) if level_delays is not None else [0.0] * L
+        if len(ds) != L:
+            raise ValueError(
+                f"{len(ds)} level_delays for {L} present sync axes {axes}")
+        branching = list(reversed(sizes))                # top-down
+        # top-down rounds: root runs 1 (chunked by the Session), depth d
+        # runs periods[L-d]; leaves run periods[0] local steps
+        rounds = [1] + [ps[L - d] for d in range(1, L)]
+        return cls.balanced(branching, m_leaf=m_leaf, local_steps=ps[0],
+                            level_rounds=rounds,
+                            level_delays=list(reversed(ds)),
+                            t_lp=t_lp, t_cp=t_cp)
+
+    @classmethod
     def groups(
         cls, group_sizes: Sequence[Sequence[int]], *,
         root_rounds: int = 10, group_rounds: int = 2, local_steps: int = 64,

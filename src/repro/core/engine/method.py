@@ -1,0 +1,97 @@
+"""The Method protocol: what a workload plugs into the schedule IR.
+
+The plan IR (``engine.plan``) is method-agnostic -- tree shape, per-level
+rounds/periods, step masks, participation, compression specs, RNG
+chaining.  A *Method* supplies the two method-specific pieces the paper's
+TreeDualMethod leaves open:
+
+  * the **local step** a leaf runs H times between syncs, and
+  * the **per-level combine** a tree level applies to its children.
+
+Two methods ship today:
+
+  ``"sdca"``         -- the paper's dual coordinate ascent: local step =
+                        Procedure P over a coordinate block, combine =
+                        (dalpha keep-own, dw sum/average).  Executors in
+                        ``engine.host`` (vmap/pallas) and ``engine.mesh``.
+  ``"lm_treesync"``  -- data-parallel LM training: local step = one
+                        optimizer update per replica, combine = (masked)
+                        parameter/opt-state mean over the level's mesh
+                        sub-axis.  Executor in ``engine.lm``.
+
+ROADMAP items 4 (gossip combine) and 5 (accelerated server momentum) are
+additional Methods on the same IR.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+
+class Method:
+    """A workload on the schedule IR.  ``executor(**kw)`` returns the
+    compiled step/run program for one (plan, backend, variant) tuple;
+    implementations memoize so sweeps and sessions share compiles."""
+
+    name: str = "?"
+
+    def executor(self, **kw) -> Callable:
+        raise NotImplementedError
+
+    def cache_stats(self) -> Dict[str, int]:
+        raise NotImplementedError
+
+
+class SDCAMethod(Method):
+    """Paper's tree-DCA.  Backends: host vmap / Pallas leaves / shard_map
+    mesh; see ``engine.host`` / ``engine.mesh``."""
+
+    name = "sdca"
+
+    def executor(self, *, plan, backend="vmap", mesh=None, **kw) -> Callable:
+        if backend in ("vmap", "pallas"):
+            from repro.core.engine import host as host_mod
+            return host_mod.get_host_executor(plan, backend=backend, **kw)
+        if backend == "mesh":
+            from repro.core.engine import mesh as mesh_mod
+            return mesh_mod.get_mesh_executor(plan, mesh, **kw)
+        raise ValueError(f"sdca: unknown backend {backend!r}")
+
+    def cache_stats(self) -> Dict[str, int]:
+        from repro.core.engine import host as host_mod
+        return host_mod.executor_cache_stats()
+
+
+class LMTreeSyncMethod(Method):
+    """Replica-stacked LM training (mesh backend only: the replica dim is
+    sharded over the sync axes, so the combine is a GSPMD all-reduce)."""
+
+    name = "lm_treesync"
+
+    def executor(self, **kw) -> Callable:
+        from repro.core.engine import lm as lm_mod
+        return lm_mod.get_lm_executor(**kw)
+
+    def cache_stats(self) -> Dict[str, int]:
+        from repro.core.engine import lm as lm_mod
+        return lm_mod.lm_executor_cache_stats()
+
+
+_REGISTRY: Dict[str, Method] = {}
+
+
+def register_method(method: Method) -> Method:
+    _REGISTRY[method.name] = method
+    return method
+
+
+register_method(SDCAMethod())
+register_method(LMTreeSyncMethod())
+
+
+def get_method(name: str) -> Method:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown method {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None

@@ -703,3 +703,77 @@ def tree_from_level_plan(
     rounds = [root_rounds] + list(reversed(hs[1:]))
     return balanced_tree(branching, rounds, local_steps=hs[0],
                          m_leaf=m_leaf, t_lp=t_lp)
+
+
+# ---------------------------------------------------------------------------
+# the method-agnostic schedule view
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SchedulePlan:
+    """What a *Method* (``engine.method``) consumes from a level-homogeneous
+    ``TreePlan``: tree shape and per-level periods, with no reference to
+    the local step or the combine.  Bottom-up convention (level 0 =
+    leaves/fastest link), matching ``TreeSyncConfig.periods`` and
+    ``delay.plan_hierarchical_h``:
+
+      * ``periods[0]``      local steps per level-1 sync (leaf H),
+      * ``periods[i]``      level-(i-1) rounds per level-i sync,
+      * ``group_sizes[i]``  fan-out of the level-(i+1) node over its
+        level-i children (= the mesh sub-axis size the LM combine
+        averages over),
+      * ``compression[i]``  codec spec of the up-link into level i+1.
+    """
+    periods: Tuple[int, ...]
+    group_sizes: Tuple[int, ...]
+    compression: Tuple[str, ...]
+    fingerprint: str
+
+    @property
+    def depth(self) -> int:
+        return len(self.group_sizes)
+
+    def cum_periods(self) -> Tuple[int, ...]:
+        out, p = [], 1
+        for h in self.periods:
+            p *= h
+            out.append(p)
+        return tuple(out)
+
+
+def schedule_view(plan: TreePlan) -> SchedulePlan:
+    """Extract the method-agnostic schedule layer from a lowered plan.
+
+    Requires a level-homogeneous plan (``plan.levels`` set) with uniform
+    leaf H -- the replica-stacked LM method needs one period per mesh
+    axis, and the SDCA mesh backend has the same constraint.
+    """
+    if plan.levels is None:
+        raise ValueError(
+            "schedule_view needs a level-homogeneous plan (uniform "
+            "per-depth fan-out/rounds, congruent leaves)")
+    leaf_h = np.asarray(plan.leaf_h)
+    if plan.n_leaves and not (leaf_h == leaf_h[0]).all():
+        raise ValueError(
+            "schedule_view needs uniform leaf H (per-leaf heterogeneous H "
+            "is a runtime step-mask input, not part of the static view)")
+    D = plan.depth
+    # bottom-up: leaf H, then rounds of each internal depth from the
+    # innermost (depth D-1) up to just below the root (depth 1); the
+    # root's own rounds are the run length, not a period.
+    periods = [int(leaf_h[0]) if plan.n_leaves else 1]
+    periods += [int(plan.levels[d].rounds) for d in range(D - 1, 0, -1)]
+    group_sizes = [int(plan.levels[d].group_size)
+                   for d in range(D - 1, -1, -1)]
+    # per-depth codec of the up-link into bottom-up level i+1 == the edge
+    # into top-down depth D-1-i; per-edge specs are uniform per depth in a
+    # level-homogeneous plan, so leaf 0's column is representative
+    comp = []
+    for i in range(D):
+        d = D - 1 - i
+        kind = int(plan.compress_kind[d, 0]) if plan.n_leaves else 0
+        frac = float(plan.compress_frac[d, 0]) if plan.n_leaves else 0.0
+        comp.append(comp_mod.spec_name(kind, frac))
+    return SchedulePlan(periods=tuple(periods),
+                        group_sizes=tuple(group_sizes),
+                        compression=tuple(comp),
+                        fingerprint=plan.fingerprint)

@@ -22,25 +22,41 @@ DP (tested), which is the paper's star-network special case.
 
 The per-level periods are chosen by repro.core.delay.plan_hierarchical_h --
 the paper's eq. (12) applied recursively (slow link => larger period).
+
+The implementation lives in ``repro.core.engine.lm`` as the LM side of the
+Method protocol (``engine.method``); since PR 8 the step there takes the
+periods as a runtime operand and is driven by Session/Schedule/Sweep
+(``repro.api.lm.LMSession``).  This module keeps the legacy static-periods
+surface as thin shims: ``make_treesync_step`` is deprecated in favor of
+``Problem.lm(...)`` + ``Session.compile(backend="mesh")``.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+import warnings
+from typing import Callable, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core import compression as comp_mod
+from repro.core.engine import lm as lm_mod
+# legacy import surface (re-exported; implementation moved to engine.lm)
+from repro.core.engine.lm import (  # noqa: F401
+    PyTree,
+    TreeSyncState,
+    _masked_mean_over_level,
+    _masked_mean_over_prefix,
+    _mean_over_level,
+    _mean_over_prefix,
+    consensus_params,
+    split_batch,
+    stack_replicas,
+)
 from repro.launch import sharding as sh
 from repro.launch.mesh import axis_size
-from repro.models import transformer
 from repro.optim import Optimizer
-
-PyTree = Any
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +69,26 @@ class TreeSyncConfig:
     compression: str = "none"     # outermost-level delta compression
     average_opt_state: bool = True
 
+    def __post_init__(self):
+        if len(set(self.sync_axes)) != len(self.sync_axes):
+            raise ValueError(
+                f"duplicate sync_axes {self.sync_axes}: each mesh axis is "
+                "one tree level and can appear once")
+        if not self.periods or any(
+                not isinstance(p, int) or p <= 0 for p in self.periods):
+            raise ValueError(
+                f"periods must be positive ints, got {self.periods}")
+        if len(self.periods) > len(self.sync_axes):
+            raise ValueError(
+                f"{len(self.periods)} periods for {len(self.sync_axes)} "
+                "sync_axes: periods[i] schedules level i+1, one per axis")
+        try:
+            comp_mod.parse_spec(self.compression)
+        except (KeyError, ValueError):
+            raise ValueError(
+                f"unknown compression {self.compression!r}; use one of "
+                f"{sorted(comp_mod.COMPRESSORS)} or 'topk_<frac>'") from None
+
     def cum_periods(self) -> Tuple[int, ...]:
         out, p = [], 1
         for h in self.periods:
@@ -62,8 +98,7 @@ class TreeSyncConfig:
 
 
 def _present_axes(ts: TreeSyncConfig, mesh: Mesh) -> Tuple[str, ...]:
-    return tuple(a for a in ts.sync_axes if a in mesh.axis_names
-                 and axis_size(mesh, a) > 1)
+    return lm_mod.present_axes(mesh, ts.sync_axes)
 
 
 def replica_count(ts: TreeSyncConfig, mesh: Mesh) -> int:
@@ -80,19 +115,13 @@ def tp_rules() -> sh.AxisRules:
                                act_batch=("pod", "data"))
 
 
-# ---------------------------------------------------------------------------
-# replica-stacked state
-# ---------------------------------------------------------------------------
-def stack_replicas(tree: PyTree, n: int) -> PyTree:
-    return jax.tree.map(
-        lambda t: jnp.broadcast_to(t[None], (n,) + t.shape), tree)
-
-
 def replica_specs(cfg: ModelConfig, tree_shape: PyTree, mesh: Mesh,
                   ts: TreeSyncConfig, base_rules: Optional[sh.AxisRules] = None
                   ) -> PyTree:
     """Specs for an (R, ...)-stacked tree: replica dim over the sync axes
     (outermost level first, matching reshape order), rest per tp_rules."""
+    import jax
+
     rules = base_rules or tp_rules()
     base = sh.param_specs(cfg, tree_shape, mesh, rules)
     rep_axes = tuple(reversed(_present_axes(ts, mesh)))  # (pod, data)
@@ -104,178 +133,36 @@ def replica_specs(cfg: ModelConfig, tree_shape: PyTree, mesh: Mesh,
     return jax.tree.map(add_rep, base, is_leaf=lambda x: isinstance(x, P))
 
 
-# ---------------------------------------------------------------------------
-# per-level averaging
-# ---------------------------------------------------------------------------
-def _mean_over_level(tree: PyTree, level_sizes: Sequence[int], level: int
-                     ) -> PyTree:
-    """Average the (R, ...) replica dim over sub-axis `level` of its
-    (s_{L-1}, ..., s_0) factorization (level 0 = innermost/fastest)."""
-    idx = len(level_sizes) - 1 - level  # position in the reshaped tuple
-
-    def one(t):
-        if t.ndim == 0 or jnp.issubdtype(t.dtype, jnp.integer):
-            return t  # step counters etc: identical across replicas
-        shp = t.shape
-        r = t.reshape(tuple(level_sizes) + shp[1:])
-        r = jnp.mean(r.astype(jnp.float32), axis=idx, keepdims=True)
-        r = jnp.broadcast_to(
-            r, tuple(level_sizes) + shp[1:])
-        return r.reshape(shp).astype(t.dtype)
-
-    return jax.tree.map(one, tree)
-
-
-def _mean_over_prefix(tree: PyTree, level_sizes: Sequence[int], upto: int
-                      ) -> PyTree:
-    """Average over levels 0..upto simultaneously (one fused collective)."""
-    keep = len(level_sizes) - 1 - upto  # leading dims to keep
-
-    def one(t):
-        if t.ndim == 0 or jnp.issubdtype(t.dtype, jnp.integer):
-            return t
-        shp = t.shape
-        r = t.reshape(tuple(level_sizes) + shp[1:])
-        axes = tuple(range(keep, len(level_sizes)))
-        r = jnp.mean(r.astype(jnp.float32), axis=axes, keepdims=True)
-        r = jnp.broadcast_to(r, tuple(level_sizes) + shp[1:])
-        return r.reshape(shp).astype(t.dtype)
-
-    return jax.tree.map(one, tree)
-
-
-# ---------------------------------------------------------------------------
-# the TreeSync step
-# ---------------------------------------------------------------------------
-@functools.partial(
-    jax.tree_util.register_dataclass,
-    data_fields=["params", "opt_state", "step", "residual"], meta_fields=[])
-@dataclasses.dataclass
-class TreeSyncState:
-    params: PyTree      # (R, ...) replica-stacked
-    opt_state: PyTree   # (R, ...)
-    step: jax.Array     # scalar int32
-    residual: Optional[PyTree] = None  # error feedback (compressed mode)
-
-
 def init_state(cfg: ModelConfig, optimizer: Optimizer, key, mesh: Mesh,
                ts: TreeSyncConfig) -> TreeSyncState:
     n = replica_count(ts, mesh)
-    params = transformer.init_params(cfg, key)
-    opt = optimizer.init(params)
-    state = TreeSyncState(
-        params=stack_replicas(params, n),
-        opt_state=stack_replicas(opt, n),
-        step=jnp.zeros((), jnp.int32),
-    )
-    if ts.compression != "none":
-        compressor = comp_mod.COMPRESSORS[ts.compression]()
-        state.residual = stack_replicas(compressor.init_residual(params), n)
-    return state
+    return lm_mod.init_lm_state(cfg, optimizer, key, n,
+                                compression=ts.compression)
 
 
 def make_treesync_step(cfg: ModelConfig, optimizer: Optimizer,
                        ts: TreeSyncConfig, mesh: Mesh) -> Callable:
-    """Returns step(state, batch) -> (state, metrics).
+    """DEPRECATED shim: returns step(state, batch) -> (state, metrics) with
+    the periods baked in.  Use ``Problem.lm(cfg, optimizer, ...)`` +
+    ``Session.compile(backend="mesh")`` for the Session-driven program
+    (runtime periods, straggler masks, checkpoint/resume, fused sweeps).
 
     batch leaves are (R, local_B, ...): the global batch pre-split by
     replica. Local steps are vmapped; sync levels fire on their periods.
     """
+    warnings.warn(
+        "make_treesync_step is deprecated; use Problem.lm(...) + "
+        "Session.compile(backend='mesh') (repro.api) for the "
+        "Session-driven LM program", DeprecationWarning, stacklevel=2)
     axes = _present_axes(ts, mesh)
     level_sizes = tuple(axis_size(mesh, a) for a in reversed(axes))
-    cum = ts.cum_periods()[: len(axes)]
-    use_comp = ts.compression != "none"
-    compressor = (comp_mod.COMPRESSORS[ts.compression]()
-                  if use_comp else None)
+    periods = jnp.asarray(ts.periods[: len(axes)], jnp.int32)
+    base = lm_mod.build_lm_step(
+        cfg, optimizer, level_sizes=level_sizes,
+        compression=ts.compression,
+        average_opt_state=ts.average_opt_state)
 
-    def local_step(params, opt_state, batch):
-        def loss_fn(p):
-            total, metrics = transformer.forward_train(cfg, p, batch)
-            return total, metrics
-
-        (_, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params)
-        params, opt_state = optimizer.update(params, grads, opt_state)
-        return params, opt_state, metrics
-
-    vstep = jax.vmap(local_step)
-
-    def sync_level(params, opt_state, level):
-        params = _mean_over_level(params, level_sizes, level)
-        if ts.average_opt_state:
-            opt_state = jax.tree.map(
-                lambda t: (_mean_over_level({"x": t}, level_sizes, level)["x"]
-                           if t.ndim > 0 else t),
-                opt_state)
-        return params, opt_state
-
-    def compressed_outer_sync(params, residual):
-        """Cross-outermost-level averaging of int8/topk-compressed deltas
-        with error feedback. The anchor is the current inner-level mean
-        (already identical within each outer group after the inner sync)."""
-        inner_mean = _mean_over_prefix(params, level_sizes, len(axes) - 2) \
-            if len(axes) > 1 else params
-        delta = jax.tree.map(lambda p, a: p.astype(jnp.float32) - a.astype(
-            jnp.float32), params, inner_mean)
-        wire, residual = compressor.compress(delta, residual)
-        deq = compressor.decompress(wire)
-        avg_delta = _mean_over_level(deq, level_sizes, len(axes) - 1)
-        avg_inner = _mean_over_level(inner_mean, level_sizes, len(axes) - 1)
-        params = jax.tree.map(
-            lambda a, d, p: (a.astype(jnp.float32) + d).astype(p.dtype),
-            avg_inner, avg_delta, params)
-        return params, residual
-
-    def step(state: TreeSyncState, batch) -> Tuple[TreeSyncState, Dict]:
-        params, opt_state, residual = (state.params, state.opt_state,
-                                       state.residual)
-        params, opt_state, metrics = vstep(params, opt_state, batch)
-        step_no = state.step + 1
-
-        for level in range(len(axes)):
-            is_outer = level == len(axes) - 1
-            due = (step_no % cum[level]) == 0
-
-            if is_outer and use_comp:
-                def do(ps, os, res):
-                    ps, res = compressed_outer_sync(ps, res)
-                    return ps, os, res
-
-                def skip(ps, os, res):
-                    return ps, os, res
-
-                params, opt_state, residual = jax.lax.cond(
-                    due, do, skip, params, opt_state, residual)
-            else:
-                params, opt_state = jax.lax.cond(
-                    due,
-                    functools.partial(sync_level, level=level),
-                    lambda ps, os: (ps, os),
-                    params, opt_state)
-
-        new_state = TreeSyncState(params=params, opt_state=opt_state,
-                                  step=step_no, residual=residual)
-        mmean = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics)
-        return new_state, mmean
+    def step(state, batch):
+        return base(state, batch, periods)
 
     return step
-
-
-def consensus_params(state: TreeSyncState, level_sizes=None) -> PyTree:
-    """The fully-averaged model (what you checkpoint / serve)."""
-    return jax.tree.map(lambda t: jnp.mean(t.astype(jnp.float32), axis=0),
-                        state.params)
-
-
-# ---------------------------------------------------------------------------
-# batch splitting
-# ---------------------------------------------------------------------------
-def split_batch(batch: Dict[str, jax.Array], n_replicas: int
-                ) -> Dict[str, jax.Array]:
-    """(B, ...) -> (R, B/R, ...)."""
-    def one(t):
-        B = t.shape[0]
-        assert B % n_replicas == 0, (B, n_replicas)
-        return t.reshape((n_replicas, B // n_replicas) + t.shape[1:])
-
-    return {k: one(v) for k, v in batch.items()}

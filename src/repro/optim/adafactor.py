@@ -8,8 +8,6 @@ step-size scaling.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -29,6 +27,8 @@ def make_adafactor(
     min_dim_size_to_factor: int = 128,
     weight_decay: float = 0.0,
 ) -> Optimizer:
+    base_lr = lr
+
     def init(params):
         def leaf_state(p):
             if _factored(p.shape, min_dim_size_to_factor):
@@ -44,10 +44,13 @@ def make_adafactor(
                               is_leaf=lambda x: hasattr(x, "shape")),
         }
 
-    def update(params, grads, state):
+    def update(params, grads, state, lr=None):
         step = state["step"] + 1
         stepf = step.astype(jnp.float32)
         beta2 = 1.0 - stepf ** (-decay_pow)
+        # lr=None -> the constructor rate; a traced scalar overrides it
+        # (runtime operand, so an lr sweep is one vmapped executor)
+        lr_t = base_lr if lr is None else lr
 
         def upd(p, g, s):
             g = g.astype(jnp.float32)
@@ -71,9 +74,9 @@ def make_adafactor(
             pf = p.astype(jnp.float32)
             # relative step size (scaled by param RMS, floored at eps2)
             scale = jnp.maximum(jnp.sqrt(jnp.mean(pf * pf)), eps2)
-            pf = pf - lr * scale * u
+            pf = pf - lr_t * scale * u
             if weight_decay and p.ndim >= 2:
-                pf = pf - lr * weight_decay * pf
+                pf = pf - lr_t * weight_decay * pf
             return pf.astype(p.dtype), new_s
 
         is_state = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)

@@ -46,10 +46,12 @@ def make_adamw(
             "nu": jax.tree.map(jnp.copy, zeros),
         }
 
-    def update(params, grads, state):
+    def update(params, grads, state, lr=None):
         step = state["step"] + 1
         stepf = step.astype(jnp.float32)
-        lr_t = sched(step)
+        # lr=None -> the built-in schedule; a traced scalar overrides it
+        # (runtime operand, so an lr sweep is one vmapped executor)
+        lr_t = sched(step) if lr is None else lr
 
         if grad_clip is not None:
             gsq = sum(

@@ -9,6 +9,8 @@ from repro.optim.api import Optimizer
 
 def make_sgd(lr: float = 0.1, momentum: float = 0.9,
              nesterov: bool = False) -> Optimizer:
+    base_lr = lr
+
     def init(params):
         if momentum == 0.0:
             mom = None
@@ -17,12 +19,15 @@ def make_sgd(lr: float = 0.1, momentum: float = 0.9,
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
         return {"step": jnp.zeros((), jnp.int32), "mom": mom}
 
-    def update(params, grads, state):
+    def update(params, grads, state, lr=None):
+        # lr=None -> the constructor rate; a traced scalar overrides it
+        # (runtime operand, so an lr sweep is one vmapped executor)
+        lr_t = base_lr if lr is None else lr
         step = state["step"] + 1
         if momentum == 0.0:
             new_p = jax.tree.map(
                 lambda p, g: (p.astype(jnp.float32)
-                              - lr * g.astype(jnp.float32)).astype(p.dtype),
+                              - lr_t * g.astype(jnp.float32)).astype(p.dtype),
                 params, grads)
             return new_p, {"step": step, "mom": None}
 
@@ -30,7 +35,7 @@ def make_sgd(lr: float = 0.1, momentum: float = 0.9,
             g = g.astype(jnp.float32)
             m = momentum * m + g
             d = g + momentum * m if nesterov else m
-            return (p.astype(jnp.float32) - lr * d).astype(p.dtype), m
+            return (p.astype(jnp.float32) - lr_t * d).astype(p.dtype), m
 
         flat_p, tdef = jax.tree.flatten(params)
         flat_g = jax.tree.leaves(grads)

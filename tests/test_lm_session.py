@@ -1,0 +1,170 @@
+"""Session-driven LM training: bit-identity with the legacy treesync
+step and with plain DP at periods=(1,), checkpoint/resume equality,
+fused (lr x seed) sweeps, and TreeSyncConfig validation."""
+import dataclasses
+import tempfile
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (CheckpointPolicy, Problem, Schedule, Session, Sweep,
+                       Topology)
+from repro.api.schedule import DelayModel
+from repro.configs.base import ModelConfig
+from repro.core import treesync as tsy
+from repro.data.lm import lm_batch
+from repro.launch.mesh import make_host_mesh
+from repro.optim import make_sgd
+
+CFG = dataclasses.replace(
+    ModelConfig(
+        name="tiny", family="dense", num_layers=2, d_model=32, num_heads=4,
+        num_kv_heads=2, head_dim=8, d_ff=64, vocab_size=64, q_chunk_size=16,
+        logits_chunk=16, remat=False,
+    ),
+    activation_dtype="float32",
+)
+
+
+def _trees_equal(a, b):
+    return all(bool((x == y).all())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _session(periods=(2,), **topo_kw):
+    mesh = make_host_mesh()
+    opt = make_sgd(lr=0.05, momentum=0.0)
+    prob = Problem.lm(CFG, opt, batch=8, seq=16, seed=0)
+    topo = Topology.from_mesh(mesh, sync_axes=("data",), periods=periods,
+                              **topo_kw)
+    return Session.compile(prob, topo, backend="mesh", mesh=mesh), mesh, opt
+
+
+def test_session_matches_legacy_treesync():
+    """The Session-driven program is bit-identical to make_treesync_step
+    at the same fixed periods/seed: same init, same data stream, same
+    jitted math -- only the periods moved from trace constants to a
+    runtime operand."""
+    sess, mesh, opt = _session(periods=(2,))
+    res = sess.run(steps=6, key=jax.random.PRNGKey(0))
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        ts = tsy.TreeSyncConfig(sync_axes=("data",), periods=(2,))
+        n = tsy.replica_count(ts, mesh)
+        state = tsy.init_state(CFG, opt, jax.random.PRNGKey(0), mesh, ts)
+        step = jax.jit(tsy.make_treesync_step(CFG, opt, ts, mesh))
+    for i in range(6):
+        batch = tsy.split_batch(lm_batch(CFG, 8, 16, i, seed=0), n)
+        state, _ = step(state, batch)
+
+    assert _trees_equal(res.state.params, state.params)
+    assert _trees_equal(res.state.opt_state, state.opt_state)
+
+
+def test_sync_periods_match_plain_dp():
+    """periods=(1,) + SGD(momentum=0) == plain data parallelism: the
+    fully synchronous star network is a special case of the one
+    program (the old --mode=sync is just --sync now)."""
+    sess, mesh, opt = _session(periods=(1,))
+    if sess.n_replicas == 1:
+        pytest.skip("needs >1 device to be meaningful")
+
+    res = sess.run(steps=3, key=jax.random.PRNGKey(0))
+
+    from repro.launch.steps import make_train_step
+    from repro.models.transformer import init_params
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    dp_step = jax.jit(make_train_step(CFG, opt))
+    for i in range(3):
+        params, opt_state, _ = dp_step(params, opt_state,
+                                       lm_batch(CFG, 8, 16, i, seed=0))
+
+    avg = res.consensus()
+    for a, b in zip(jax.tree.leaves(avg), jax.tree.leaves(params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_resume_after_kill_bit_identical():
+    """Kill after 4 of 6 steps, resume from the snapshot: the stitched
+    run is bit-identical to the uninterrupted one and the history is
+    the full 6 entries."""
+    sess, _, _ = _session(periods=(2,))
+    full = sess.run(steps=6, key=jax.random.PRNGKey(3))
+    with tempfile.TemporaryDirectory() as d:
+        pol = CheckpointPolicy(directory=d, every=1)
+        sess.run(steps=4, key=jax.random.PRNGKey(3), checkpoint=pol)
+        res = sess.resume(pol, steps=2)
+    assert _trees_equal(full.state.params, res.state.params)
+    assert _trees_equal(full.state.opt_state, res.state.opt_state)
+    assert len(res.history) == 6
+    assert [e["step"] for e in res.history] == list(range(1, 7))
+
+
+def test_sweep_one_executor_per_grid():
+    """A (lr x seed) LM grid compiles ONE batched executor (lr is a
+    runtime operand, seeds stack on the batch axis) and returns stacked
+    losses with a working best()."""
+    sess, _, _ = _session(periods=(2,))
+    s0 = sess.cache_stats()
+    rs = sess.sweep(Sweep(lrs=[0.01, 0.05], seeds=[0, 1]), steps=4)
+    s1 = sess.cache_stats()
+    assert s1["misses"] - s0["misses"] == 1
+    assert rs.losses.shape == (4, 4)
+    assert np.isfinite(rs.losses).all()
+    i = rs.best()
+    assert 0 <= i < 4 and rs.points[i].lr in (0.01, 0.05)
+    # repeat grid: fully cache-hit
+    s2 = sess.cache_stats()
+    sess.sweep(Sweep(lrs=[0.01, 0.05], seeds=[0, 1]), steps=2)
+    s3 = sess.cache_stats()
+    assert s3["misses"] == s2["misses"]
+
+
+def test_straggler_adaptive_history():
+    """A straggler policy on the LM session produces eq.-(12)-replanned
+    histories: per-round wall clocks, participant counts and the local-H
+    actually used, without retracing."""
+    sess, _, _ = _session(periods=(2,), level_delays=[0.5], t_lp=1e-3)
+    pol_mod = pytest.importorskip("repro.runtime.straggler")
+    pol = pol_mod.StragglerPolicy(seed=0, adaptive=pol_mod.AdaptiveSchedule())
+    out = sess.run(rounds=4, key=jax.random.PRNGKey(0), straggler=pol)
+    last = out.history[-1]
+    for k in ("time", "time_sync", "participants", "h"):
+        assert k in last, sorted(last)
+    assert np.isfinite(out.final_loss)
+
+
+def test_auto_schedule_plans_lm_periods():
+    """Schedule(rounds='auto', compression='auto') drives the SAME
+    eq.-(12) planner for the LM workload: a delay model yields concrete
+    periods and an outer codec, and the planned program runs."""
+    mesh = make_host_mesh()
+    opt = make_sgd(lr=0.05, momentum=0.0)
+    prob = Problem.lm(CFG, opt, batch=8, seq=16, seed=0)
+    topo = Topology.from_mesh(mesh, sync_axes=("data",), periods=(2,),
+                              level_delays=[0.5], t_lp=1e-3)
+    sch = Schedule(rounds="auto", compression="auto",
+                   delay=DelayModel(C=1.0, delta=0.05, t_total=2.0))
+    sess = Session.compile(prob, topo, sch, backend="mesh", mesh=mesh)
+    assert all(p >= 1 for p in sess.periods)
+    out = sess.run(steps=2)
+    assert np.isfinite(out.final_loss)
+
+
+@pytest.mark.parametrize("kw,msg", [
+    (dict(sync_axes=("data",), periods=(0,)), "positive"),
+    (dict(sync_axes=("data",), periods=(-2,)), "positive"),
+    (dict(sync_axes=("data", "data"), periods=(2, 2)), "duplicate"),
+    (dict(sync_axes=("data",), periods=(2, 2)), "periods"),
+    (dict(sync_axes=("data",), periods=(2,), compression="zstd"),
+     "compression"),
+])
+def test_treesync_config_validation(kw, msg):
+    with pytest.raises(ValueError, match=msg):
+        tsy.TreeSyncConfig(**kw)
