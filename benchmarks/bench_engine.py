@@ -359,7 +359,7 @@ def elastic_scenario(verbose: bool = True) -> Dict[str, float]:
                                         directory=td5, every=5)),
         }
         best = {k: float("inf") for k in variants}
-        for k, fn in variants.items():
+        for fn in variants.values():
             fn()                                 # warm compiles
         for _ in range(5):
             for k, fn in variants.items():       # interleaved best-of
@@ -478,7 +478,7 @@ def treesync_scenario(verbose: bool = True) -> Dict[str, float]:
     # warm both jits, and confirm the refactor is lossless while at it
     st_leg, out_sess = legacy(), session()
     for a, b in zip(jax.tree.leaves(st_leg.params),
-                    jax.tree.leaves(out_sess.state.params)):
+                    jax.tree.leaves(out_sess.state.params), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
     t_legacy = t_session = float("inf")
@@ -538,6 +538,53 @@ def treesync_scenario(verbose: bool = True) -> Dict[str, float]:
     return out
 
 
+def analysis_scenario(t_compile_s: float,
+                      verbose: bool = True) -> Dict[str, float]:
+    """Verifier overhead: ``verify_plan`` is wired into EVERY
+    ``Session.compile`` (strict or not), so its wall-time must stay a
+    rounding error next to the compile it rides on (plan lowering +
+    executor trace + XLA, the headline scenario's ``t_compile_s``).
+    Timed on the same depth-3 tree, full verify = structural checks +
+    fingerprint audit + schedule view.  The recorded gate is <= 5% of
+    compile time."""
+    from repro.analysis import verify_plan
+    from repro.core.engine import plan as plan_mod
+
+    topo = Topology.balanced([2, 2, 2], m_leaf=32, local_steps=128,
+                             level_rounds=[10, 2, 2])
+
+    def lower_cold():
+        plan_mod._compile_tree_cached.cache_clear()
+        return plan_mod.compile_tree(topo.tree)
+
+    plan = lower_cold()                          # warm imports / allocator
+    t_lower = min(_time_host(lower_cold) for _ in range(3))
+    t_verify = min(_time_host(lambda: verify_plan(plan)) for _ in range(3))
+    out = {
+        "t_lower_ms": t_lower * 1e3,
+        "t_verify_ms": t_verify * 1e3,
+        "t_compile_ms": t_compile_s * 1e3,
+        "overhead_frac": t_verify / t_compile_s,
+    }
+    if verbose:
+        print("bench_engine analysis scenario: depth-3, 8-leaf tree")
+        print(f"  plan lowering    : {t_lower * 1e3:9.2f} ms  (cold)")
+        print(f"  verify_plan      : {t_verify * 1e3:9.2f} ms  "
+              f"({out['overhead_frac'] * 100:.2f}% of the "
+              f"{t_compile_s * 1e3:.0f} ms Session.compile)")
+    return out
+
+
+def _time_host(fn, repeats: int = 3) -> float:
+    """Best-of wall time for host-side (no device output) callables."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
 def run(verbose: bool = True) -> Dict[str, float]:
     # depth-3, 8-leaf balanced tree: 10 root x 2 x 2 rounds, H=128
     topo = Topology.balanced([2, 2, 2], m_leaf=32, local_steps=128,
@@ -583,6 +630,7 @@ def run(verbose: bool = True) -> Dict[str, float]:
     results["compression"] = compression_scenario(verbose=verbose)
     results["elastic"] = elastic_scenario(verbose=verbose)
     results["treesync"] = treesync_scenario(verbose=verbose)
+    results["analysis"] = analysis_scenario(t_compile, verbose=verbose)
     if verbose:
         print("bench_engine: depth-3, 8-leaf tree "
               f"(m={m}, 40 ticks x H=128), host path")
@@ -625,6 +673,10 @@ def run(verbose: bool = True) -> Dict[str, float]:
         f"adaptive periods reach the loss target only "
         f"{results['treesync']['time_saved_ratio']:.2f}x faster than the "
         "fixed barrier (>= 1x target)")
+    assert results["analysis"]["overhead_frac"] <= 0.05, (
+        f"verify_plan costs {results['analysis']['overhead_frac'] * 100:.1f}% "
+        "of plan compile time (<= 5% target: it runs on every "
+        "Session.compile)")
     return results
 
 

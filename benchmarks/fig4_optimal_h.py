@@ -85,10 +85,11 @@ def run(verbose: bool = True) -> Dict:
                 f"{curves[r][i] / np.log(10):<13.1f}" for r in rs_a)
             print(row)
         print("fig4(b): optimal H vs r")
-        for r, h in zip(rs_b, h_opt):
+        for r, h in zip(rs_b, h_opt, strict=True):
             print(f"  r={r:<12.3g} H*={int(h)}")
         # the paper's qualitative claim: H* is nondecreasing in the delay
-        assert all(b >= a for a, b in zip(h_opt, h_opt[1:])), h_opt
+        assert all(b >= a
+                   for a, b in zip(h_opt, h_opt[1:], strict=False)), h_opt
         print("  (H* nondecreasing in delay: confirmed)")
         print("fig4(c): Schedule(rounds='auto') H* by delay ratio:",
               {f"r={r:g}": h for r, h in h_api.items()})

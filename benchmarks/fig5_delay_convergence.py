@@ -48,7 +48,7 @@ def run(verbose: bool = True) -> Dict:
         out[r] = {
             H: {"time": res.times, "gap": res.gaps,
                 "rounds": rounds_of[H]}
-            for H, res in zip(HS, rs)
+            for H, res in zip(HS, rs, strict=True)
         }
     if verbose:
         for r in (10, 1e5):

@@ -50,7 +50,7 @@ def main():
         rs = auto.sweep(schedules=scheds, record_history=False)
         gaps = {
             H: float(duality_gap(res.alpha, X, y, problem.loss, LAM))
-            for H, res in zip(hs, rs)
+            for H, res in zip(hs, rs, strict=True)
         }
         best = min(gaps, key=gaps.get)
         print(f"{r:>10.0f} {h_star:>12d} {best:>14d} {gaps[h_star]:>12.3e}")

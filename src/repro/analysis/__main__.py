@@ -1,0 +1,66 @@
+"""``python -m repro.analysis [--strict] PATH...`` -- run the static
+analysis over source trees; exit 1 on any finding.
+
+Default: the AST lint rules (``repro.analysis.rules``) over every
+``.py`` under the given paths.  ``--strict`` additionally runs the
+machine-checkable plan-IR audits that need no plan instance: the
+fingerprint-registry classification audit and a verifier self-check on
+a representative compiled plan (so CI catches a plan.py regression even
+when no test constructs that shape).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import plan_check, rules
+
+
+def _strict_audits() -> int:
+    """Plan-IR audits that run without user input; returns #findings."""
+    findings = plan_check.audit_fingerprint(None)
+    # a representative nontrivial plan: 3 levels, heterogeneous leaf
+    # sizes/H, mixed per-depth compression -- exercises every checker
+    from repro.core.engine.plan import compile_tree
+    from repro.core.tree import TreeNode
+    leaves_a = tuple(
+        TreeNode(name=f"a{i}", rounds=2 + i, data_size=5 + i)
+        for i in range(2))
+    leaves_b = tuple(
+        TreeNode(name=f"b{i}", rounds=3, data_size=4) for i in range(3))
+    tree = TreeNode(name="root", rounds=2, children=(
+        TreeNode(name="ga", rounds=2, children=leaves_a),
+        TreeNode(name="gb", rounds=1, children=leaves_b),
+    ))
+    plan = compile_tree(tree, compression=(None, "int8"))
+    findings += plan_check.check_tree_plan(plan)
+    for f in findings:
+        print(f"plan-ir: {f}", file=sys.stderr)
+    return len(findings)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific static analysis: AST lint rules, plus "
+                    "(--strict) the plan-IR fingerprint/verifier audits")
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument("--strict", action="store_true",
+                    help="also run the plan-IR self-audits")
+    args = ap.parse_args(argv)
+
+    findings = rules.lint_paths(args.paths)
+    for f in findings:
+        print(str(f), file=sys.stderr)
+    n = len(findings)
+    if args.strict:
+        n += _strict_audits()
+    if n:
+        print(f"repro.analysis: {n} finding(s)", file=sys.stderr)
+        return 1
+    print("repro.analysis: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

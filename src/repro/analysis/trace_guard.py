@@ -1,0 +1,243 @@
+"""Runtime trace guard: strict mode for ``repro.api.Session``.
+
+The engine's whole performance story is "ONE compiled program per plan
+fingerprint; schedules, lambdas, masks and step masks are runtime
+operands".  A silent retrace -- an executor-cache miss where a hit was
+expected -- means that contract broke: something that should be a
+runtime operand leaked into the cache key (or a fingerprint changed when
+it should not have).  Historically those regressions surfaced as mystery
+slowdowns in sweeps; strict mode turns them into errors at the point of
+the miss, carrying a structured field-by-field diff of the offending
+cache key against the nearest cached one.
+
+Three independent guards, bundled by :class:`TraceGuard`:
+
+  * :func:`no_retrace` -- a context manager holding an executor-cache
+    miss budget (default 0) over a region; on exceeding it, raises
+    :class:`UnexpectedRetraceError` with the named key diffs from the
+    engine miss logs (``engine.host.executor_miss_log``).
+  * host-sync guard -- ``jax.transfer_guard_device_to_host("disallow")``
+    scoped around the chunk loop's *executor dispatch region only*:
+    ``.item()`` / implicit ``float()`` / ``np.asarray`` on a traced or
+    device value inside the hot loop blocks the dispatch pipeline and
+    shows up as unexplained host gaps.  Intentional host reads (history
+    recording between chunks, convergence checks) live OUTSIDE the
+    guarded region and stay legal.
+  * :func:`check_finite` -- opt-in NaN/Inf sanitizer over the chunk
+    carry, raising :class:`NonFiniteError` naming the first offending
+    pytree leaf.  Off by default: it forces a device sync per chunk.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Iterator, List, Optional
+
+import jax
+import numpy as np
+
+
+class UnexpectedRetraceError(RuntimeError):
+    """An executor-cache miss happened where strict mode budgeted none.
+
+    ``misses`` holds the offending named cache keys (newest last), each
+    with a ``diff`` against the nearest key already in that backend's
+    cache -- the differing fields are exactly the operands that leaked
+    into the cache key."""
+
+    def __init__(self, message: str, misses: List[dict]):
+        super().__init__(message)
+        self.misses = misses
+
+
+class HostSyncError(RuntimeError):
+    """A device-to-host transfer happened inside the guarded dispatch
+    region of the chunk loop (``.item()``, implicit ``float()``,
+    ``np.asarray`` on a device value, ...)."""
+
+
+class NonFiniteError(FloatingPointError):
+    """The sanitizer found NaN/Inf in a guarded value; ``where`` names
+    the offending pytree leaf."""
+
+    def __init__(self, message: str, where: str):
+        super().__init__(message)
+        self.where = where
+
+
+# ---------------------------------------------------------------------------
+# retrace guard
+# ---------------------------------------------------------------------------
+def _total_misses() -> int:
+    from repro.core.engine import host as host_mod
+    return host_mod.executor_cache_stats()["misses"]
+
+
+def _key_diff(new: dict, cached: List[dict]) -> Optional[dict]:
+    """Field-by-field diff of ``new`` against its nearest neighbour in
+    ``cached`` (fewest differing fields wins): {field: (new, cached)}."""
+    best = None
+    for old in cached:
+        if set(old) != set(new):
+            continue
+        delta = {f: (new[f], old[f]) for f in new if new[f] != old[f]}
+        if best is None or len(delta) < len(best):
+            best = delta
+    return best
+
+
+def _describe_miss(entry: dict) -> dict:
+    """Attach the nearest-cached-key diff to one miss-log entry."""
+    from repro.core.engine import host as host_mod
+    from repro.core.engine import mesh as mesh_mod
+    cached = (mesh_mod.mesh_executor_cache_keys()
+              if entry["backend"] == "mesh"
+              else host_mod.executor_cache_keys())
+    # the missed key itself is in the cache by now -- diff against others
+    others = [k for k in cached if k != entry["key"]]
+    return dict(entry, diff=_key_diff(entry["key"], others))
+
+
+@contextlib.contextmanager
+def no_retrace(budget: int = 0) -> Iterator[None]:
+    """Assert at most ``budget`` executor-cache misses (across the host,
+    mesh and LM caches) happen inside the ``with`` body; raise
+    :class:`UnexpectedRetraceError` with structured key diffs otherwise.
+
+    The canonical strict-session usage budgets the FIRST chunk's builds
+    and holds zero for the rest of the run; standalone use::
+
+        with no_retrace():            # everything is already compiled
+            sess.run(lam=0.01)
+    """
+    from repro.core.engine import host as host_mod
+    before = _total_misses()
+    log_before = len(host_mod.executor_miss_log())
+    yield
+    new = _total_misses() - before
+    if new <= budget:
+        return
+    entries = [_describe_miss(e)
+               for e in host_mod.executor_miss_log()[log_before:]]
+    lines = []
+    for e in entries:
+        lines.append(f"  [{e['backend']}] key = {e['key']}")
+        if e["diff"]:
+            for f, (nv, ov) in e["diff"].items():
+                lines.append(f"      {f}: {nv!r} (cached: {ov!r})")
+        elif e["diff"] is not None:
+            lines.append("      (identical to a cached key -- the entry "
+                         "was evicted by LRU pressure; raise the cache "
+                         "size or narrow the sweep)")
+    detail = "\n".join(lines) or "  (miss in a cache without a miss log)"
+    raise UnexpectedRetraceError(
+        f"{new} executor-cache miss(es) in a region budgeted for "
+        f"{budget}: an operand that should be a runtime input leaked "
+        "into a cache key (or the plan fingerprint changed "
+        "mid-session).  Offending keys, with field diffs against the "
+        f"nearest cached key:\n{detail}", entries)
+
+
+# ---------------------------------------------------------------------------
+# host-sync guard
+# ---------------------------------------------------------------------------
+@contextlib.contextmanager
+def _no_host_sync() -> Iterator[None]:
+    """Disallow device-to-host transfers in the body; jax's transfer
+    guard raises on ``.item()`` / ``float()`` / ``np.asarray`` of a
+    device value, re-raised as :class:`HostSyncError` naming the fix."""
+    try:
+        with jax.transfer_guard_device_to_host("disallow"):
+            yield
+    except Exception as e:  # jax raises bare RuntimeError subclasses
+        if "transfer" not in str(e).lower():
+            raise
+        raise HostSyncError(
+            "device-to-host transfer inside the dispatch region of the "
+            "chunk loop: a traced/device value was pulled to the host "
+            "(.item(), implicit float(), np.asarray, ...), which blocks "
+            "dispatch pipelining.  Move the read outside the guarded "
+            f"region (history recording between chunks is fine).  "
+            f"Original: {e}") from e
+
+
+# ---------------------------------------------------------------------------
+# NaN/Inf sanitizer
+# ---------------------------------------------------------------------------
+def check_finite(tree, where: str = "value") -> None:
+    """Raise :class:`NonFiniteError` if any leaf of ``tree`` holds
+    NaN/Inf.  Deliberately a HOST check (it materializes each leaf):
+    strict sessions call it between chunks, outside the host-sync
+    guard."""
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    for path, leaf in leaves:
+        arr = np.asarray(leaf)
+        if not np.issubdtype(arr.dtype, np.floating):
+            continue
+        if not np.isfinite(arr).all():
+            n_bad = int((~np.isfinite(arr)).sum())
+            loc = f"{where}{jax.tree_util.keystr(path)}"
+            raise NonFiniteError(
+                f"non-finite values in {loc}: {n_bad}/{arr.size} "
+                "entries are NaN/Inf.  The solve diverged -- lower "
+                "lambda/lr, shrink H, or inspect the round history up "
+                "to this chunk.", loc)
+
+
+# ---------------------------------------------------------------------------
+# the bundle Session threads through its chunk loop
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TraceGuard:
+    """Strict-mode policy for one ``Session``.
+
+    ``Session.compile(strict=True)`` installs ``TraceGuard()``;
+    ``strict=TraceGuard(...)`` customizes.  Fields:
+
+      * ``error_on_retrace`` -- unexpected executor-cache misses inside
+        ``Session.run`` raise :class:`UnexpectedRetraceError`.  The
+        session budgets the FIRST dispatch of each compiled
+        configuration (compiles are expected); after that, zero.
+      * ``miss_budget`` -- extra allowed misses per guarded region, on
+        top of the expected first-dispatch builds.
+      * ``guard_host_sync`` -- disallow device-to-host transfers inside
+        the executor dispatch region.
+      * ``sanitize`` -- check the chunk carry for NaN/Inf after every
+        chunk (costs one device sync per chunk; off by default).
+    """
+    error_on_retrace: bool = True
+    miss_budget: int = 0
+    guard_host_sync: bool = True
+    sanitize: bool = False
+
+    def retrace_region(self, budget: Optional[int] = None):
+        """The no-retrace scope for one dispatch region (nullcontext
+        when retrace errors are off)."""
+        if not self.error_on_retrace:
+            return contextlib.nullcontext()
+        extra = self.miss_budget if budget is None else budget
+        return no_retrace(extra)
+
+    def dispatch_region(self):
+        """The host-sync scope for one executor dispatch (nullcontext
+        when the guard is off)."""
+        if not self.guard_host_sync:
+            return contextlib.nullcontext()
+        return _no_host_sync()
+
+    def check_carry(self, tree, where: str = "carry") -> None:
+        if self.sanitize:
+            check_finite(tree, where)
+
+
+def as_trace_guard(strict) -> Optional[TraceGuard]:
+    """Normalize ``Session.compile``'s ``strict`` argument: falsy ->
+    None, True -> default :class:`TraceGuard`, a TraceGuard -> itself."""
+    if not strict:
+        return None
+    if strict is True:
+        return TraceGuard()
+    if isinstance(strict, TraceGuard):
+        return strict
+    raise TypeError(
+        f"strict must be a bool or a TraceGuard, got {type(strict).__name__}")

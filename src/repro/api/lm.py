@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import plan_check, trace_guard as guard_mod
 from repro.api.schedule import Schedule
 from repro.api.topology import Topology
 from repro.core.engine import lm as lm_mod
@@ -109,6 +110,8 @@ class LMSession:
         self._axes = lm_mod.present_axes(mesh, sync_axes)
         self._level_sizes = lm_mod.level_sizes_for(mesh, sync_axes)
         self._method = get_method(problem.method)
+        self._guard = None          # TraceGuard when compiled strict
+        self._built = set()         # executor variants already compiled
         # the LM combine compresses the outermost edge only (legacy
         # TreeSync semantics); schedule_view is bottom-up, so [-1] is the
         # up-link into the root
@@ -125,6 +128,7 @@ class LMSession:
                 schedule: Optional[Schedule] = None, *,
                 backend: str = "mesh", mesh=None,
                 sync_axes: Sequence[str] = ("data", "pod"),
+                strict=False,
                 ) -> "LMSession":
         """Lower ``topology`` under ``schedule`` into the LM train
         program.  ``topology`` defaults to ``Topology.from_mesh(mesh)``
@@ -158,8 +162,13 @@ class LMSession:
                 f"match the mesh's sync-axis sizes {sizes} over {axes}: one "
                 "leaf per replica, one level per mesh axis "
                 "(Topology.from_mesh builds a matching tree)")
-        return cls(problem, topology, resolved, plan, sview, mesh,
+        # the structural verifier runs on every compile (TreePlan checks
+        # subsume the schedule-view checks the LM program consumes)
+        plan_check.verify_plan(plan)
+        sess = cls(problem, topology, resolved, plan, sview, mesh,
                    tuple(sync_axes))
+        sess._guard = guard_mod.as_trace_guard(strict)
+        return sess
 
     # ------------------------------------------------------------------
     @property
@@ -295,7 +304,24 @@ class LMSession:
                            t_compute=spr * t_lp, t_lp=t_lp)
         adaptive = masked and getattr(straggler, "adaptive", None) is not None
 
-        exec_fn = self._executor(masked=masked, with_lr=lr is not None)
+        # strict mode: fetching a variant this session has ALREADY built
+        # must hit the cache (zero budget -- a cleared cache or a drifted
+        # key raises); the first fetch of a variant is budgeted one build.
+        # From then on every step dispatch must hit.  (No host-sync guard
+        # on the LM path: the deterministic data stream is host-generated
+        # per step by design.)
+        guard = self._guard
+
+        def _retrace_ctx(budget=0):
+            import contextlib
+            if guard is None or not guard.error_on_retrace:
+                return contextlib.nullcontext()
+            return guard.retrace_region(budget)
+
+        variant = (masked, lr is not None)
+        with _retrace_ctx(0 if variant in self._built else 1):
+            exec_fn = self._executor(masked=masked, with_lr=lr is not None)
+        self._built.add(variant)
         periods_arr = jnp.asarray(periods[:L], jnp.int32)
         part = jnp.ones((R,), jnp.float32) if masked else None
         lr_arr = None if lr is None else jnp.asarray(lr, jnp.float32)
@@ -320,8 +346,9 @@ class LMSession:
                     extra["h"] = periods[0]
             for _ in range(n_this):
                 t0 = time.time()
-                state, metrics = exec_fn(state, self._batch_at(i),
-                                         periods_arr, part, lr_arr)
+                with _retrace_ctx():
+                    state, metrics = exec_fn(state, self._batch_at(i),
+                                             periods_arr, part, lr_arr)
                 i += 1
                 done += 1
                 if record_history:
@@ -332,6 +359,8 @@ class LMSession:
                     history.append(entry)
                     if on_step is not None:
                         on_step(entry)
+            if guard is not None and guard.sanitize:
+                guard.check_carry(state, f"state@step{i}")
             # eq.-(12) replanning feeds the NEXT round through the runtime
             # periods operand: a new input array, never a recompile
             if adaptive and straggler.last_h_suggest is not None:

@@ -184,7 +184,7 @@ def runtime_tree(chunk_tree: TreeNode, h) -> TreeNode:
         return chunk_tree
     leaves = chunk_tree.leaves()
     hs = leaf_h_spec(h, len(leaves))
-    hs = [min(int(v), int(l.rounds)) for v, l in zip(hs, leaves)]
+    hs = [min(int(v), int(l.rounds)) for v, l in zip(hs, leaves, strict=True)]
     return _apply_rounds(chunk_tree, 0, [0],
                          leaf_steps_of=lambda i, name: hs[i],
                          rounds_of_depth=lambda d: None)

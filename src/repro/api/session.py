@@ -28,6 +28,7 @@ iterates are bit-identical to the monolithic program's.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from math import prod
 from typing import Callable, Optional, Sequence, Tuple, Union
@@ -36,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import plan_check, trace_guard as guard_mod
 from repro.core import dual as dual_mod
 from repro.core import tree as tree_mod
 from repro.core.engine import host as host_mod
@@ -54,8 +56,9 @@ BACKENDS = ("vmap", "pallas", "mesh")
 
 
 # lam is a TRACED scalar: lambda sweeps hit one compiled objective instead
-# of retracing per value (only the loss object stays static)
-@functools.partial(jax.jit, static_argnames=("loss",))
+# of retracing per value (only the loss object stays static); jit here is
+# deliberate -- history recording is outside the engine's dispatch path
+@functools.partial(jax.jit, static_argnames=("loss",))  # analysis: allow(jit-outside-engine)
 def _objective(alpha: Array, X: Array, y: Array, loss, lam):
     w = dual_mod.w_of_alpha(alpha, X, lam)
     return (dual_mod.dual_value(alpha, X, y, loss, lam),
@@ -83,6 +86,7 @@ class Session:
         self.plan = plan
         self._fn = fn
         self.fitted_C = None        # set when DelayModel(C="auto") calibrated
+        self._guard = None          # TraceGuard when compiled strict
         self._mesh = mesh
         self._mesh_axes = mesh_axes
         self._mesh_use_kernel = mesh_use_kernel
@@ -110,6 +114,7 @@ class Session:
         mesh_axes: Optional[Sequence[str]] = None,
         mesh_use_kernel: bool = True,
         mesh_sync: str = "psum",
+        strict=False,
     ) -> "Session":
         """Lower ``topology`` under ``schedule`` and bind the ``backend``
         executor.  ``mesh``/``mesh_axes`` (axes innermost-first, as in
@@ -127,11 +132,23 @@ class Session:
 
         A non-SDCA problem (``Problem.lm(...)``) dispatches by its
         ``method`` marker to that method's session type (the plan IR is
-        method-agnostic; the Method supplies local step + combine)."""
+        method-agnostic; the Method supplies local step + combine).
+
+        ``strict`` (bool, or a :class:`repro.analysis.TraceGuard`) turns
+        the run loop's performance contract into errors: an unexpected
+        executor-cache miss raises ``UnexpectedRetraceError`` with a
+        structured diff of the offending cache key, implicit host
+        transfers inside the dispatch region raise ``HostSyncError``
+        (from the second chunk on -- the first chunk's builds legally
+        upload constants), and ``TraceGuard(sanitize=True)`` checks the
+        chunk carry for NaN/Inf every round.  The plan-IR verifier
+        (``repro.analysis.verify_plan``) runs on EVERY compile, strict
+        or not."""
         if getattr(problem, "method", "sdca") not in ("sdca", None):
             from repro.api.lm import LMSession
             return LMSession.compile(problem, topology, schedule,
-                                     backend=backend, mesh=mesh)
+                                     backend=backend, mesh=mesh,
+                                     strict=strict)
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; use {BACKENDS}")
         schedule = schedule or Schedule()
@@ -149,6 +166,12 @@ class Session:
         plan = plan_mod.compile_tree(resolved.chunk_tree,
                                      weighting=resolved.weighting,
                                      compression=resolved.compression)
+        # every compiled plan passes the structural verifier (geometry,
+        # schedule coherence, aggregation convexity, compression specs,
+        # RNG schedule-independence, fingerprint soundness) BEFORE an
+        # executor is built against it
+        plan_check.verify_plan(plan)
+        guard = guard_mod.as_trace_guard(strict)
 
         if backend in ("vmap", "pallas"):
             fn = get_method("sdca").executor(
@@ -156,6 +179,7 @@ class Session:
                 record_history=False)
             sess = cls(problem, topology, resolved, backend, plan, fn)
             sess.fitted_C = fitted_C
+            sess._guard = guard
             return sess
 
         # ---- mesh backend -------------------------------------------
@@ -193,6 +217,7 @@ class Session:
                    mesh=mesh, mesh_axes=tuple(mesh_axes),
                    mesh_use_kernel=mesh_use_kernel, mesh_sync=mesh_sync)
         sess.fitted_C = fitted_C
+        sess._guard = guard
         return sess
 
     # ------------------------------------------------------------------
@@ -360,23 +385,45 @@ class Session:
             t_lp = max([l.t_lp for l in chunk_tree.leaves()])
             straggler.bind(self.topology.leaf_sync_delays(), t_compute,
                            t_lp=t_lp)
+        guard = self._guard
         # the flat (alpha, w) pair is not a complete carry once leaves can
         # skip syncs (absent leaves keep divergent replicas and stale
         # snapshots) or once edges compress (error-feedback residuals must
         # persist across root rounds), so such runs thread the executors'
-        # full blocked state across chunks instead
+        # full blocked state across chunks instead.  Under strict mode the
+        # fetch is budgeted ONE miss (the first state-carry run builds;
+        # later runs must hit).
         if straggler is not None or plan.has_compression:
-            if mesh:
-                state_exec = mesh_mod.get_mesh_executor(
-                    plan, self._mesh, axes=self._mesh_axes,
-                    loss=self.problem.loss,
-                    use_kernel=self._mesh_use_kernel, carry_state=True,
-                    sync=self._mesh_sync)
-            else:
-                state_exec = host_mod.get_host_executor(
-                    plan, loss=self.problem.loss,
-                    record_history=False, backend=self.backend,
-                    carry_state=True)
+            with (guard.retrace_region(1) if guard is not None
+                  and guard.error_on_retrace else contextlib.nullcontext()):
+                if mesh:
+                    state_exec = mesh_mod.get_mesh_executor(
+                        plan, self._mesh, axes=self._mesh_axes,
+                        loss=self.problem.loss,
+                        use_kernel=self._mesh_use_kernel, carry_state=True,
+                        sync=self._mesh_sync)
+                else:
+                    state_exec = host_mod.get_host_executor(
+                        plan, loss=self.problem.loss,
+                        record_history=False, backend=self.backend,
+                        carry_state=True)
+        if guard is not None and guard.error_on_retrace:
+            # strict revalidation: the compiled program this session bound
+            # at compile time must still be cache-resident -- a re-fetch
+            # has a ZERO miss budget, so an LRU eviction (or a fingerprint
+            # that drifted mid-session) raises here instead of silently
+            # rebuilding inside the chunk loop
+            with guard.retrace_region(0):
+                if mesh:
+                    get_method("sdca").executor(
+                        plan=plan, backend="mesh", mesh=self._mesh,
+                        axes=self._mesh_axes, loss=self.problem.loss,
+                        use_kernel=self._mesh_use_kernel,
+                        sync=self._mesh_sync)
+                else:
+                    get_method("sdca").executor(
+                        plan=plan, backend=self.backend,
+                        loss=self.problem.loss, record_history=False)
         if mesh:
             a_carry = jnp.asarray(alpha, X.dtype).reshape(
                 plan.n_leaves, plan.m_b)
@@ -443,6 +490,21 @@ class Session:
                 from repro.runtime import fault as fault_mod
                 state = fault_mod.with_ef_residuals(self, state, _ef_state)
 
+        # strict mode: by loop entry every executor is cached (compile
+        # built them, the revalidation above proved it), so each chunk
+        # dispatch runs under a ZERO-miss retrace budget; the host-sync
+        # guard starts at the second chunk (the first call's jit compile
+        # legally uploads baked constants)
+        def _dispatch_ctx(t):
+            if guard is None:
+                return contextlib.nullcontext()
+            stack = contextlib.ExitStack()
+            if guard.error_on_retrace:
+                stack.enter_context(guard.retrace_region())
+            if guard.guard_host_sync and t > 1:
+                stack.enter_context(guard.dispatch_region())
+            return stack
+
         # all rounds' keys in one walk of the equivalent monolithic tree
         # (the legacy chain), so the chunk loop does no host RNG work
         keys_all = plan_mod.chunked_key_plan(chunk_tree, plan, k, T)
@@ -488,27 +550,39 @@ class Session:
                     jnp.asarray(keys.transpose(1, 0, 2)),
                     self._spec_sharding)
                 if state_exec is None:
-                    a_carry, wrows = self._fn(self._Xs, self._ys, a_carry,
-                                              w, kys, prt, steps_now,
-                                              lm_in)
+                    with _dispatch_ctx(t):
+                        a_carry, wrows = self._fn(self._Xs, self._ys,
+                                                  a_carry, w, kys, prt,
+                                                  steps_now, lm_in)
                     w = wrows[0]
                     if rec_now:
                         record(t, a_carry.reshape(m), extra)
                 else:
-                    state = state_exec.step(self._Xs, self._ys, state,
-                                            kys, prt, steps_now, lm_in)
+                    with _dispatch_ctx(t):
+                        state = state_exec.step(self._Xs, self._ys, state,
+                                                kys, prt, steps_now, lm_in)
                     if rec_now:
                         record(t, state[0].reshape(m), extra)
             elif state_exec is None:
-                a_carry, w = self._fn(X, y, jnp.asarray(keys), a_carry, w,
-                                      prt, steps_now, lm_in)
+                # operand conversion stays OUTSIDE the guarded region:
+                # inside it every implicit host transfer is an error
+                kys = jnp.asarray(keys)
+                with _dispatch_ctx(t):
+                    a_carry, w = self._fn(X, y, kys, a_carry, w,
+                                          prt, steps_now, lm_in)
                 if rec_now:
                     record(t, a_carry, extra)
             else:
-                state = state_exec.step(X, y, jnp.asarray(keys), state,
-                                        prt, steps_now, lm_in)
+                kys = jnp.asarray(keys)
+                with _dispatch_ctx(t):
+                    state = state_exec.step(X, y, kys, state,
+                                            prt, steps_now, lm_in)
                 if rec_now:
                     record(t, state_exec.finalize(state)[0], extra)
+            if guard is not None and guard.sanitize:
+                guard.check_carry(
+                    state if state_exec is not None else (a_carry, w),
+                    f"chunk[{t}]")
             if ckpt_mgr is not None:
                 k_lag += 1
                 # period alignment is on the GLOBAL round cursor, so a

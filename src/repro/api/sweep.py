@@ -619,7 +619,7 @@ def run_sweep(session, spec: Sweep, *, rounds=None, record_history=True,
                                            record_history, history_every,
                                            spec.continuation,
                                            fleet=gfleet))
-        for pt, res in zip(pts, group_res):
+        for pt, res in zip(pts, group_res, strict=True):
             results[pt.index] = res
 
     history = None

@@ -261,7 +261,7 @@ class Int8Compressor(Compressor):
 
         flat_t, tdef = jax.tree.flatten(tree)
         flat_r = jax.tree.leaves(residual)
-        out = [one(t, r) for t, r in zip(flat_t, flat_r)]
+        out = [one(t, r) for t, r in zip(flat_t, flat_r, strict=True)]
         return (tdef.unflatten([o[0] for o in out]),
                 tdef.unflatten([o[1] for o in out]))
 
@@ -294,7 +294,7 @@ class TopKCompressor(Compressor):
 
         flat_t, tdef = jax.tree.flatten(tree)
         flat_r = jax.tree.leaves(residual)
-        out = [one(t, r) for t, r in zip(flat_t, flat_r)]
+        out = [one(t, r) for t, r in zip(flat_t, flat_r, strict=True)]
         return (tdef.unflatten([o[0] for o in out]),
                 tdef.unflatten([o[1] for o in out]))
 

@@ -473,7 +473,7 @@ def fit_C(history, *, K: int, H: float, delta: float,
         raise ValueError(
             "fit_C needs at least two positive finite gap observations; "
             f"got {len(gaps)} (record a longer pilot history)")
-    ratios = [b / a for a, b in zip(gaps, gaps[1:]) if b < a]
+    ratios = [b / a for a, b in zip(gaps, gaps[1:], strict=False) if b < a]
     if not ratios:
         return floor          # no contraction observed at all
     g = float(np.median(ratios))

@@ -55,7 +55,31 @@ Array = jax.Array
 # configuration.
 _EXEC_CACHE: OrderedDict = OrderedDict()
 _EXEC_CACHE_MAX = 32
+# field names of the cache-key tuple, in order -- the trace guard's
+# structured miss diffs name the offending component instead of dumping
+# an anonymous tuple
+EXEC_KEY_FIELDS = ("plan_fingerprint", "loss", "gamma", "record_history",
+                   "backend", "carry_state", "batched")
 _EXEC_CACHE_STATS = {"hits": 0, "misses": 0}
+# per-backend breakdown ("vmap" / "pallas"; the mesh and LM caches report
+# their own columns through executor_cache_stats) so strict sessions and
+# the benchmarks can hold a zero-unexpected-miss budget PER BACKEND
+_BACKEND_STATS = {"vmap": {"hits": 0, "misses": 0},
+                  "pallas": {"hits": 0, "misses": 0}}
+# bounded log of recent cache misses: (backend, named key dict).  The
+# trace guard reads it to attach the offending keys -- and their diff
+# against the nearest cached key -- to UnexpectedRetraceError.
+_MISS_LOG: list = []
+_MISS_LOG_MAX = 64
+
+
+def _named_key(fields, key) -> dict:
+    return dict(zip(fields, key, strict=True))
+
+
+def _log_miss(backend: str, named: dict):
+    _MISS_LOG.append({"backend": backend, "key": named})
+    del _MISS_LOG[:-_MISS_LOG_MAX]
 
 
 def regularizer_scale(lam: float, m_total: int, dtype) -> jnp.ndarray:
@@ -67,8 +91,45 @@ def regularizer_scale(lam: float, m_total: int, dtype) -> jnp.ndarray:
 
 
 def executor_cache_stats() -> dict:
-    """Cumulative executor-cache counters: {hits, misses, size}."""
-    return dict(_EXEC_CACHE_STATS, size=len(_EXEC_CACHE))
+    """Cumulative executor-cache counters across ALL engine executor
+    caches: top-level ``{hits, misses, size}`` aggregate the host cache
+    (back-compatible with older callers) PLUS the mesh and LM caches, and
+    ``by_backend`` breaks hits/misses down per backend
+    (``vmap`` / ``pallas`` / ``mesh`` / ``lm``) so a strict session or a
+    benchmark can assert a zero-unexpected-miss budget for exactly the
+    backend it runs on.
+
+    Note the aggregation itself fixes a double-counting-adjacent bug: the
+    mesh cache used to keep NO counters at all, so a mesh executor rebuild
+    was invisible to ``Session.cache_stats()`` miss assertions."""
+    from repro.core.engine import lm as lm_mod
+    from repro.core.engine import mesh as mesh_mod
+    mesh_stats = mesh_mod.mesh_executor_cache_stats()
+    lm_stats = lm_mod.lm_executor_cache_stats()
+    by_backend = {k: dict(v) for k, v in _BACKEND_STATS.items()}
+    by_backend["mesh"] = {"hits": mesh_stats["hits"],
+                          "misses": mesh_stats["misses"]}
+    by_backend["lm"] = {"hits": lm_stats["hits"],
+                        "misses": lm_stats["misses"]}
+    return {
+        "hits": sum(v["hits"] for v in by_backend.values()),
+        "misses": sum(v["misses"] for v in by_backend.values()),
+        "size": len(_EXEC_CACHE) + mesh_stats["size"] + lm_stats["size"],
+        "by_backend": by_backend,
+    }
+
+
+def executor_cache_keys() -> list:
+    """The host cache's current keys as named dicts (see
+    ``EXEC_KEY_FIELDS``) -- what the trace guard diffs a miss against."""
+    return [_named_key(EXEC_KEY_FIELDS, k) for k in _EXEC_CACHE]
+
+
+def executor_miss_log() -> list:
+    """Recent cache misses across the host + mesh caches, newest last:
+    ``{"backend": ..., "key": {field: value}}`` entries."""
+    from repro.core.engine import mesh as mesh_mod
+    return list(_MISS_LOG) + list(mesh_mod._MISS_LOG)
 
 
 def get_host_executor(
@@ -123,16 +184,23 @@ def get_host_executor(
                  bool(batched))
     fn = _EXEC_CACHE.get(cache_key)
     if fn is None:
-        _EXEC_CACHE_STATS["misses"] += 1
         fn = _build_host_executor(plan, loss=loss,
                                   record_history=record_history,
                                   backend=backend, carry_state=carry_state,
                                   batched=batched)
+        # count the miss only once the build SUCCEEDED: incrementing
+        # before the build double-counted a failing configuration (every
+        # retry after the raise re-counted a miss that never populated
+        # the cache, skewing the hit/miss budgets strict mode enforces)
+        _EXEC_CACHE_STATS["misses"] += 1
+        _BACKEND_STATS[backend]["misses"] += 1
+        _log_miss(backend, _named_key(EXEC_KEY_FIELDS, cache_key))
         _EXEC_CACHE[cache_key] = fn
         while len(_EXEC_CACHE) > _EXEC_CACHE_MAX:
             _EXEC_CACHE.popitem(last=False)
     else:
         _EXEC_CACHE_STATS["hits"] += 1
+        _BACKEND_STATS[backend]["hits"] += 1
         _EXEC_CACHE.move_to_end(cache_key)
     return fn
 
@@ -237,7 +305,7 @@ def _build_host_executor(plan: TreePlan, *, loss, record_history,
             for h, leaf_list in h_groups:
                 rows = jnp.asarray(leaf_list)
                 draws = jax.vmap(
-                    lambda k, mb: jax.random.randint(k, (h, ), 0, mb)
+                    lambda k, mb, h=h: jax.random.randint(k, (h,), 0, mb)
                 )(keys_s[rows], leaf_mb[rows])
                 idx_s = idx_s.at[rows, :h].set(draws)
             return idx_s

@@ -83,8 +83,27 @@ Array = jax.Array
 
 _MESH_EXEC_CACHE: OrderedDict = OrderedDict()
 _MESH_EXEC_CACHE_MAX = 16
+# hit/miss counters + named key fields + bounded miss log, mirroring
+# engine.host: the mesh column of executor_cache_stats()["by_backend"]
+# (mesh rebuilds used to be invisible to cache-stats assertions)
+MESH_KEY_FIELDS = ("plan_fingerprint", "loss", "gamma", "axes", "mesh",
+                   "use_kernel", "carry_state", "sync")
+_MESH_CACHE_STATS = {"hits": 0, "misses": 0}
+_MISS_LOG: list = []
+_MISS_LOG_MAX = 64
 
 SYNC_MODES = ("psum", "reduce_scatter")
+
+
+def mesh_executor_cache_stats() -> dict:
+    """Mesh executor-cache counters: {hits, misses, size}."""
+    return dict(_MESH_CACHE_STATS, size=len(_MESH_EXEC_CACHE))
+
+
+def mesh_executor_cache_keys() -> list:
+    """Current mesh-cache keys as named dicts (see ``MESH_KEY_FIELDS``)."""
+    from repro.core.engine.host import _named_key
+    return [_named_key(MESH_KEY_FIELDS, k) for k in _MESH_EXEC_CACHE]
 
 
 def _check_plan_mesh(plan: TreePlan, mesh: Mesh, axes: Sequence[str]):
@@ -111,7 +130,8 @@ def _comp_specs(plan: TreePlan):
     specs = []
     for dd in range(plan.depth):
         pairs = {(int(k), float(f)) for k, f in
-                 zip(plan.compress_kind[dd], plan.compress_frac[dd])}
+                 zip(plan.compress_kind[dd], plan.compress_frac[dd],
+                     strict=True)}
         if len(pairs) != 1:
             raise ValueError(
                 f"mesh backend needs ONE compression spec per depth; depth "
@@ -185,6 +205,7 @@ def get_mesh_executor(
                  sync)
     fn = _MESH_EXEC_CACHE.get(cache_key)
     if fn is not None:
+        _MESH_CACHE_STATS["hits"] += 1
         _MESH_EXEC_CACHE.move_to_end(cache_key)
         return fn
 
@@ -248,7 +269,7 @@ def get_mesh_executor(
         up to the largest group-padded size: the loop-carried replica must
         keep a collective-aligned length for the same reason."""
         p_sz = [-(-d_feat // g) for g in group_dev]
-        d_pad = max(g * p for g, p in zip(group_dev, p_sz))
+        d_pad = max(g * p for g, p in zip(group_dev, p_sz, strict=True))
 
         def shard(dd, x):
             # x must be uniform across the depth-dd group (server state is)
@@ -513,6 +534,12 @@ def get_mesh_executor(
                       spec_in, P()),
             out_specs=(spec_in, spec_in),
         ))
+    # miss counted only after a successful build (see engine.host)
+    from repro.core.engine.host import _named_key
+    _MESH_CACHE_STATS["misses"] += 1
+    _MISS_LOG.append({"backend": "mesh",
+                      "key": _named_key(MESH_KEY_FIELDS, cache_key)})
+    del _MISS_LOG[:-_MISS_LOG_MAX]
     _MESH_EXEC_CACHE[cache_key] = fn
     while len(_MESH_EXEC_CACHE) > _MESH_EXEC_CACHE_MAX:
         _MESH_EXEC_CACHE.popitem(last=False)

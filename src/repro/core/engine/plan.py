@@ -98,6 +98,66 @@ class LevelSpec:
     rounds: int       # T: rounds every node at this depth runs
 
 
+# ---------------------------------------------------------------------------
+# fingerprint field registry
+# ---------------------------------------------------------------------------
+# Every field of :class:`TreePlan` MUST be classified below; the executor
+# caches key on ``plan.fingerprint``, so a compiled-behavior field that is
+# not hashed lets two semantically distinct plans share one compiled
+# program (the cache-key bug class fixed ad hoc in PR 4 -- lambda -- and
+# PR 6 -- compression).  ``repro.analysis.plan_check.audit_fingerprint``
+# statically checks this registry against ``dataclasses.fields(TreePlan)``
+# and fails on any unclassified field, so adding a field without deciding
+# its cache-key status no longer compiles silently.
+#
+#   * BEHAVIOR fields are hashed into the fingerprint (arrays as raw
+#     bytes, scalars through ``repr``).
+#   * DERIVED fields are pure functions of the behavior fields (verified
+#     numerically by the plan checker), so hashing them would be
+#     redundant -- a derived field can never distinguish two plans whose
+#     behavior fields agree.
+#   * METADATA fields never reach a trace (display / diff bookkeeping
+#     only) and are deliberately outside the fingerprint: renaming a leaf
+#     must NOT retrace.
+FINGERPRINT_ARRAY_FIELDS: Tuple[str, ...] = (
+    "solve_mask", "sync_mask", "refresh_mask", "alpha_scale", "w_coeff",
+    "group_ids", "child_ids", "child_sizes", "leaf_sizes", "leaf_offsets",
+    "leaf_h", "compress_kind", "compress_frac")
+FINGERPRINT_SCALAR_FIELDS: Tuple[str, ...] = (
+    "n_leaves", "m_b", "m_total", "n_ticks", "depth", "h_max",
+    "weighting", "n_groups")
+DERIVED_FIELDS: Tuple[str, ...] = (
+    "root_sync",     # == sync_mask[:, 0, :].max(axis=1) > 0
+    "n_children",    # == per-depth max(child_ids) + 1
+    "levels",        # re-detectable from the masks/group structure
+    "fingerprint",   # the hash itself
+)
+METADATA_FIELDS: Tuple[str, ...] = ("leaf_names",)
+
+
+def fingerprint_payload(plan: "TreePlan") -> bytes:
+    """The canonical byte serialization of every compiled-behavior field
+    of ``plan`` (the registry above), in registry order.  This is the
+    exact payload :func:`compute_fingerprint` hashes -- exposed so the
+    analysis layer can audit coverage and collision-freedom."""
+    chunks = []
+    for name in FINGERPRINT_ARRAY_FIELDS:
+        a = np.ascontiguousarray(getattr(plan, name))
+        # shape + dtype are part of the serialization: two arrays with
+        # identical bytes but different shapes must not collide
+        chunks.append(repr((name, a.shape, a.dtype.str)).encode())
+        chunks.append(a.tobytes())
+    chunks.append(repr(tuple(
+        (name, getattr(plan, name))
+        for name in FINGERPRINT_SCALAR_FIELDS)).encode())
+    return b"".join(chunks)
+
+
+def compute_fingerprint(plan: "TreePlan") -> str:
+    """SHA-1 over :func:`fingerprint_payload` -- the executor cache key."""
+    return hashlib.sha1(fingerprint_payload(plan)).hexdigest()
+
+
 @dataclasses.dataclass(frozen=True)
 class TreePlan:
     """The lowered schedule.  All arrays are host numpy; executors convert."""
@@ -150,17 +210,11 @@ class TreePlan:
                 self, "compress_frac",
                 np.zeros((self.depth, self.n_leaves), np.float32))
         if not self.fingerprint:
-            h = hashlib.sha1()
-            for a in (self.solve_mask, self.sync_mask, self.refresh_mask,
-                      self.alpha_scale, self.w_coeff, self.group_ids,
-                      self.child_ids, self.child_sizes,
-                      self.leaf_sizes, self.leaf_offsets, self.leaf_h,
-                      self.compress_kind, self.compress_frac):
-                h.update(np.ascontiguousarray(a).tobytes())
-            h.update(repr((self.n_leaves, self.m_b, self.m_total,
-                           self.n_ticks, self.depth, self.h_max,
-                           self.weighting, self.n_groups)).encode())
-            object.__setattr__(self, "fingerprint", h.hexdigest())
+            # hash the canonical serialization of the behavior-field
+            # registry (fingerprint_payload) -- the analysis layer audits
+            # that the registry covers every compiled-behavior field
+            object.__setattr__(self, "fingerprint",
+                               compute_fingerprint(self))
 
     @property
     def has_compression(self) -> bool:

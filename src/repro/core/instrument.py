@@ -89,7 +89,8 @@ def history_from_series(
 ) -> List[dict]:
     """Assemble the legacy history-dict list from aligned series."""
     out = []
-    for t, (tm, dv, pv) in enumerate(zip(times, duals, primals)):
+    for t, (tm, dv, pv) in enumerate(zip(times, duals, primals,
+                                         strict=True)):
         out.append({"round": t, "time": float(tm), "dual": float(dv),
                     "primal": float(pv), "gap": float(pv) - float(dv)})
     return out

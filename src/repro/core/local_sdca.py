@@ -20,7 +20,7 @@ from repro.core.dual import Loss
 Array = jax.Array
 
 
-@functools.partial(
+@functools.partial(  # analysis: allow(jit-outside-engine) reference local solver, jit'd standalone for tests/benchmarks
     jax.jit, static_argnames=("loss", "num_steps", "m_total", "step_size")
 )
 def local_sdca(

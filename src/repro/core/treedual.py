@@ -132,7 +132,7 @@ def _solve_node(
         return alpha.at[sl].add(da), w + dw
 
     K = len(node.children)
-    for t in range(node.rounds):
+    for _t in range(node.rounds):
         key, *subkeys = jax.random.split(key, 1 + K)
         dws = []
         new_alpha = alpha

@@ -39,7 +39,7 @@ def make_abstract_mesh(shape: Tuple[int, ...],
     try:
         return AbstractMesh(tuple(shape), tuple(axes))
     except TypeError:
-        return AbstractMesh(tuple(zip(axes, shape)))
+        return AbstractMesh(tuple(zip(axes, shape, strict=True)))
 
 
 def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:

@@ -276,7 +276,7 @@ def run_treesync(arch: str, mesh_name: str = "multi",
             lambda t: jnp.broadcast_to(jnp.mean(t, axis=0, keepdims=True),
                                        t.shape), params)
 
-    comp_sync = jax.jit(mean_pods, in_shardings=(psh_stacked,),
+    comp_sync = jax.jit(mean_pods, in_shardings=(psh_stacked,),  # analysis: allow(jit-outside-engine) AOT-lowered for collective analysis, never dispatched
                         out_shardings=psh_stacked,
                         donate_argnums=(0,)).lower(pshape_stacked).compile()
     sync_an = rf.collective_summary(
@@ -332,7 +332,8 @@ def run_treesync(arch: str, mesh_name: str = "multi",
         flat_t, tdef = jax.tree.flatten(params)
         flat_r = jax.tree.leaves(residual)
         flat_a = jax.tree.leaves(anchor)
-        outs = [one(t, r, a) for t, r, a in zip(flat_t, flat_r, flat_a)]
+        outs = [one(t, r, a) for t, r, a in zip(flat_t, flat_r, flat_a,
+                                                strict=True)]
         return (tdef.unflatten([o[0] for o in outs]),
                 tdef.unflatten([o[1] for o in outs]))
 
@@ -342,7 +343,7 @@ def run_treesync(arch: str, mesh_name: str = "multi",
     rsh = jax.tree.map(
         lambda s: s, psh_stacked,
         is_leaf=lambda x: isinstance(x, NamedSharding))
-    comp_sync8 = jax.jit(
+    comp_sync8 = jax.jit(  # analysis: allow(jit-outside-engine) AOT-lowered for collective analysis, never dispatched
         mean_pods_int8, in_shardings=(psh_stacked, rsh, psh),
         out_shardings=(psh_stacked, rsh),
         donate_argnums=(0, 1)).lower(pshape_stacked, rshape,

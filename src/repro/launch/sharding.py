@@ -135,9 +135,10 @@ def _resolve(
     for i in range(n_lead):
         spec.append(None if not lead_axes else _fit(
             shape[i], lead_axes, mesh, set(), None))
-    used: set = set(a for s in spec if s for a in (s if isinstance(s, tuple) else (s,)))
+    used: set = {a for s in spec if s
+                 for a in (s if isinstance(s, tuple) else (s,))}
     heads = _head_counts(cfg)
-    for dim, name in zip(shape[n_lead:], logical):
+    for dim, name in zip(shape[n_lead:], logical, strict=False):
         if name is None:
             spec.append(None)
             continue
@@ -237,7 +238,7 @@ def opt_state_specs(cfg: ModelConfig, opt_shape: PyTree, params_shape: PyTree,
         out = list(spec) + [None] * (len(shape) - len(spec))
         used = {a for s in out if s
                 for a in (s if isinstance(s, tuple) else (s,))}
-        for i, (dim, s) in enumerate(zip(shape, out)):
+        for i, (dim, s) in enumerate(zip(shape, out, strict=False)):
             if s is not None:
                 continue
             got = _fit(dim, z, mesh, used, None)
@@ -361,8 +362,9 @@ def explain_shardings(cfg: ModelConfig, params_shape: PyTree, mesh: Mesh,
     specs = param_specs(cfg, params_shape, mesh, rules, dropped)
     total = 0
     sharded = 0
-    for (path, leaf), (_, spec) in zip(
-            _flat_with_path(params_shape), _flat_with_path(specs)):
+    for (_path, leaf), (_, spec) in zip(
+            _flat_with_path(params_shape), _flat_with_path(specs),
+            strict=True):
         n = 1
         for d in leaf.shape:
             n *= d

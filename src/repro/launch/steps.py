@@ -197,7 +197,7 @@ def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
             # scans under-count in cost_analysis; unroll when analyzing
             unroll_microbatches=not cfg.scan_layers)
         metrics_sh = NamedSharding(mesh, P())
-        jitted = jax.jit(
+        jitted = jax.jit(  # analysis: allow(jit-outside-engine) CellProgram owns its one jitted step; cached on the program object
             step,
             in_shardings=(psh, osh, bsh),
             out_shardings=(psh, osh, metrics_sh),
@@ -213,7 +213,7 @@ def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
         csh = sh.to_named(sh.cache_specs(cfg, cshape, mesh, rules), mesh)
         logits_sh = NamedSharding(
             mesh, P(sh._batch_axes(mesh, rules, shape.global_batch), None))
-        jitted = jax.jit(step, in_shardings=(psh, bsh),
+        jitted = jax.jit(step, in_shardings=(psh, bsh),  # analysis: allow(jit-outside-engine) CellProgram owns its one jitted step; cached on the program object
                          out_shardings=(logits_sh, csh))
         return CellProgram("prefill", jitted, (pshape, batch),
                            (psh, bsh), notes)
@@ -224,7 +224,7 @@ def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
     csh = sh.to_named(sh.cache_specs(cfg, cshape, mesh, rules), mesh)
     tok_sh = NamedSharding(
         mesh, P(sh._batch_axes(mesh, rules, shape.global_batch), None))
-    jitted = jax.jit(step, in_shardings=(psh, csh, tok_sh),
+    jitted = jax.jit(step, in_shardings=(psh, csh, tok_sh),  # analysis: allow(jit-outside-engine) CellProgram owns its one jitted step; cached on the program object
                      out_shardings=(tok_sh, csh), donate_argnums=(1,))
     return CellProgram("decode", jitted, (pshape, cshape, batch["tokens"]),
                        (psh, csh, tok_sh), notes)

@@ -48,7 +48,7 @@ def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
     assert len(logical) == x.ndim, (logical, x.shape)
     used: set = set()
     spec = []
-    for dim, name in zip(x.shape, logical):
+    for dim, name in zip(x.shape, logical, strict=True):
         if name is None:
             spec.append(None)
             continue

@@ -180,7 +180,7 @@ def forward_hidden(cfg: ModelConfig, params, batch: Dict[str, Array]
                                        params["blocks"])
         else:  # unrolled: analysis-grade HLO (see ModelConfig.scan_layers)
             for i in range(n_full):
-                blk = jax.tree.map(lambda t: t[i], params["blocks"])
+                blk = jax.tree.map(lambda t, i=i: t[i], params["blocks"])
                 x, a = block_fn(blk, x)
                 aux = aux + a
     for i, kind in enumerate(tail):
@@ -288,11 +288,11 @@ def decode_step(cfg: ModelConfig, params, cache: PyTree, tokens: Array
         else:
             nblocks = cache["blocks"]
             for i in range(n_full):
-                blk = jax.tree.map(lambda t: t[i], params["blocks"])
-                bc = jax.tree.map(lambda t: t[i], cache["blocks"])
+                blk = jax.tree.map(lambda t, i=i: t[i], params["blocks"])
+                bc = jax.tree.map(lambda t, i=i: t[i], cache["blocks"])
                 x, nc = body(x, (blk, bc))
                 nblocks = jax.tree.map(
-                    lambda full, new: full.at[i].set(new), nblocks, nc)
+                    lambda full, new, i=i: full.at[i].set(new), nblocks, nc)
             new_cache["blocks"] = nblocks
     if tail:
         new_cache["tail"] = []
@@ -443,7 +443,7 @@ def prefill(cfg: ModelConfig, params, batch: Dict[str, Array],
         else:
             caches = []
             for i in range(n_full):
-                blk = jax.tree.map(lambda t: t[i], params["blocks"])
+                blk = jax.tree.map(lambda t, i=i: t[i], params["blocks"])
                 x, nc = body(x, blk)
                 caches.append(nc)
             cache["blocks"] = jax.tree.map(

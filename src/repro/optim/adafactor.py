@@ -83,7 +83,7 @@ def make_adafactor(
         flat_p, tdef = jax.tree.flatten(params)
         flat_g = jax.tree.leaves(grads)
         flat_s, sdef = jax.tree.flatten(state["v"], is_leaf=is_state)
-        out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s, strict=True)]
         new_p = tdef.unflatten([o[0] for o in out])
         new_v = sdef.unflatten([o[1] for o in out])
         return new_p, {"step": step, "v": new_v}

@@ -83,7 +83,8 @@ def make_adamw(
         flat_mu = jax.tree.leaves(state["mu"])
         flat_nu = jax.tree.leaves(state["nu"])
         out = [upd(p, g, m, n)
-               for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+               for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu,
+                                     strict=True)]
         new_p = tdef.unflatten([o[0] for o in out])
         new_mu = tdef.unflatten([o[1] for o in out])
         new_nu = tdef.unflatten([o[2] for o in out])

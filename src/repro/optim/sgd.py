@@ -40,7 +40,7 @@ def make_sgd(lr: float = 0.1, momentum: float = 0.9,
         flat_p, tdef = jax.tree.flatten(params)
         flat_g = jax.tree.leaves(grads)
         flat_m = jax.tree.leaves(state["mom"])
-        out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+        out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m, strict=True)]
         return (tdef.unflatten([o[0] for o in out]),
                 {"step": step, "mom": tdef.unflatten([o[1] for o in out])})
 

@@ -290,7 +290,7 @@ def test_optimal_h_monotone_in_delay_fig4b():
                 h_max=10**6)
     hs = [optimal_h(t_delay=r * base["t_lp"], **base)[0]
           for r in (0.0, 10.0, 1e3, 1e5, 1e7)]
-    assert all(b >= a for a, b in zip(hs, hs[1:])), hs
+    assert all(b >= a for a, b in zip(hs, hs[1:], strict=False)), hs
     assert hs[-1] > hs[0]
 
 

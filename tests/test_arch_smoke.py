@@ -37,7 +37,8 @@ def test_train_step_shapes_and_finite(arch, rng):
     assert np.isfinite(loss) and loss > 0, loss
     # params updated, shapes preserved, all finite
     changed = 0
-    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)):
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2),
+                    strict=True):
         assert a.shape == b.shape and a.dtype == b.dtype
         assert np.isfinite(np.asarray(b, np.float32)).all()
         changed += int(not np.array_equal(np.asarray(a), np.asarray(b)))

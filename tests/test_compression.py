@@ -207,7 +207,7 @@ def test_compressed_sweep_members_match_standalone(small_problem):
     sess = Session.compile(prob, topo, Schedule(compression="int8"))
     lams = [0.2, 0.05]
     rs = sess.sweep(lams=lams, rounds=8, record_history=False)
-    for lam, a in zip(lams, rs.alphas):
+    for lam, a in zip(lams, rs.alphas, strict=True):
         ref = sess.run(rounds=8, key=jax.random.PRNGKey(0), lam=lam,
                        record_history=False)
         np.testing.assert_array_equal(np.asarray(a), np.asarray(ref.alpha))

@@ -72,7 +72,7 @@ def test_coord_delta_matches_scipy_numeric_optimum(name):
                                 (0.05, 0.9, 0.1)]:
             alpha = jnp.float32(alpha0 * y_ if name != "squared" else alpha0)
 
-            def obj(d):
+            def obj(d, wx=wx, xsq=xsq, alpha=alpha):
                 return float(-0.5 * xsq * d * d - wx * d
                              - loss.conj_neg(alpha + d, y))
 
@@ -119,7 +119,7 @@ def test_weak_duality_and_ridge_optimum():
     gap_star = D.duality_gap(a_star, X, y, D.squared, lam)
     assert float(gap_star) < 1e-3  # strong duality at the optimum
     # optimum is a stationary point: numeric gradient of D ~ 0
-    g = jax.grad(lambda a: D.dual_value(a, X, y, D.squared, lam))(a_star)
+    g = jax.grad(lambda a: D.dual_value(a, X, y, D.squared, lam))(a_star)  # analysis: allow(static-operand-capture) fixed lam, single trace by construction
     np.testing.assert_allclose(np.asarray(g), 0.0, atol=1e-5)
 
 

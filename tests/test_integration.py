@@ -89,7 +89,8 @@ def test_elastic_shrink_grow_roundtrip():
     assert np.isfinite(float(m["loss"]))
     # grow back
     back = remesh_state(to_host(p2), sh_big)
-    for a, b in zip(jax.tree.leaves(to_host(back)), jax.tree.leaves(p2)):
+    for a, b in zip(jax.tree.leaves(to_host(back)), jax.tree.leaves(p2),
+                    strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

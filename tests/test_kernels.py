@@ -173,7 +173,7 @@ def test_sdca_solve_increases_dual_and_converges():
     w = jnp.zeros((X.shape[1],))
     key = jax.random.PRNGKey(0)
     gaps = []
-    for t in range(30):
+    for _t in range(30):
         key, k = jax.random.split(key)
         alpha, w, _ = sdca_block_solve(Xb, yb, alpha, w, k, loss=loss,
                                        lam=lam, m_total=m, num_steps=256)

@@ -30,7 +30,8 @@ CFG = dataclasses.replace(
 
 def _trees_equal(a, b):
     return all(bool((x == y).all())
-               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b),
+                          strict=True))
 
 
 def _session(periods=(2,), **topo_kw):
@@ -84,7 +85,8 @@ def test_sync_periods_match_plain_dp():
                                        lm_batch(CFG, 8, 16, i, seed=0))
 
     avg = res.consensus()
-    for a, b in zip(jax.tree.leaves(avg), jax.tree.leaves(params)):
+    for a, b in zip(jax.tree.leaves(avg), jax.tree.leaves(params),
+                    strict=True):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
                                    rtol=1e-5, atol=1e-6)

@@ -23,7 +23,8 @@ def test_checkpoint_roundtrip(tmp_path):
     mgr.save(3, s, metadata={"loss": 1.23})
     step, restored = mgr.restore(_state())
     assert step == 3
-    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(s)):
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(s),
+                    strict=True):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32))
     assert restored["bf16"].dtype == jnp.bfloat16
@@ -63,7 +64,7 @@ def test_checkpoint_mixed_dtype_nested_roundtrip(tmp_path):
     mgr.save(5, s)
     step, r = mgr.restore(jax.tree.map(np.zeros_like, s))
     assert step == 5
-    for a, b in zip(jax.tree.leaves(r), jax.tree.leaves(s)):
+    for a, b in zip(jax.tree.leaves(r), jax.tree.leaves(s), strict=True):
         assert a.dtype == b.dtype, (a.dtype, b.dtype)
         np.testing.assert_array_equal(np.asarray(a, np.float64),
                                       np.asarray(b, np.float64))
@@ -131,7 +132,8 @@ def test_elastic_remesh_preserves_values():
     sh = jax.tree.map(lambda t: NamedSharding(mesh, P()), s)
     placed = remesh_state(to_host(s), sh)
     back = to_host(placed)
-    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(s)):
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(s),
+                    strict=True):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32))
 
@@ -166,7 +168,7 @@ def test_adaptive_schedule_monotone_in_delay():
                          h_max=10**6, hysteresis=1.0)
     hs = [s.replan(t_lp=4e-5, t_delay=4e-5 * r, t_cp=3e-5)
           for r in (0, 10, 1e3, 1e5)]
-    assert all(b >= a for a, b in zip(hs, hs[1:])), hs
+    assert all(b >= a for a, b in zip(hs, hs[1:], strict=False)), hs
     assert hs[-1] > hs[0]
 
 

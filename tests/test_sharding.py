@@ -136,7 +136,8 @@ def test_end_to_end_sharded_train_step(mesh):
     p2, o2, m2 = cell.jitted(p_sh, o_sh, b_sh)
     np.testing.assert_allclose(float(m2["loss"]), float(m_ref["loss"]),
                                rtol=1e-3)  # bf16 reduction-order noise
-    for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(p_ref)):
+    for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(p_ref),
+                    strict=True):
         np.testing.assert_allclose(
             np.asarray(a, np.float32), np.asarray(b, np.float32),
             rtol=5e-3, atol=1e-3)  # Adam amplifies bf16 grad noise near eps

@@ -158,8 +158,9 @@ def test_straggler_session_drops_stragglers_and_stays_consistent():
     # are monotone
     times = [h["time"] for h in res.history]
     sync_times = [h["time_sync"] for h in res.history if "time_sync" in h]
-    assert all(b > a for a, b in zip(times, times[1:]))
-    assert all(b > a for a, b in zip(sync_times, sync_times[1:]))
+    assert all(b > a for a, b in zip(times, times[1:], strict=False))
+    assert all(b > a
+               for a, b in zip(sync_times, sync_times[1:], strict=False))
     assert times[-1] < sync_times[-1]
     # and the solve still converges
     assert res.gaps[-1] < 0.05 * res.gaps[0]
@@ -180,7 +181,7 @@ def test_straggler_session_warm_restart_continues_clock():
     hist = r1.history + r2.history
     assert [h["round"] for h in hist] == list(range(7))
     times = [h["time"] for h in hist]
-    assert all(b > a for a, b in zip(times, times[1:])), times
+    assert all(b > a for a, b in zip(times, times[1:], strict=False)), times
 
 
 def test_warm_restart_history_concatenates_sync():
@@ -196,7 +197,7 @@ def test_warm_restart_history_concatenates_sync():
     hist = r1.history + r2.history
     assert [h["round"] for h in hist] == list(range(9))
     times = [h["time"] for h in hist]
-    assert all(b > a for a, b in zip(times, times[1:])), times
+    assert all(b > a for a, b in zip(times, times[1:], strict=False)), times
     # identical to one long run, entries included
     full = sess.run(rounds=8, key=key)
     np.testing.assert_array_equal(np.asarray(r2.alpha),

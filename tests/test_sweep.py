@@ -357,7 +357,7 @@ def test_continuation_path_monotone_and_reproducible():
     rs = sess.sweep(lams=lams, continuation=True, record_history=False)
     norms = [float(np.linalg.norm(np.asarray(rs[i].w)))
              for i in range(len(lams))]
-    assert all(b > a for a, b in zip(norms, norms[1:])), norms
+    assert all(b > a for a, b in zip(norms, norms[1:], strict=False)), norms
 
     # member i == standalone run warm-started from member i-1's dual
     prev = rs[1]

@@ -58,7 +58,8 @@ def test_sync_special_case_matches_dp():
         params_ref, opt_ref, m_ref = dp_step(params_ref, opt_ref, batch)
 
     avg = tsy.consensus_params(state)
-    for a, b in zip(jax.tree.leaves(avg), jax.tree.leaves(params_ref)):
+    for a, b in zip(jax.tree.leaves(avg), jax.tree.leaves(params_ref),
+                    strict=True):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
                                    rtol=1e-5, atol=1e-6)
@@ -99,7 +100,7 @@ def test_replica_divergence_and_resync():
 
     key = jax.random.PRNGKey(5)
     spreads = []
-    for i in range(6):
+    for _i in range(6):
         key, k = jax.random.split(key)
         # distinct per-replica batches so replicas actually diverge
         state, _ = step(state, tsy.split_batch(_batch(k, B=8 * 1), n)
