@@ -27,6 +27,12 @@ Rule catalog (``docs/analysis.md`` has the rationale in full):
     No mutable literal defaults in frozen dataclasses; plans and configs
     are hashed/compared, and a shared mutable default aliases state
     across instances.
+``undonated-carry``
+    Engine jits of chunk-carry step functions (``step*`` /
+    ``program_state*``) must pass ``donate_argnums``: callers rebind
+    ``state = step(...)`` every chunk, so an undonated carry doubles the
+    peak state footprint and forces XLA to allocate fresh buffers per
+    round instead of updating in place.
 
 Waivers: append ``# analysis: allow(<rule-name>)`` on the offending
 line (or the ``def``/``class`` line that owns the body) -- every waiver
@@ -67,7 +73,16 @@ NUMPY_RANDOM_ATTR = "random"   # np.random.* inside a traced body
 # runtime operands of the schedule engine: these names reaching a traced
 # body as free variables (closure captures) instead of arguments is the
 # retrace-per-sweep-point bug class
-RUNTIME_OPERANDS = {"lam", "lr", "local_h", "periods", "participation"}
+RUNTIME_OPERANDS = {"lam", "lr", "local_h", "periods", "participation",
+                    "acceleration"}
+
+# chunk-carry step functions (rebind ``state = step(...)`` per chunk);
+# jitting one in the engine without buffer donation doubles the carry's
+# peak footprint -- see the ``undonated-carry`` rule
+CARRY_STEP_PREFIXES = ("step", "program_state")
+# transforms a carry step may be wrapped in on its way into jax.jit
+_CARRY_WRAPPERS = {"jax.vmap", "vmap", "shard_map",
+                   "jax.experimental.shard_map.shard_map"}
 
 _ALLOW_PREFIX = "# analysis: allow("
 
@@ -200,7 +215,27 @@ class _Analyzer(ast.NodeVisitor):
         for name in traced_names:
             if name in named_defs:
                 self.traced_defs.add(named_defs[name])
-        # closure: defs nested inside a traced def are traced
+        # closure, to a fixed point, over two edges:
+        #   * nesting -- a def inside a traced def runs under the trace;
+        #   * calls -- a same-file def CALLED from a traced body executes
+        #     under the trace too, so its parameters are tracers/operands
+        #     there (without this edge, an operand threaded through a
+        #     helper's argument list mis-reports as a closure capture)
+        calls_in: dict = {}             # def node -> called names
+        for node in ast.walk(self.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.Lambda)):
+                continue
+            names: Set[str] = set()
+            body = node.body if not isinstance(node, ast.Lambda) \
+                else [node.body]
+            for stmt in body:
+                for sub in ast.walk(stmt):
+                    if isinstance(sub, ast.Call):
+                        cn = _call_name(sub.func)
+                        if cn is not None and "." not in cn:
+                            names.add(cn)
+            calls_in[node] = names
         changed = True
         while changed:
             changed = False
@@ -217,6 +252,13 @@ class _Analyzer(ast.NodeVisitor):
                         changed = True
                         break
                     p = self._parents.get(p)
+            for caller in list(self.traced_defs):
+                for cn in calls_in.get(caller, ()):
+                    callee = named_defs.get(cn)
+                    if callee is not None and \
+                            callee not in self.traced_defs:
+                        self.traced_defs.add(callee)
+                        changed = True
         return self.traced_defs
 
     def _owning_def(self, node: ast.AST) -> Optional[ast.AST]:
@@ -242,6 +284,7 @@ class _Analyzer(ast.NodeVisitor):
         self._rule_traced_bodies()
         self._rule_jit_location()
         self._rule_frozen_defaults()
+        self._rule_undonated_carry()
         return self.findings
 
     def _rule_traced_bodies(self):
@@ -337,6 +380,52 @@ class _Analyzer(ast.NodeVisitor):
                     "through the engine executors, or waive with "
                     "'# analysis: allow(jit-outside-engine)' and a "
                     "reason")
+
+    def _rule_undonated_carry(self):
+        """Engine-only: a ``jax.jit`` whose jitted function is a
+        chunk-carry step (name ``step*`` / ``program_state*``, possibly
+        wrapped in ``jax.vmap`` / ``shard_map``) must donate the carry
+        via ``donate_argnums`` -- callers rebind ``state = step(...)``
+        every chunk, so the previous carry is dead the moment the call
+        dispatches and its buffers should be reused in place."""
+        norm = self.path.replace("\\", "/")
+        anchor = norm.find("src/repro/")
+        rel = norm[anchor:] if anchor >= 0 else norm
+        if not rel.startswith("src/repro/core/engine/"):
+            return
+
+        def _carry_target(arg) -> Optional[str]:
+            # unwrap vmap/shard_map layers down to the named function
+            while isinstance(arg, ast.Call) and \
+                    _call_name(arg.func) in _CARRY_WRAPPERS:
+                if not arg.args:
+                    return None
+                arg = arg.args[0]
+            name = _call_name(arg)
+            if name is not None and any(
+                    name.split(".")[-1].startswith(p)
+                    for p in CARRY_STEP_PREFIXES):
+                return name
+            return None
+
+        for node in ast.walk(self.tree):
+            if not (isinstance(node, ast.Call)
+                    and _call_name(node.func) in ("jax.jit", "jit",
+                                                  "jax.pjit", "pjit")
+                    and node.args):
+                continue
+            target = _carry_target(node.args[0])
+            if target is None:
+                continue
+            if any(kw.arg == "donate_argnums" for kw in node.keywords):
+                continue
+            self._emit(
+                "undonated-carry", node,
+                f"jax.jit of chunk-carry step {target!r} without "
+                "donate_argnums: callers rebind state = step(...) every "
+                "chunk, so the undonated carry doubles the peak state "
+                "footprint (donate the state argument, or waive with "
+                "'# analysis: allow(undonated-carry)' and a reason)")
 
     def _rule_frozen_defaults(self):
         for node in ast.walk(self.tree):

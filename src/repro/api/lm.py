@@ -269,6 +269,9 @@ class LMSession:
         if warm_start is not None:
             state = warm_start.state if isinstance(warm_start, LMResult) \
                 else warm_start
+            # the step executor donates its state carry; copy so the
+            # caller's warm-start buffers stay valid after this run
+            state = jax.tree.map(jnp.copy, state)
         else:
             state = self.init_state(key)
         start = int(state.step)

@@ -291,6 +291,14 @@ class Schedule:
       compress, fast ones stay exact).  The resolved specs ride on
       ``ResolvedSchedule.compression`` into plan compilation, and the
       simulated clocks charge the compressed link delays.
+    * ``acceleration``: Nesterov-style momentum coefficient on the server
+      combine (Ma et al., arXiv 1711.05305) in ``[0, 1]``.  ``None``
+      (default) runs the plain ``"sdca"`` method; any float -- including
+      ``0.0``, which is bit-identical to plain -- selects
+      ``get_method("sdca_acc")``, with the coefficient a RUNTIME scalar
+      operand (zero retraces across different values).  ``rounds="auto"``
+      plans under the accelerated per-round factor, so momentum buys
+      fewer root rounds for the same bound.
     """
     rounds: Union[int, str, None] = None
     local_steps: Union[int, Sequence[int], Dict[str, int], None] = None
@@ -299,6 +307,14 @@ class Schedule:
     delay: Optional[DelayModel] = None
     h_cap: Optional[int] = None
     compression: Union[str, Sequence, None] = None
+    acceleration: Optional[float] = None
+
+    def __post_init__(self):
+        if self.acceleration is not None \
+                and not 0.0 <= float(self.acceleration) <= 1.0:
+            raise ValueError(
+                f"acceleration must be in [0, 1] (0 = plain SDCA, 1 = full "
+                f"Nesterov rate); got {self.acceleration}")
 
     @classmethod
     def auto(cls, t_total: float, *, C: Union[float, str] = 0.5,
@@ -307,16 +323,18 @@ class Schedule:
              pilot_rounds: int = 8,
              straggler: Optional[StragglerModel] = None,
              skip_max: int = 3, h_cap: Optional[int] = None,
-             compression: Union[str, Sequence, None] = None) -> "Schedule":
+             compression: Union[str, Sequence, None] = None,
+             acceleration: Optional[float] = None) -> "Schedule":
         """Shorthand for ``Schedule(rounds="auto", delay=DelayModel(...))``
         (``C="auto"`` calibrates C from a pilot run at compile time;
         ``straggler=`` switches to the straggler-aware joint (H, skip)
         planner; ``h_cap=`` keeps the planned H a runtime input so
         adaptive sessions can replan it without retracing;
         ``compression="auto"`` lets the same eq.-(12) machinery choose
-        per-level delta compression)."""
+        per-level delta compression; ``acceleration=`` runs and plans the
+        accelerated server-momentum flavor)."""
         return cls(rounds="auto", weighting=weighting, h_cap=h_cap,
-                   compression=compression,
+                   compression=compression, acceleration=acceleration,
                    delay=DelayModel(t_total=t_total, C=C, delta=delta,
                                     t_cp=t_cp, h_max=h_max,
                                     pilot_rounds=pilot_rounds,
@@ -435,7 +453,8 @@ class Schedule:
             # the diluted improvement constant, innermost-first
             comp_rows = choose_compression(
                 levels, C=dm.C, delta=delta, t_total=dm.t_total, t_lp=t_lp,
-                t_cp=t_cp, h_max=dm.h_max)
+                t_cp=t_cp, h_max=dm.h_max,
+                acceleration=self.acceleration or 0.0)
             comp_levels = [r["spec"] for r in comp_rows]
             comp = tuple(reversed(comp_levels))  # innermost-first -> top-down
         else:
@@ -451,7 +470,8 @@ class Schedule:
             straggler=dm.straggler, skip_max=dm.skip_max,
             base_delays=(topology.leaf_sync_delays()
                          if dm.straggler is not None else None),
-            compression=comp_levels)
+            compression=comp_levels,
+            acceleration=self.acceleration or 0.0)
         # lp[0] plans the leaves' H; lp[i] (i >= 1) plans how many rounds of
         # the level below one sync at internal depth D-1-i amortizes; the
         # root's own count comes from the time budget.

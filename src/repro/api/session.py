@@ -65,6 +65,24 @@ def _objective(alpha: Array, X: Array, y: Array, loss, lam):
             dual_mod.primal_value(w, X, y, loss, lam))
 
 
+def materialize_history(history) -> None:
+    """Pull a deferred history's objective values to the host in ONE
+    explicit ``jax.device_get`` (legal even under the strict host-sync
+    guard, which blocks only IMPLICIT transfers).  ``Session.run`` records
+    device scalars and calls this at stream/checkpoint/exit points; the
+    sweep layer's sequential path defers further and materializes every
+    member's history together, outside the member loop."""
+    pending = [e for e in history if not isinstance(e["dual"], float)]
+    if not pending:
+        return
+    vals = jax.device_get([(e["dual"], e["primal"]) for e in pending])
+    for e, (dv, pv) in zip(pending, vals, strict=True):
+        # recompute the gap as a host float64 subtraction so the entry is
+        # bit-identical to eagerly-recorded histories
+        e["dual"], e["primal"] = float(dv), float(pv)
+        e["gap"] = e["primal"] - e["dual"]
+
+
 class Session:
     """A compiled (problem, topology, schedule, backend) binding.
 
@@ -78,7 +96,8 @@ class Session:
     def __init__(self, problem: Problem, topology: Topology,
                  resolved: ResolvedSchedule, backend: str, plan, fn,
                  mesh=None, mesh_axes=None, mesh_use_kernel: bool = True,
-                 mesh_sync: str = "psum"):
+                 mesh_sync: str = "psum",
+                 acceleration: Optional[float] = None):
         self.problem = problem
         self.topology = topology
         self.resolved = resolved
@@ -91,6 +110,10 @@ class Session:
         self._mesh_axes = mesh_axes
         self._mesh_use_kernel = mesh_use_kernel
         self._mesh_sync = mesh_sync
+        # None = plain "sdca"; a float (0.0 included) = the "sdca_acc"
+        # method with this server-momentum coefficient as the default
+        # runtime operand
+        self.acceleration = acceleration
         if backend == "mesh":
             from jax.sharding import NamedSharding, PartitionSpec as P
             spec = P(tuple(reversed(mesh_axes)))
@@ -163,6 +186,12 @@ class Session:
             # schedule would ignore the fitted C, so don't pay the pilot
             schedule, fitted_C = _calibrate_C(problem, topology, schedule)
         resolved = schedule.resolve(topology)
+        # Schedule(acceleration=) selects the accelerated method flavor --
+        # a structural executor variant; the coefficient itself stays a
+        # runtime operand of the compiled programs
+        acceleration = schedule.acceleration
+        method = get_method("sdca_acc" if acceleration is not None
+                            else "sdca")
         plan = plan_mod.compile_tree(resolved.chunk_tree,
                                      weighting=resolved.weighting,
                                      compression=resolved.compression)
@@ -174,10 +203,11 @@ class Session:
         guard = guard_mod.as_trace_guard(strict)
 
         if backend in ("vmap", "pallas"):
-            fn = get_method("sdca").executor(
+            fn = method.executor(
                 plan=plan, backend=backend, loss=problem.loss,
                 record_history=False)
-            sess = cls(problem, topology, resolved, backend, plan, fn)
+            sess = cls(problem, topology, resolved, backend, plan, fn,
+                       acceleration=acceleration)
             sess.fitted_C = fitted_C
             sess._guard = guard
             return sess
@@ -210,12 +240,13 @@ class Session:
         elif mesh_axes is None:
             raise ValueError("pass mesh_axes (innermost level first) "
                              "together with an explicit mesh")
-        fn = get_method("sdca").executor(
+        fn = method.executor(
             plan=plan, backend="mesh", mesh=mesh, axes=tuple(mesh_axes),
             loss=problem.loss, use_kernel=mesh_use_kernel, sync=mesh_sync)
         sess = cls(problem, topology, resolved, backend, plan, fn,
                    mesh=mesh, mesh_axes=tuple(mesh_axes),
-                   mesh_use_kernel=mesh_use_kernel, mesh_sync=mesh_sync)
+                   mesh_use_kernel=mesh_use_kernel, mesh_sync=mesh_sync,
+                   acceleration=acceleration)
         sess.fitted_C = fitted_C
         sess._guard = guard
         return sess
@@ -258,9 +289,11 @@ class Session:
         straggler=None,
         lam: Optional[float] = None,
         local_h=None,
+        acceleration: Optional[float] = None,
         checkpoint=None,
         _ef_state=None,
         _history_prefix=(),
+        _defer_history: bool = False,
         _final_save: bool = True,
     ) -> SolveResult:
         """Run ``rounds`` root rounds (default: the schedule's).
@@ -326,8 +359,20 @@ class Session:
         Checkpointing composes with compression but not with
         ``straggler=`` (a mid-run blocked state under skipped syncs holds
         divergent per-leaf replicas the flat payload cannot represent).
+        ``acceleration`` overrides the server-momentum coefficient for
+        THIS run (sessions compiled with ``Schedule(acceleration=...)``
+        only): the coefficient is a runtime scalar operand of the
+        ``sdca_acc`` executors, so sweeping it never retraces, and ``0``
+        is bit-identical to the plain method.  Accelerated runs thread
+        the executors' full blocked state (the per-depth momentum
+        anchors) across chunks; they compose with compression but not
+        with ``straggler=`` or ``checkpoint=``.
+
         ``_ef_state`` / ``_history_prefix`` / ``_final_save`` are
-        :meth:`resume`'s private restore hooks."""
+        :meth:`resume`'s private restore hooks; ``_defer_history`` leaves
+        the recorded entries' objective values as device scalars for the
+        caller to materialize in one batch (:func:`materialize_history`
+        -- the sweep layer's sequential path)."""
         T = self.resolved.rounds if rounds is None else int(rounds)
         if T < 0:
             raise ValueError(f"rounds must be >= 0, got {T}")
@@ -339,6 +384,36 @@ class Session:
         lam = self.problem.lam if lam is None else float(lam)
         m = self.problem.m
         lm_in = host_mod.regularizer_scale(lam, m, X.dtype)
+
+        accelerated = self.acceleration is not None
+        if acceleration is not None and not accelerated:
+            raise ValueError(
+                "this session runs the plain 'sdca' method; compile with "
+                "Schedule(acceleration=...) to bind the accelerated "
+                "executors (the coefficient itself is then a runtime "
+                "operand)")
+        acc_run = self.acceleration if acceleration is None \
+            else float(acceleration)
+        if accelerated and not 0.0 <= float(acc_run) <= 1.0:
+            raise ValueError(
+                f"acceleration must be in [0, 1], got {acc_run}")
+        if accelerated and straggler is not None:
+            raise ValueError(
+                "acceleration does not compose with straggler=: a skipped "
+                "sync leaves the momentum anchors extrapolating against "
+                "stale combination states, which breaks the paired "
+                "primal-dual consistency; run accelerated sessions "
+                "synchronously")
+        if accelerated and checkpoint is not None:
+            raise ValueError(
+                "acceleration does not compose with checkpoint=: the "
+                "per-depth momentum anchors are part of the chunk carry "
+                "but not of the flat (alpha, w, residuals) snapshot "
+                "payload, so a resumed run would diverge")
+        # the momentum coefficient is a RUNTIME operand of the sdca_acc
+        # executors: converted once here, never part of a cache key
+        acc_args = (jnp.asarray(float(acc_run), X.dtype),) \
+            if accelerated else ()
 
         alpha, w, k = self._start_state(warm_start, key, lam)
         K_root = len(self.resolved.chunk_tree.children)
@@ -388,12 +463,13 @@ class Session:
         guard = self._guard
         # the flat (alpha, w) pair is not a complete carry once leaves can
         # skip syncs (absent leaves keep divergent replicas and stale
-        # snapshots) or once edges compress (error-feedback residuals must
-        # persist across root rounds), so such runs thread the executors'
-        # full blocked state across chunks instead.  Under strict mode the
-        # fetch is budgeted ONE miss (the first state-carry run builds;
-        # later runs must hit).
-        if straggler is not None or plan.has_compression:
+        # snapshots), once edges compress (error-feedback residuals must
+        # persist across root rounds), or once the server combine carries
+        # momentum (the per-depth anchors outlive root-round boundaries),
+        # so such runs thread the executors' full blocked state across
+        # chunks instead.  Under strict mode the fetch is budgeted ONE
+        # miss (the first state-carry run builds; later runs must hit).
+        if straggler is not None or plan.has_compression or accelerated:
             with (guard.retrace_region(1) if guard is not None
                   and guard.error_on_retrace else contextlib.nullcontext()):
                 if mesh:
@@ -401,27 +477,28 @@ class Session:
                         plan, self._mesh, axes=self._mesh_axes,
                         loss=self.problem.loss,
                         use_kernel=self._mesh_use_kernel, carry_state=True,
-                        sync=self._mesh_sync)
+                        sync=self._mesh_sync, accelerated=accelerated)
                 else:
                     state_exec = host_mod.get_host_executor(
                         plan, loss=self.problem.loss,
                         record_history=False, backend=self.backend,
-                        carry_state=True)
+                        carry_state=True, accelerated=accelerated)
         if guard is not None and guard.error_on_retrace:
             # strict revalidation: the compiled program this session bound
             # at compile time must still be cache-resident -- a re-fetch
             # has a ZERO miss budget, so an LRU eviction (or a fingerprint
             # that drifted mid-session) raises here instead of silently
             # rebuilding inside the chunk loop
+            method_name = "sdca_acc" if accelerated else "sdca"
             with guard.retrace_region(0):
                 if mesh:
-                    get_method("sdca").executor(
+                    get_method(method_name).executor(
                         plan=plan, backend="mesh", mesh=self._mesh,
                         axes=self._mesh_axes, loss=self.problem.loss,
                         use_kernel=self._mesh_use_kernel,
                         sync=self._mesh_sync)
                 else:
-                    get_method("sdca").executor(
+                    get_method(method_name).executor(
                         plan=plan, backend=self.backend,
                         loss=self.problem.loss, record_history=False)
         if mesh:
@@ -434,16 +511,25 @@ class Session:
         history: list = []
         clock = {"async": t0_time, "sync": t0_time}
 
+        # history recording is DEFERRED: entries hold the objective's
+        # device scalars (the tiny _objective dispatch queues behind the
+        # chunk dispatches) and one EXPLICIT jax.device_get materializes
+        # them -- at stream points (on_round), at checkpoint-metadata
+        # builds, and once at run end -- instead of an implicit float()
+        # sync per recorded round.  Under strict mode the record call runs
+        # INSIDE the host-sync guard, so a reintroduced implicit transfer
+        # raises HostSyncError.
         def record(t: int, a_flat: Array, extra: Optional[dict] = None):
             if not record_history:
                 return
             dv, pv = _objective(a_flat, X, y, loss, float(lam))
             time = clock["async"] if straggler is not None else \
                 t0_time + t * dt
-            record_round(history, t0_round + t, time, float(dv), float(pv))
+            record_round(history, t0_round + t, time, dv, pv)
             if extra:
                 history[-1].update(extra)
             if on_round is not None:
+                materialize_history(history)     # streaming needs host values
                 on_round(history[-1])
 
         # the all-ones mask is loop-invariant: convert (and, on mesh,
@@ -554,15 +640,16 @@ class Session:
                         a_carry, wrows = self._fn(self._Xs, self._ys,
                                                   a_carry, w, kys, prt,
                                                   steps_now, lm_in)
-                    w = wrows[0]
-                    if rec_now:
-                        record(t, a_carry.reshape(m), extra)
+                        w = wrows[0]
+                        if rec_now:
+                            record(t, a_carry.reshape(m), extra)
                 else:
                     with _dispatch_ctx(t):
                         state = state_exec.step(self._Xs, self._ys, state,
-                                                kys, prt, steps_now, lm_in)
-                    if rec_now:
-                        record(t, state[0].reshape(m), extra)
+                                                kys, prt, steps_now, lm_in,
+                                                *acc_args)
+                        if rec_now:
+                            record(t, state[0].reshape(m), extra)
             elif state_exec is None:
                 # operand conversion stays OUTSIDE the guarded region:
                 # inside it every implicit host transfer is an error
@@ -570,15 +657,16 @@ class Session:
                 with _dispatch_ctx(t):
                     a_carry, w = self._fn(X, y, kys, a_carry, w,
                                           prt, steps_now, lm_in)
-                if rec_now:
-                    record(t, a_carry, extra)
+                    if rec_now:
+                        record(t, a_carry, extra)
             else:
                 kys = jnp.asarray(keys)
                 with _dispatch_ctx(t):
                     state = state_exec.step(X, y, kys, state,
-                                            prt, steps_now, lm_in)
-                if rec_now:
-                    record(t, state_exec.finalize(state)[0], extra)
+                                            prt, steps_now, lm_in,
+                                            *acc_args)
+                    if rec_now:
+                        record(t, state_exec.finalize(state)[0], extra)
             if guard is not None and guard.sanitize:
                 guard.check_carry(
                     state if state_exec is not None else (a_carry, w),
@@ -604,8 +692,15 @@ class Session:
                         "alpha": af.reshape(m) if mesh else af,
                         "w": wf,
                         "key": k_cur,
-                        "res": fault_mod.ef_residuals(self, state),
+                        # the carry is donated on the next chunk step, and
+                        # this payload outlives it (the write lags one
+                        # period) -- copy the residual leaves out first
+                        "res": jax.tree.map(
+                            jnp.copy, fault_mod.ef_residuals(self, state)),
                     }
+                    # snapshot metadata is JSON: materialize any deferred
+                    # device scalars in the recorded history first
+                    materialize_history(history)
                     meta = {
                         "version": fault_mod.PAYLOAD_VERSION,
                         "round": t0_round + t,
@@ -636,6 +731,8 @@ class Session:
                 alpha_out = alpha_out.reshape(m)
         else:
             alpha_out = a_carry.reshape(m) if mesh else a_carry
+        if not _defer_history:
+            materialize_history(history)
         return SolveResult(alpha=alpha_out, w=w, history=history,
                            next_key=k, lam=lam)
 

@@ -32,8 +32,24 @@ Execution model (why this is not a host loop):
   * a ``schedules`` axis changes the plan, so each schedule compiles its
     own program (the lambda-free executor cache still deduplicates), and
     its (lambda x local-H x seed) sub-batch fuses as above;
-  * the mesh backend and ``continuation=True`` paths run members
-    sequentially through the SAME cached executors.
+  * the mesh backend fuses the same way: the per-shard program is
+    ``jax.vmap``-ped over the config axis INSIDE the ``shard_map``
+    (collectives batch elementwise, so every member's psum /
+    reduce-scatter sync is bitwise the standalone one) -- ONE sharded
+    dispatch per chunk for the whole group, under either ``mesh_sync``;
+  * compressed plans (and ``Schedule(acceleration=)`` groups) fuse
+    through the BATCHED state-carry executors: per-member error-feedback
+    residuals and server-momentum anchors ride the vmapped chunk carry;
+  * ``continuation=True`` batches every lambda stage over the non-lambda
+    (local-H x seed) axes: stage k+1 warm-starts from stage k's stacked
+    duals with the primal rebuilt per member (``w = X^T alpha /
+    (lam m)``), so a path over B chains costs ``len(lams)`` fused
+    dispatch sequences instead of ``B * len(lams)`` sequential runs;
+  * only checkpointed fleets of stateful or continuation groups fall
+    back to member-at-a-time runs (their per-member snapshot payloads
+    carry state a stacked group file cannot), still through the same
+    cached executors -- with history pulled to the host AFTER the member
+    loop, never inside it.
 
 Every member is bit-identical to the corresponding standalone
 ``Session.run`` (asserted in ``tests/test_sweep.py``).  That guarantee
@@ -330,7 +346,8 @@ def _session_for(session, spec: Sweep, schedule_index):
         session.problem, session.topology, spec.schedules[schedule_index],
         backend=session.backend, mesh=session._mesh,
         mesh_axes=session._mesh_axes,
-        mesh_use_kernel=session._mesh_use_kernel)
+        mesh_use_kernel=session._mesh_use_kernel,
+        mesh_sync=session._mesh_sync)
 
 
 def _steps_for_point(gsess, pt: SweepPoint) -> np.ndarray:
@@ -356,22 +373,36 @@ def _fleet_every(policy, resolved) -> int:
 
 
 def _run_group_batched(gsess, pts: List[SweepPoint], rounds, record_history,
-                       history_every, fleet=None):
+                       history_every, fleet=None, warm=None):
     """The fused path: all of a schedule-group's (lambda x local-H x seed)
-    configs through ONE vmapped chunk program per root round -- lambda
+    configs through ONE batched chunk program per root round -- lambda
     enters as the per-config ``lm`` scalar, the H axis as the per-config
-    step-mask operand.
+    step-mask operand.  On the host backends that is a ``jax.vmap`` over
+    the flat executor; on the mesh backend the per-shard program vmaps
+    over the config axis INSIDE the ``shard_map`` (collectives batch
+    elementwise, bitwise the standalone sync).  Compressed and
+    accelerated groups dispatch through the batched STATE-CARRY
+    executors, whose vmapped carry threads per-member error-feedback
+    residuals and momentum anchors across chunks.
+
+    ``warm`` is an optional stacked warm start ``(alphas (B, m),
+    ws (B, d))`` -- the continuation path's stage hand-off.
 
     ``fleet`` is ``(policy, group_dir, resuming)`` when the sweep
     checkpoints: the group snapshots its stacked ``(B, m)/(B, d)``
     iterates at chunk boundaries (ONE file per group, not per member --
     all members advance in lockstep in this path), and a resume restores
     the stack, re-derives the per-member key plans from the (validated
-    identical) spec, and continues the loop mid-run bit-identically."""
+    identical) spec, and continues the loop mid-run bit-identically.
+    Only stateless groups take this path with a fleet (a stacked
+    ``(a, w)`` file cannot carry residual/anchor state)."""
     from repro.api.session import _objective
     prob, plan, resolved = gsess.problem, gsess.plan, gsess.resolved
     X, y, loss = prob.X, prob.y, prob.loss
     m = prob.m
+    mesh = gsess.backend == "mesh"
+    accelerated = gsess.acceleration is not None
+    use_state = plan.has_compression or accelerated
     T = resolved.rounds if rounds is None else int(rounds)
     every = int(history_every)
     if every < 1:
@@ -385,19 +416,58 @@ def _run_group_batched(gsess, pts: List[SweepPoint], rounds, record_history,
         for pt in pts]
     B = len(pts)
 
-    fnb = host_mod.get_host_executor(
-        plan, loss=loss, record_history=False, backend=gsess.backend,
-        batched=True)
     raw_keys = [plan_mod._raw_key(pt.key()) for pt in pts]
-    keys_all = jnp.asarray(np.stack([
-        plan_mod.chunked_key_plan(chunk, plan, k, T) for k in raw_keys]))
-    part = jnp.asarray(plan_mod.full_participation(plan))
-    steps = jnp.asarray(np.stack([_steps_for_point(gsess, pt)
-                                  for pt in pts]))      # (B, S, n, h_max)
+    keys_np = np.stack([
+        plan_mod.chunked_key_plan(chunk, plan, k, T) for k in raw_keys])
+    steps_np = np.stack([_steps_for_point(gsess, pt) for pt in pts])
     lms = jnp.stack([host_mod.regularizer_scale(pt.lam, m, X.dtype)
                      for pt in pts])
-    a = jnp.zeros((B, m), X.dtype)
-    w = jnp.zeros((B, prob.d), X.dtype)
+    acc_args = (jnp.asarray(float(gsess.acceleration), X.dtype),) \
+        if accelerated else ()
+
+    exec_b = fnb = None
+    if mesh:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.engine import mesh as mesh_mod
+        sh_b = NamedSharding(
+            gsess._mesh, P(None, tuple(reversed(gsess._mesh_axes))))
+        mkw = dict(axes=gsess._mesh_axes, loss=loss,
+                   use_kernel=gsess._mesh_use_kernel,
+                   sync=gsess._mesh_sync, batched=True)
+        if use_state:
+            exec_b = mesh_mod.get_mesh_executor(
+                plan, gsess._mesh, carry_state=True,
+                accelerated=accelerated, **mkw)
+        else:
+            fnb = mesh_mod.get_mesh_executor(plan, gsess._mesh, **mkw)
+        # mesh operand layouts put the leaf dim ahead of the tick dim
+        # (exactly the per-round transposes the standalone run applies)
+        keys_all = jnp.asarray(keys_np.transpose(0, 1, 3, 2, 4))
+        part = jax.device_put(
+            jnp.asarray(plan_mod.full_participation(plan), X.dtype).T,
+            gsess._spec_sharding)
+        steps = jax.device_put(
+            jnp.asarray(steps_np.transpose(0, 2, 1, 3), X.dtype), sh_b)
+    else:
+        if use_state:
+            exec_b = host_mod.get_host_executor(
+                plan, loss=loss, record_history=False,
+                backend=gsess.backend, carry_state=True, batched=True,
+                accelerated=accelerated)
+        else:
+            fnb = host_mod.get_host_executor(
+                plan, loss=loss, record_history=False,
+                backend=gsess.backend, batched=True)
+        keys_all = jnp.asarray(keys_np)               # (B, T, S, n, 2)
+        part = jnp.asarray(plan_mod.full_participation(plan))
+        steps = jnp.asarray(steps_np)                 # (B, S, n, h_max)
+
+    if warm is not None:
+        a = jnp.asarray(warm[0], X.dtype)
+        w = jnp.asarray(warm[1], X.dtype)
+    else:
+        a = jnp.zeros((B, m), X.dtype)
+        w = jnp.zeros((B, prob.d), X.dtype)
 
     mgr, ck_every, t0 = None, 0, 0
     hist_prefix: List[List[dict]] = [[] for _ in pts]
@@ -440,20 +510,47 @@ def _run_group_batched(gsess, pts: List[SweepPoint], rounds, record_history,
 
     def hists_now() -> List[List[dict]]:
         out = [list(h) for h in hist_prefix]
-        for t_r, vals in recorded:
-            for b, (dv, pv) in enumerate(vals):
-                record_round(out[b], t_r, t_r * dts[b], float(dv),
-                             float(pv))
+        if recorded:
+            # ONE explicit device_get for every queued objective scalar
+            vals = jax.device_get([v for _, v in recorded])
+            for (t_r, _), vrow in zip(recorded, vals, strict=True):
+                for b, (dv, pv) in enumerate(vrow):
+                    record_round(out[b], t_r, t_r * dts[b], float(dv),
+                                 float(pv))
         return out
 
+    state = None
+    if use_state:
+        state = exec_b.init(X, a, w)
+    elif mesh:
+        a = a.reshape(B, plan.n_leaves, plan.m_b)
+
+    def a_flat():
+        if use_state:
+            return exec_b.finalize(state)[0]
+        return a.reshape(B, m) if mesh else a
+
     if record_history and t0 == 0:
-        rec(0, a)
+        rec(0, a_flat())
     for t in range(t0 + 1, T + 1):
-        a, w = fnb(X, y, keys_all[:, t - 1], a, w, part, steps, lms)
+        if mesh:
+            kys = jax.device_put(keys_all[:, t - 1], sh_b)
+            if use_state:
+                state = exec_b.step(gsess._Xs, gsess._ys, state, kys,
+                                    part, steps, lms, *acc_args)
+            else:
+                a, wrows = fnb(gsess._Xs, gsess._ys, a, w, kys, part,
+                               steps, lms)
+                w = wrows[:, 0]
+        elif use_state:
+            state = exec_b.step(X, y, keys_all[:, t - 1], state, part,
+                                steps, lms, *acc_args)
+        else:
+            a, w = fnb(X, y, keys_all[:, t - 1], a, w, part, steps, lms)
         if record_history and (t % every == 0 or t == T):
-            rec(t, a)
+            rec(t, a_flat())
         if mgr is not None and (t % ck_every == 0 or t == T):
-            mgr.save(t, {"a": a, "w": w},
+            mgr.save(t, {"a": a.reshape(B, m) if mesh else a, "w": w},
                      {"round": t, "rounds_total": T,
                       "plan": plan.fingerprint,
                       "histories": hists_now()})
@@ -461,6 +558,10 @@ def _run_group_batched(gsess, pts: List[SweepPoint], rounds, record_history,
     if mgr is not None:
         mgr.wait()
 
+    if use_state:
+        a, w = exec_b.finalize(state)
+    elif mesh:
+        a = a.reshape(B, m)
     histories = hists_now()
     results = [
         SolveResult(alpha=a[b], w=w[b], history=histories[b],
@@ -482,7 +583,8 @@ def _member_result(gsess, pt: SweepPoint, rounds, record_history,
         return gsess.run(rounds, key=pt.key(), lam=pt.lam,
                          local_h=pt.local_h, warm_start=warm,
                          record_history=record_history,
-                         history_every=history_every)
+                         history_every=history_every,
+                         _defer_history=True)
     policy, root, resuming = fleet
     mp = dataclasses.replace(
         policy, directory=str(Path(root) / f"member_{pt.index:04d}"))
@@ -495,14 +597,58 @@ def _member_result(gsess, pt: SweepPoint, rounds, record_history,
             pass                      # never started: fall through
     return gsess.run(rounds, key=pt.key(), lam=pt.lam, local_h=pt.local_h,
                      warm_start=warm, record_history=record_history,
-                     history_every=history_every, checkpoint=mp)
+                     history_every=history_every, checkpoint=mp,
+                     _defer_history=True)
+
+
+def _run_group_continuation(gsess, pts: List[SweepPoint], rounds,
+                            record_history, history_every):
+    """The fused regularization path: one BATCHED stage per lambda value
+    (descending), vectorized over the non-lambda (local-H x seed) chain
+    axes.  Stage k+1 warm-starts every chain from stage k's stacked dual
+    iterates; the primal is REBUILT per member under the new lambda (the
+    invariant is ``w = X^T alpha / (lam m)``, so the previous stage's w
+    is inconsistent once lambda changes) by the SAME unbatched
+    ``w_of_alpha`` the standalone warm-started run applies -- each
+    member stays bit-identical to its sequential chain."""
+    from repro.core.dual import w_of_alpha
+    X = gsess.problem.X
+    stages: Dict[float, List[SweepPoint]] = {}
+    for pt in pts:
+        stages.setdefault(float(pt.lam), []).append(pt)
+
+    def chain_key(p: SweepPoint):
+        return (repr(p.local_h), repr(p.seed))
+
+    results: Dict[int, SolveResult] = {}
+    prev: Optional[List[SolveResult]] = None
+    for lam in sorted(stages, reverse=True):
+        # grid expansion gives every lambda stage the same chain set;
+        # sorting by chain key aligns stage b with its warm-start source
+        spts = sorted(stages[lam], key=chain_key)
+        warm = None
+        if prev is not None:
+            warm = (jnp.stack([r.alpha for r in prev]),
+                    jnp.stack([w_of_alpha(r.alpha, X, lam) for r in prev]))
+        stage_res = _run_group_batched(gsess, spts, rounds, record_history,
+                                       history_every, warm=warm)
+        for pt, res in zip(spts, stage_res, strict=True):
+            results[pt.index] = res
+        prev = stage_res
+    return [results[pt.index] for pt in pts]
 
 
 def _run_group_sequential(gsess, pts: List[SweepPoint], rounds,
                           record_history, history_every, continuation,
                           fleet=None):
-    """Member-at-a-time fallback (mesh backend, continuation paths); every
-    member still reuses the group's one cached lambda-free executor."""
+    """Member-at-a-time fallback -- ONLY for checkpointed fleets whose
+    members need per-member snapshot state (continuation chains,
+    compressed/accelerated carries); every member still reuses the
+    group's one cached lambda-free executor.  History recording stays
+    deferred inside each member's run and is materialized HERE, after
+    the member loop -- one explicit transfer per member at the end, no
+    device sync inside the loop."""
+    from repro.api.session import materialize_history
     results = {}
     if continuation:
         # per-seed chains over the lambda path, strongest regularization
@@ -531,6 +677,8 @@ def _run_group_sequential(gsess, pts: List[SweepPoint], rounds,
             results[pt.index] = _member_result(
                 gsess, pt, rounds, record_history, history_every, None,
                 fleet)
+    for res in results.values():
+        materialize_history(res.history)
     return [results[pt.index] for pt in pts]
 
 
@@ -601,24 +749,30 @@ def run_sweep(session, spec: Sweep, *, rounds=None, record_history=True,
     for sidx in sorted(groups, key=lambda s: (s is not None, s)):
         pts = groups[sidx]
         gsess = _session_for(session, spec, sidx)
-        # compressed plans thread EF-residual state through the carry_state
-        # executors, which the fused vmapped dispatch doesn't model; run
-        # those members sequentially (still through cached executors)
-        fuse = (gsess.backend in ("vmap", "pallas")
-                and not spec.continuation
-                and not gsess.plan.has_compression)
+        # every backend fuses, including mesh (vmap inside shard_map) and
+        # compressed/accelerated plans (batched state-carry executors).
+        # Only a checkpointed fleet whose members need per-member snapshot
+        # state -- a continuation chain, or residual/anchor carry a
+        # stacked (a, w) group file cannot hold -- runs sequentially.
+        use_state = (gsess.plan.has_compression
+                     or gsess.acceleration is not None)
+        fuse = policy is None or not (spec.continuation or use_state)
         gfleet = None
         if policy is not None:
             gname = f"group_{sidx}" if sidx is not None else "group_base"
             gdir = fleet_root / gname if fuse else fleet_root
             gfleet = (policy, gdir, resuming)
-        group_res = (_run_group_batched(gsess, pts, rounds, record_history,
-                                        history_every, fleet=gfleet)
-                     if fuse else
-                     _run_group_sequential(gsess, pts, rounds,
-                                           record_history, history_every,
-                                           spec.continuation,
-                                           fleet=gfleet))
+        if fuse and spec.continuation:
+            group_res = _run_group_continuation(
+                gsess, pts, rounds, record_history, history_every)
+        elif fuse:
+            group_res = _run_group_batched(
+                gsess, pts, rounds, record_history, history_every,
+                fleet=gfleet)
+        else:
+            group_res = _run_group_sequential(
+                gsess, pts, rounds, record_history, history_every,
+                spec.continuation, fleet=gfleet)
         for pt, res in zip(pts, group_res, strict=True):
             results[pt.index] = res
 

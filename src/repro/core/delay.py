@@ -37,17 +37,38 @@ def _check_improvement_constant(C: float, K: int) -> None:
             f"per-round factor stays in (0, 1]; got C={C} with K={K}")
 
 
-def per_round_factor(H: float, C: float, K: int, delta: float) -> float:
-    """eq. (11) base: g(H) = 1 - (1 - (1-delta)^H) * C/K."""
-    return 1.0 - (1.0 - (1.0 - delta) ** H) * C / K
+def _check_acceleration(acceleration: float) -> float:
+    a = float(acceleration)
+    if not 0.0 <= a <= 1.0:
+        raise ValueError(
+            f"acceleration must be in [0, 1] (0 = plain SDCA, 1 = full "
+            f"Nesterov rate); got {acceleration}")
+    return a
+
+
+def per_round_factor(H: float, C: float, K: int, delta: float,
+                     acceleration: float = 0.0) -> float:
+    """eq. (11) base: g(H) = 1 - (1 - (1-delta)^H) * C/K.
+
+    ``acceleration`` models the accelerated primal-dual flavor (Ma et al.,
+    arXiv 1711.05305): momentum on the server combine improves the
+    dependence on the per-round progress s = (1-(1-delta)^H) C/K toward
+    its square root, so g = 1 - s^(1 - acceleration/2).  ``acceleration=0``
+    recovers the plain rate exactly; ``acceleration=1`` is the full
+    Nesterov exponent 1/2."""
+    s = (1.0 - (1.0 - delta) ** H) * C / K
+    a = _check_acceleration(acceleration)
+    if a > 0.0 and s > 0.0:
+        s = s ** (1.0 - 0.5 * a)
+    return 1.0 - s
 
 
 def log_bound(
     H: float, *, C: float, K: int, delta: float, t_total: float,
-    t_lp: float, t_delay: float, t_cp: float,
+    t_lp: float, t_delay: float, t_cp: float, acceleration: float = 0.0,
 ) -> float:
     """log of eq. (12)'s objective: T(H) * log g(H). Lower is better (< 0)."""
-    g = per_round_factor(H, C, K, delta)
+    g = per_round_factor(H, C, K, delta, acceleration)
     T = rounds_for_budget(t_total, H, t_lp, t_delay, t_cp)
     # g in (0,1]; log(g) <= 0
     return T * math.log(max(g, 1e-300))
@@ -56,12 +77,14 @@ def log_bound(
 def optimal_h(
     *, C: float, K: int, delta: float, t_total: float, t_lp: float,
     t_delay: float, t_cp: float, h_min: int = 1, h_max: int = 10**7,
+    acceleration: float = 0.0,
 ) -> Tuple[int, float]:
     """Integer minimizer of eq. (12) by coarse log-grid + local refinement.
 
     Returns (H*, log_bound(H*)).
     """
     _check_improvement_constant(C, K)
+    _check_acceleration(acceleration)
     # coarse: log-spaced candidates
     grid = sorted(
         {int(h) for h in np.unique(np.round(
@@ -69,7 +92,7 @@ def optimal_h(
     )
     vals = [
         log_bound(h, C=C, K=K, delta=delta, t_total=t_total, t_lp=t_lp,
-                  t_delay=t_delay, t_cp=t_cp)
+                  t_delay=t_delay, t_cp=t_cp, acceleration=acceleration)
         for h in grid
     ]
     i = int(np.argmin(vals))
@@ -85,7 +108,8 @@ def optimal_h(
     best_h, best_v = grid[i], vals[i]
     for h in cand:
         v = log_bound(int(h), C=C, K=K, delta=delta, t_total=t_total,
-                      t_lp=t_lp, t_delay=t_delay, t_cp=t_cp)
+                      t_lp=t_lp, t_delay=t_delay, t_cp=t_cp,
+                      acceleration=acceleration)
         if v < best_v:
             best_h, best_v = int(h), v
     return best_h, best_v
@@ -235,6 +259,7 @@ def optimal_h_bounded_skip(
     rel_floor: float = 0.5,
     n_rounds: int = 512,
     seed: int = 0,
+    acceleration: float = 0.0,
 ) -> dict:
     """The straggler-aware eq. (12): jointly optimize the local iteration
     count H and the :class:`~repro.runtime.straggler.BoundedSkip`
@@ -259,7 +284,8 @@ def optimal_h_bounded_skip(
             n_rounds=n_rounds, seed=seed)
         c_eff = max(C * rho, 1e-12)
         h, v = optimal_h(C=c_eff, K=K, delta=delta, t_total=t_total,
-                         t_lp=t_lp, t_delay=t_delay, t_cp=t_cp, h_max=h_max)
+                         t_lp=t_lp, t_delay=t_delay, t_cp=t_cp, h_max=h_max,
+                         acceleration=acceleration)
         if best is None or v < best["log_bound"]:
             best = {"H": h, "skip": s, "t_delay": t_delay,
                     "participation": rho, "log_bound": v}
@@ -292,6 +318,7 @@ def plan_hierarchical_h(
     sim_rounds: int = 512,
     seed: int = 0,
     compression: Optional[Sequence] = None,
+    acceleration: float = 0.0,
 ) -> list[dict]:
     """Choose per-level local-round counts bottom-up with eq. (12).
 
@@ -328,7 +355,13 @@ def plan_hierarchical_h(
     constant is diluted to ``C*quality`` -- the error-feedback loop re-sends
     the truncated mass over later rounds, so each round contracts a bit
     less.  Use :func:`choose_compression` to pick the specs automatically.
+
+    ``acceleration`` plans under the accelerated per-round factor (see
+    :func:`per_round_factor`): every level contracts faster, so eq. (12)
+    settles on fewer, cheaper rounds to the same bound -- the planner-side
+    counterpart of ``Schedule(acceleration=)``.
     """
+    _check_acceleration(acceleration)
     for lvl in levels:
         try:
             _check_improvement_constant(C, lvl.group_size)
@@ -352,7 +385,8 @@ def plan_hierarchical_h(
                 C=c_in, K=lvl.group_size, delta=inner_delta, t_total=t_total,
                 t_lp=inner_iter_time, t_cp=t_cp, base_delays=base,
                 model=straggler, skip_max=skip_max, h_max=hm,
-                rel_floor=rel_floor, n_rounds=sim_rounds, seed=seed)
+                rel_floor=rel_floor, n_rounds=sim_rounds, seed=seed,
+                acceleration=acceleration)
             h, t_delay = row["H"], row["t_delay"]
             c_lvl = max(c_in * row["participation"], 1e-12)
             extra = {"skip": row["skip"],
@@ -362,7 +396,7 @@ def plan_hierarchical_h(
             h, _ = optimal_h(
                 C=c_in, K=lvl.group_size, delta=inner_delta, t_total=t_total,
                 t_lp=inner_iter_time, t_delay=t_delay, t_cp=t_cp,
-                h_max=hm,
+                h_max=hm, acceleration=acceleration,
             )
             extra = {}
         if spec is not None:
@@ -374,7 +408,7 @@ def plan_hierarchical_h(
         # its effective per-iteration improvement shrinks geometrically
         inner_iter_time = round_time
         inner_delta = 1.0 - per_round_factor(h, c_lvl, lvl.group_size,
-                                             inner_delta)
+                                             inner_delta, acceleration)
     return plan
 
 
@@ -393,6 +427,7 @@ def choose_compression(
     t_cp: float = 0.0,
     h_max: int = 10**6,
     candidates: Sequence[str] = DEFAULT_COMPRESSION_CANDIDATES,
+    acceleration: float = 0.0,
 ) -> list[dict]:
     """Delay-aware per-level compression selection (eq. (12) extended).
 
@@ -411,7 +446,12 @@ def choose_compression(
     the ``spec`` column (bottom-up = innermost-first) to
     ``Schedule(compression=[...])`` or reverse it for ``compile_tree``'s
     root-first per-depth form.
+
+    ``acceleration`` evaluates every candidate under the accelerated
+    per-round factor (:func:`per_round_factor`), matching the rate the
+    ``"sdca_acc"`` method actually runs.
     """
+    _check_acceleration(acceleration)
     for lvl in levels:
         try:
             _check_improvement_constant(C, lvl.group_size)
@@ -431,7 +471,7 @@ def choose_compression(
             h, bound = optimal_h(
                 C=c_eff, K=lvl.group_size, delta=inner_delta,
                 t_total=t_total, t_lp=inner_iter_time, t_delay=t_delay,
-                t_cp=t_cp, h_max=h_max,
+                t_cp=t_cp, h_max=h_max, acceleration=acceleration,
             )
             if best is None or bound < best["bound"]:
                 best = {"name": lvl.name, "spec": str(spec), "H": h,
@@ -441,7 +481,8 @@ def choose_compression(
         plan.append(best)
         inner_iter_time = best["round_time"]
         inner_delta = 1.0 - per_round_factor(best["H"], c_eff,
-                                             lvl.group_size, inner_delta)
+                                             lvl.group_size, inner_delta,
+                                             acceleration)
     return plan
 
 

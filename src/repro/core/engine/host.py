@@ -59,7 +59,7 @@ _EXEC_CACHE_MAX = 32
 # structured miss diffs name the offending component instead of dumping
 # an anonymous tuple
 EXEC_KEY_FIELDS = ("plan_fingerprint", "loss", "gamma", "record_history",
-                   "backend", "carry_state", "batched")
+                   "backend", "carry_state", "batched", "accelerated")
 _EXEC_CACHE_STATS = {"hits": 0, "misses": 0}
 # per-backend breakdown ("vmap" / "pallas"; the mesh and LM caches report
 # their own columns through executor_cache_stats) so strict sessions and
@@ -140,6 +140,7 @@ def get_host_executor(
     backend: str = "vmap",
     carry_state: bool = False,
     batched: bool = False,
+    accelerated: bool = False,
 ):
     """Build (or fetch from cache) the jitted executor for ``plan``.
 
@@ -173,7 +174,20 @@ def get_host_executor(
     fuse into a single dispatch per chunk (``fn(X, y, keys (B,S,n,2),
     alpha0 (B,m), w0 (B,d), participation (S,n) shared,
     steps (B,S,n,h_max), lm (B,))``).  Composes with ``carry_state``
-    (init/step/finalize all carry the leading B axis)."""
+    (init/step/finalize all carry the leading B axis).
+
+    ``accelerated=True`` builds the ``sdca_acc`` flavor: Nesterov-style
+    momentum on every server combination step.  The executor signature
+    gains one trailing RUNTIME scalar ``acceleration`` (shared across a
+    batch), the carry gains per-depth momentum anchors (``srvP`` for the
+    server w, ``srvA`` for the combined alpha) right after ``srvW``, and
+    each sync extrapolates BOTH sides of the primal-dual pair with the
+    same coefficient -- ``x = base + acceleration * (base - prev)`` --
+    along the un-extrapolated combination sequence, preserving
+    ``w == X^T alpha / (lambda m)`` exactly (the map is linear).  ``acceleration`` is a runtime operand -- sweeping the
+    momentum coefficient never retraces -- and ``acceleration == 0``
+    selects the un-extrapolated base through a ``jnp.where``, so it is
+    bit-identical to the plain SDCA executor."""
     if backend not in ("vmap", "pallas"):
         raise ValueError(f"unknown backend {backend!r} (use 'vmap' or "
                          "'pallas'; the mesh backend is engine.mesh)")
@@ -181,13 +195,13 @@ def get_host_executor(
     # 'smooth_hinge_1'), so per-call constructed losses still hit the cache
     cache_key = (plan.fingerprint, loss.name, loss.gamma,
                  bool(record_history), backend, bool(carry_state),
-                 bool(batched))
+                 bool(batched), bool(accelerated))
     fn = _EXEC_CACHE.get(cache_key)
     if fn is None:
         fn = _build_host_executor(plan, loss=loss,
                                   record_history=record_history,
                                   backend=backend, carry_state=carry_state,
-                                  batched=batched)
+                                  batched=batched, accelerated=accelerated)
         # count the miss only once the build SUCCEEDED: incrementing
         # before the build double-counted a failing configuration (every
         # retry after the raise re-counted a miss that never populated
@@ -216,7 +230,8 @@ class StateExecutor(NamedTuple):
 
 
 def _build_host_executor(plan: TreePlan, *, loss, record_history,
-                         backend, carry_state=False, batched=False):
+                         backend, carry_state=False, batched=False,
+                         accelerated=False):
     n, m_b, S, D = plan.n_leaves, plan.m_b, plan.n_ticks, plan.depth
     h_max, m = plan.h_max, plan.m_total
 
@@ -287,12 +302,15 @@ def _build_host_executor(plan: TreePlan, *, loss, record_history,
         for dd in comp_depths}
 
     def _scan(X: Array, y: Array, keys: Array, carry0, participation: Array,
-              steps: Array, lm: Array):
+              steps: Array, lm: Array, acceleration=None):
         """Trace the full tick scan from an explicit blocked carry; returns
         (final carry, history stack, the objective closure).  ``steps`` is
         the (S, n, h_max) runtime step mask, ``lm`` the runtime lambda*m
-        scalar (:func:`regularizer_scale`)."""
+        scalar (:func:`regularizer_scale`), ``acceleration`` the runtime
+        server-momentum scalar (accelerated executors only)."""
         dtype = X.dtype
+        if accelerated:
+            acceleration = jnp.asarray(acceleration, dtype)
         lam = lm / m                     # only the in-program objective
         vmask = valid_f.astype(dtype)
         Xb = X[gather_idx] * vmask[:, :, None]                # (n, m_b, d)
@@ -348,11 +366,14 @@ def _build_host_executor(plan: TreePlan, *, loss, record_history,
             return approx
 
         def tick(carry, xs):
-            if has_comp:
-                a, w, snapA, snapW, srvW, res = carry
-            else:
-                a, w, snapA, snapW, srvW = carry
-                res = ()
+            # carry layout: (a, w, snapA, snapW, srvW[, srvP][, res]) --
+            # the previous-server momentum slot exists only in accelerated
+            # executors, the EF residual tuple only in compressed plans
+            a, w, snapA, snapW, srvW = carry[:5]
+            rest = carry[5:]
+            if accelerated:
+                (srvP, srvA), rest = rest[:2], rest[2:]
+            res = rest[0] if has_comp else ()
             keys_s, smask, sync_s, ref_s, hflag, part_s, steps_s = xs
             da, dw = leaf_batch(a, w, keys_s, smask, steps_s)
             a = a + da
@@ -378,9 +399,20 @@ def _build_host_executor(plan: TreePlan, *, loss, record_history,
                 denom = denom_g[gids[dd]]                     # (n,)
                 act = (ev > 0) & (present_g > 0)[gids[dd]]    # group live
                 eb = (e > 0)[:, None]                         # leaf attends
-                a = jnp.where(eb, snapA[dd]
-                              + (ascale[dd] / denom)[:, None]
-                              * (a - snapA[dd]), a)
+                base_a = (snapA[dd]
+                          + (ascale[dd] / denom)[:, None] * (a - snapA[dd]))
+                if accelerated:
+                    # extrapolate alpha along its own combined sequence with
+                    # the SAME coefficient as the server w below: w is the
+                    # linear image X^T alpha / (lambda m) of alpha, so a
+                    # shared extrapolation keeps the primal-dual pair
+                    # consistent (momentum on w alone would decouple them)
+                    ext_a = base_a + acceleration * (base_a - srvA[dd])
+                    new_a = jnp.where(acceleration != 0, ext_a, base_a)
+                    srvA = srvA.at[dd].set(jnp.where(eb, base_a, srvA[dd]))
+                    a = jnp.where(eb, new_a, a)
+                else:
+                    a = jnp.where(eb, base_a, a)
                 # a partially-present child is represented by its surviving
                 # leaves (all carrying the child's full delta), so their
                 # per-leaf coefficients scale up by |child| / |present|;
@@ -408,7 +440,21 @@ def _build_host_executor(plan: TreePlan, *, loss, record_history,
                            .astype(dtype)[:, None] * delta_w)
                 tot = jax.ops.segment_sum(contrib, gids[dd],
                                           num_segments=ngroups[dd])
-                srv_new = srvW[dd] + tot[gids[dd]]
+                srv_base = srvW[dd] + tot[gids[dd]]
+                if accelerated:
+                    # Nesterov-style server momentum: extrapolate along the
+                    # un-extrapolated combination sequence x_t (= srv_base,
+                    # kept in srvP); the leaves work from the lookahead
+                    # y_t = x_t + acc (x_t - x_{t-1}).  acceleration == 0
+                    # selects srv_base exactly (bit-identical to plain
+                    # SDCA -- a where, not a multiply, so even signed
+                    # zeros survive).
+                    srv_ext = srv_base + acceleration * (srv_base - srvP[dd])
+                    srv_new = jnp.where(acceleration != 0, srv_ext, srv_base)
+                    srvP = srvP.at[dd].set(
+                        jnp.where(act[:, None], srv_base, srvP[dd]))
+                else:
+                    srv_new = srv_base
                 srvW = srvW.at[dd].set(
                     jnp.where(act[:, None], srv_new, srvW[dd]))
                 w = jnp.where(eb, srv_new, w)
@@ -421,6 +467,14 @@ def _build_host_executor(plan: TreePlan, *, loss, record_history,
                 for d2 in range(dd + 1, D):
                     srvW = srvW.at[d2].set(
                         jnp.where(act_of[dd][:, None], src, srvW[d2]))
+                    if accelerated:
+                        # deeper momentum anchors restart from the pulled
+                        # state too (zero velocity after a rebase); the
+                        # alpha anchor restarts from the post-sync alpha
+                        srvP = srvP.at[d2].set(
+                            jnp.where(act_of[dd][:, None], src, srvP[d2]))
+                        srvA = srvA.at[d2].set(
+                            jnp.where(act_of[dd][:, None], a, srvA[d2]))
             # snapshot refresh is per-leaf private state: participants only.
             # Depths shallower than the leaf's shallowest attended sync
             # fast-forward to the server baseline instead: the pulled group
@@ -442,8 +496,11 @@ def _build_host_executor(plan: TreePlan, *, loss, record_history,
                     (a, w))
             else:
                 out = None
-            carry_out = (a, w, snapA, snapW, srvW, res) if has_comp \
-                else (a, w, snapA, snapW, srvW)
+            carry_out = (a, w, snapA, snapW, srvW)
+            if accelerated:
+                carry_out = carry_out + (srvP, srvA)
+            if has_comp:
+                carry_out = carry_out + (res,)
             return carry_out, out
 
         xs = (keys, solve_mask.astype(dtype), sync_mask.astype(dtype),
@@ -466,16 +523,23 @@ def _build_host_executor(plan: TreePlan, *, loss, record_history,
         carry = (a0, w0, jnp.broadcast_to(a0[None], (D, n, m_b)),
                  jnp.broadcast_to(w0[None], (D, n, d_feat)),
                  jnp.broadcast_to(w0[None], (D, n, d_feat)))
+        if accelerated:
+            # momentum anchors (srvP for w, srvA for alpha) start at the
+            # run-start state: the first sync of a run (or of a resumed
+            # chunk carry) extrapolates along its own first combination
+            # delta
+            carry = carry + (jnp.broadcast_to(w0[None], (D, n, d_feat)),
+                             jnp.broadcast_to(a0[None], (D, n, m_b)))
         if has_comp:
             carry = carry + (tuple(
                 jnp.zeros((n, d_feat), jnp.float32) for _ in comp_depths),)
         return carry
 
-    def solve_fn(X: Array, y: Array, keys: Array, alpha0: Array, w0_in: Array,
-                 participation: Array, steps: Array, lm: Array):
+    def _solve(X, y, keys, alpha0, w0_in, participation, steps, lm,
+               acceleration=None):
         carry0 = _init_carry(X, alpha0, w0_in)
         carry, hist, objective = _scan(X, y, keys, carry0,
-                                       participation, steps, lm)
+                                       participation, steps, lm, acceleration)
         a, w = carry[0], carry[1]
         alpha = a.reshape(-1)[flat_map]
         if record_history:
@@ -486,24 +550,51 @@ def _build_host_executor(plan: TreePlan, *, loss, record_history,
         return alpha, w[0]
 
     if carry_state:
-        def step_fn(X, y, keys, state, participation, steps, lm):
-            carry, _, _ = _scan(X, y, keys, state, participation, steps, lm)
-            return carry
+        if accelerated:
+            def step_fn(X, y, keys, state, participation, steps, lm,
+                        acceleration):
+                carry, _, _ = _scan(X, y, keys, state, participation,
+                                    steps, lm, acceleration)
+                return carry
+        else:
+            def step_fn(X, y, keys, state, participation, steps, lm):
+                carry, _, _ = _scan(X, y, keys, state, participation,
+                                    steps, lm)
+                return carry
 
         def finalize(state):
             return state[0].reshape(-1)[flat_map], state[1][0]
 
         if batched:
-            # leading config axis B over (state, keys, steps, lm); X/y and
-            # the participation mask are shared across the batch
+            # leading config axis B over (state, keys, steps, lm); X/y, the
+            # participation mask, and the momentum scalar are shared across
+            # the batch.  The chunk carry is DONATED: callers rebind
+            # ``state = step(...)`` every chunk, so the previous chunk's
+            # blocked state buffers are reused in place.
+            step_axes = (None, None, 0, 0, None, 0, 0)
+            if accelerated:
+                step_axes = step_axes + (None,)
             return StateExecutor(
                 init=jax.jit(jax.vmap(_init_carry, in_axes=(None, 0, 0))),
-                step=jax.jit(jax.vmap(
-                    step_fn, in_axes=(None, None, 0, 0, None, 0, 0))),
+                step=jax.jit(jax.vmap(step_fn, in_axes=step_axes),
+                             donate_argnums=(3,)),
                 finalize=jax.jit(jax.vmap(finalize)))
         return StateExecutor(init=jax.jit(_init_carry),
-                             step=jax.jit(step_fn),
+                             step=jax.jit(step_fn, donate_argnums=(3,)),
                              finalize=jax.jit(finalize))
+    if accelerated:
+        def solve_acc(X, y, keys, alpha0, w0_in, participation, steps, lm,
+                      acceleration):
+            return _solve(X, y, keys, alpha0, w0_in, participation, steps,
+                          lm, acceleration)
+        if batched:
+            return jax.jit(jax.vmap(
+                solve_acc, in_axes=(None, None, 0, 0, 0, None, 0, 0, None)))
+        return jax.jit(solve_acc)
+
+    def solve_fn(X, y, keys, alpha0, w0_in, participation, steps, lm):
+        return _solve(X, y, keys, alpha0, w0_in, participation, steps, lm)
+
     if batched:
         return jax.jit(jax.vmap(solve_fn,
                                 in_axes=(None, None, 0, 0, 0, None, 0, 0)))

@@ -343,7 +343,10 @@ def get_lm_executor(cfg: ModelConfig, optimizer: Optimizer, *,
         # (B, R, ...) state, (R, ...) shared batch, (B, L) periods, (B,) lr
         step = jax.vmap(
             step, in_axes=(0, None, 0, None, 0 if with_lr else None))
-    fn = jax.jit(step)
+    # the state carry is dead after each step -- donate it so XLA reuses the
+    # parameter/opt-state buffers in place (callers that keep a reference,
+    # e.g. warm_start, must copy before stepping)
+    fn = jax.jit(step, donate_argnums=(0,))
     _EXECUTOR_CACHE[key] = fn
     return fn
 

@@ -87,7 +87,8 @@ _MESH_EXEC_CACHE_MAX = 16
 # engine.host: the mesh column of executor_cache_stats()["by_backend"]
 # (mesh rebuilds used to be invisible to cache-stats assertions)
 MESH_KEY_FIELDS = ("plan_fingerprint", "loss", "gamma", "axes", "mesh",
-                   "use_kernel", "carry_state", "sync")
+                   "use_kernel", "carry_state", "sync", "batched",
+                   "accelerated")
 _MESH_CACHE_STATS = {"hits": 0, "misses": 0}
 _MISS_LOG: list = []
 _MISS_LOG_MAX = 64
@@ -170,6 +171,8 @@ def get_mesh_executor(
     use_kernel: bool = True,
     carry_state: bool = False,
     sync: str = "psum",
+    batched: bool = False,
+    accelerated: bool = False,
 ):
     """Build (or fetch from cache) the jitted ``shard_map`` program for
     ``plan`` on ``mesh``.
@@ -196,13 +199,30 @@ def get_mesh_executor(
     invocations as ONE opaque pytree: ``step(Xs, ys, state, kys, part,
     steps, lm) -> state`` -- the complete carry async and compressed
     sessions need (the flat ``(alpha, w)`` pair drops absent leaves'
-    divergent replicas and the error-feedback residuals)."""
+    divergent replicas and the error-feedback residuals).
+
+    ``batched=True`` returns the fused-sweep flavor: the per-shard program
+    is ``jax.vmap``-ped over a leading config axis B INSIDE the
+    ``shard_map`` (collectives batch elementwise under vmap, so every
+    member's psum / tiled ``psum_scatter`` / ``all_gather`` is bitwise the
+    standalone one).  Batched operands gain a leading B over the leaf-
+    sharded dimension -- ``a0 (B, n, m_b)``, ``w0 (B, d)``, ``kys
+    (B, n, S, 2)``, ``steps (B, n, S, h_max)``, ``lm (B,)`` -- while
+    ``Xs``/``ys``/``part`` stay shared.  Composes with ``carry_state``
+    (every state leaf carries the leading B axis) and both sync modes.
+
+    ``accelerated=True`` is the ``sdca_acc`` flavor (see
+    :func:`repro.core.engine.host.get_host_executor`): one trailing
+    runtime scalar ``acceleration`` (shared across a batch), per-depth
+    momentum anchors in the carry, and the server combine extrapolates
+    both sides of the primal-dual pair; ``acceleration == 0`` is
+    bit-identical to the plain program."""
     _check_plan_mesh(plan, mesh, axes)
     if sync not in SYNC_MODES:
         raise ValueError(f"sync must be one of {SYNC_MODES}, got {sync!r}")
     cache_key = (plan.fingerprint, loss.name, loss.gamma,
                  tuple(axes), mesh, bool(use_kernel), bool(carry_state),
-                 sync)
+                 sync, bool(batched), bool(accelerated))
     fn = _MESH_EXEC_CACHE.get(cache_key)
     if fn is not None:
         _MESH_CACHE_STATS["hits"] += 1
@@ -295,19 +315,28 @@ def get_mesh_executor(
 
         return shard, gather, scatter_sum, pad_w, unpad
 
-    def make_run(Xs, ys, kys, part, steps, lm):
+    def make_run(Xs, ys, kys, part, steps, lm, acceleration=None):
         """Build the recursive rounds-driver over this shard's inputs:
         Xs (1, m_b, d), kys (1, S, 2), part (1, S), steps (1, S, H);
-        ``lm`` is the replicated runtime lambda*m scalar.  The carry is a
-        tuple whose first three slots are always (a, w, t_c); the server
-        tail is lowering-specific:
+        ``lm`` is the replicated runtime lambda*m scalar, ``acceleration``
+        the runtime server-momentum scalar (accelerated programs only).
+        The carry is a tuple whose first three slots are always
+        (a, w, t_c); the server tail is lowering-specific:
 
-        * psum: ``(a, w, t_c, snapA, snapW, srvW, res)``
-        * reduce_scatter: ``(a, w, t_c, snapA, srv_sh, res)`` with
-          ``srv_sh`` the per-depth sharded server/snapshot chunks (one
-          vector under full participation -- snap == srv)."""
+        * psum: ``(a, w, t_c, snapA, snapW, srvW[, srvP, srvA], res)``
+        * reduce_scatter: ``(a, w, t_c, snapA, srv_sh[, srvP_sh, srvA],
+          res)`` with ``srv_sh`` the per-depth sharded server/snapshot
+          chunks (one vector under full participation -- snap == srv)
+
+        where the bracketed momentum anchors exist only in accelerated
+        programs (``srvP`` anchors the server w sequence, ``srvA`` the
+        combined alpha -- both sides extrapolate with the same runtime
+        coefficient, preserving the linear alpha -> w consistency)."""
         dt = Xs.dtype
         one = jnp.ones((), dt)
+        acc = None
+        if accelerated:
+            acc = jnp.asarray(acceleration, dt)
         if rs:
             shard, gather, scatter_sum, pad_w, unpad = _geom(Xs.shape[-1])
         else:
@@ -356,20 +385,47 @@ def get_mesh_executor(
             state/snapshots, the group server stays coherent for them.
             ``parent_sync`` flags that the parent also syncs at this tick
             (its own call handles the shallower bookkeeping then)."""
-            a, w, t_c, snapA, snapW, srvW, res = carry
+            if accelerated:
+                a, w, t_c, snapA, snapW, srvW, srvP, srvA, res = carry
+            else:
+                a, w, t_c, snapA, snapW, srvW, res = carry
             K = ks[depth]
             p, wc, denom, act, attend, corr = gates(depth, part, t_c)
             delta, res = compress_delta(depth, w - snapW[depth], res,
                                         attend)
             tot = jax.lax.psum((p * wc / denom) * corr * delta,
                                axes_from[depth])
-            srv_new = srvW[depth] + tot
-            a = jnp.where(attend,
-                          snapA[depth] + (a - snapA[depth]) / (denom * K), a)
+            srv_base = srvW[depth] + tot
+            base_a = snapA[depth] + (a - snapA[depth]) / (denom * K)
+            if accelerated:
+                # paired Nesterov-style extrapolation (see engine.host):
+                # both sides move along their un-extrapolated combination
+                # sequences with the same coefficient; acceleration == 0
+                # selects the base exactly (a where, bit-identical)
+                ext_w = srv_base + acc * (srv_base - srvP[depth])
+                srv_new = jnp.where(acc != 0, ext_w, srv_base)
+                ext_a = base_a + acc * (base_a - srvA[depth])
+                new_a = jnp.where(acc != 0, ext_a, base_a)
+                srvP = srvP.at[depth].set(
+                    jnp.where(act, srv_base, srvP[depth]))
+                srvA = srvA.at[depth].set(
+                    jnp.where(attend, base_a, srvA[depth]))
+            else:
+                srv_new = srv_base
+                new_a = base_a
+            a = jnp.where(attend, new_a, a)
             w = jnp.where(attend, srv_new, w)
             # server advance at this depth + deeper rebase, group-wide
             for d2 in range(depth, L):
                 srvW = srvW.at[d2].set(jnp.where(act, srv_new, srvW[d2]))
+            if accelerated:
+                # deeper momentum anchors restart from the pulled state
+                # (zero velocity after a rebase), exactly as on the host
+                for d2 in range(depth + 1, L):
+                    srvP = srvP.at[d2].set(
+                        jnp.where(act, srv_new, srvP[d2]))
+                    srvA = srvA.at[d2].set(
+                        jnp.where(attend, a, srvA[d2]))
             # snapshots are per-shard private state: participants only;
             # depths shallower than this sync fast-forward to the server
             # baseline the pulled state embeds -- unless the parent syncs
@@ -380,6 +436,8 @@ def get_mesh_executor(
             ff = attend & jnp.logical_not(parent_sync)
             for d2 in range(depth):
                 snapW = snapW.at[d2].set(jnp.where(ff, srvW[d2], snapW[d2]))
+            if accelerated:
+                return a, w, t_c, snapA, snapW, srvW, srvP, srvA, res
             return a, w, t_c, snapA, snapW, srvW, res
 
         def sync_rs(depth, carry, parent_sync):
@@ -394,19 +452,44 @@ def get_mesh_executor(
             here), which is also what lets the sync run ungated: XLA's
             sharding propagation aborts on participation-``where`` gates
             over tiled-collective values."""
-            a, w, t_c, snapA, srv_sh, res = carry
+            if accelerated:
+                a, w, t_c, snapA, srv_sh, srvP_sh, srvA, res = carry
+            else:
+                a, w, t_c, snapA, srv_sh, res = carry
             K = ks[depth]
             wc = jnp.asarray(wcoef_leaf[depth], dt)
             snap_full = gather(depth, srv_sh[depth])
             delta, res = compress_delta(depth, unpad(w) - snap_full, res)
             tot_sh = scatter_sum(depth, wc * delta)
-            w_new = gather(depth, srv_sh[depth] + tot_sh)
-            a = snapA[depth] + (a - snapA[depth]) / K
+            base_sh = srv_sh[depth] + tot_sh
+            base_a = snapA[depth] + (a - snapA[depth]) / K
+            if accelerated:
+                # paired extrapolation on the SHARDED server chunks (the
+                # anchors live in shard layout, so momentum costs no extra
+                # collective) and on the combined alpha
+                ext_sh = base_sh + acc * (base_sh - srvP_sh[depth])
+                new_sh = jnp.where(acc != 0, ext_sh, base_sh)
+                ext_a = base_a + acc * (base_a - srvA[depth])
+                a = jnp.where(acc != 0, ext_a, base_a)
+                srvP_sh = (srvP_sh[:depth] + (base_sh,)
+                           + srvP_sh[depth + 1:])
+                srvA = srvA.at[depth].set(base_a)
+            else:
+                new_sh = base_sh
+                a = base_a
+            w_new = gather(depth, new_sh)
             w = pad_w(w_new)
             for d2 in range(depth, L):
                 snapA = snapA.at[d2].set(a)
                 srv_sh = (srv_sh[:d2] + (shard(d2, w_new),)
                           + srv_sh[d2 + 1:])
+                if accelerated and d2 > depth:
+                    # deeper anchors restart at the pulled state
+                    srvP_sh = (srvP_sh[:d2] + (srv_sh[d2],)
+                               + srvP_sh[d2 + 1:])
+                    srvA = srvA.at[d2].set(a)
+            if accelerated:
+                return a, w, t_c, snapA, srv_sh, srvP_sh, srvA, res
             return a, w, t_c, snapA, srv_sh, res
 
         sync = sync_rs if rs else sync_psum
@@ -434,41 +517,69 @@ def get_mesh_executor(
 
         def init_tail(a0, w0):
             """The server tail + residuals of a run-start carry (leaf-level
-            shapes: a0 (1, m_b), w0 (d,))."""
+            shapes: a0 (1, m_b), w0 (d,)).  Accelerated programs insert
+            the momentum anchors (initialized at the run-start state, so
+            the first sync extrapolates along its own first delta) between
+            the server slots and the residuals."""
             d_feat = w0.shape[-1]
             snapA0 = jnp.broadcast_to(a0[None], (L,) + a0.shape)
             res0 = tuple(jnp.zeros((d_feat,), jnp.float32)
                          for _ in comp_depths)
             if rs:
                 srv0 = tuple(shard(dd, w0) for dd in range(L))
+                if accelerated:
+                    return (snapA0, srv0, srv0, snapA0, res0)
                 return (snapA0, srv0, res0)
             snapW0 = jnp.broadcast_to(w0[None], (L, d_feat))
+            if accelerated:
+                return (snapA0, snapW0, snapW0, snapW0, snapA0, res0)
             return (snapA0, snapW0, snapW0, res0)
 
         return run, init_tail, pad_w, unpad
 
-    def program(Xs, ys, a0, w0, kys, part, steps, lm):
+    def program(Xs, ys, a0, w0, kys, part, steps, lm, acceleration=None):
         # Xs (1, m_b, d), a0 (1, m_b), w0 (d,), kys (1, S, 2),
-        # part (1, S), steps (1, S, H) on this shard; lm replicated scalar
+        # part (1, S), steps (1, S, H) on this shard; lm (and the
+        # accelerated flavor's momentum coefficient) replicated scalars
         d_feat = Xs.shape[-1]
         run, init_tail, pad_w, unpad = make_run(Xs, ys, kys, part, steps,
-                                                lm)
+                                                lm, acceleration)
         carry = (a0, pad_w(w0), jnp.int32(0)) + init_tail(a0, w0)
         out = run(0, carry)
         a_end, w_end = out[0], unpad(out[1])
         return a_end, jnp.broadcast_to(w_end[None], (1, d_feat))
 
-    def program_state(Xs, ys, state, kys, part, steps, lm):
+    def program_state(Xs, ys, state, kys, part, steps, lm,
+                      acceleration=None):
         # state is leaf-major (every leaf owns dim 0 of each element):
         # a0 (1, m_b), wrows (1, d), sA (1, L, m_b), then the lowering's
-        # server tail (psum: sW/sV (1, L, d); rs: per-depth (1, p_d)
-        # shards), then per-compressed-depth residuals (1, d)
-        run, _, pad_w, unpad = make_run(Xs, ys, kys, part, steps, lm)
+        # server tail (psum: sW/sV (1, L, d), accelerated inserts the sP
+        # (1, L, d) / sPA (1, L, m_b) anchors; rs: per-depth (1, p_d)
+        # shards, accelerated inserts the anchor shards + sPA), then
+        # per-compressed-depth residuals (1, d)
+        run, _, pad_w, unpad = make_run(Xs, ys, kys, part, steps, lm,
+                                        acceleration)
         a0, wrows, sA = state[0], state[1], state[2]
         n_res = len(comp_depths)
         if rs:
             srv = tuple(s[0] for s in state[3:3 + L])
-            res = tuple(r[0] for r in state[3 + L:])
+            k = 3 + L
+            if accelerated:
+                srvP = tuple(s[0] for s in state[k:k + L])
+                sPA = state[k + L]
+                k = k + L + 1
+            res = tuple(r[0] for r in state[k:])
+            if accelerated:
+                carry = (a0, pad_w(wrows[0]), jnp.int32(0),
+                         sA[0][:, None, :], srv, srvP,
+                         sPA[0][:, None, :], res)
+                out = run(0, carry)
+                a2, w2, _, sA2, srv2, srvP2, sPA2, res2 = out
+                return ((a2, unpad(w2)[None], sA2[:, 0, :][None])
+                        + tuple(s[None] for s in srv2)
+                        + tuple(s[None] for s in srvP2)
+                        + (sPA2[:, 0, :][None],)
+                        + tuple(r[None] for r in res2))
             carry = (a0, pad_w(wrows[0]), jnp.int32(0),
                      sA[0][:, None, :], srv, res)
             out = run(0, carry)
@@ -477,6 +588,16 @@ def get_mesh_executor(
                     + tuple(s[None] for s in srv2)
                     + tuple(r[None] for r in res2))
         sW, sV = state[3], state[4]
+        if accelerated:
+            sP, sPA = state[5], state[6]
+            res = tuple(r[0] for r in state[7:7 + n_res])
+            carry = (a0, wrows[0], jnp.int32(0), sA[0][:, None, :], sW[0],
+                     sV[0], sP[0], sPA[0][:, None, :], res)
+            out = run(0, carry)
+            a2, w2, _, sA2, sW2, sV2, sP2, sPA2, res2 = out
+            return ((a2, w2[None], sA2[:, 0, :][None], sW2[None],
+                     sV2[None], sP2[None], sPA2[:, 0, :][None])
+                    + tuple(r[None] for r in res2))
         res = tuple(r[0] for r in state[5:5 + n_res])
         carry = (a0, wrows[0], jnp.int32(0), sA[0][:, None, :], sW[0],
                  sV[0], res)
@@ -486,15 +607,42 @@ def get_mesh_executor(
                 + tuple(r[None] for r in res2))
 
     spec_in = P(tuple(reversed(axes)))
+    # batched programs shard the SECOND dim (the leaf dim) and keep the
+    # leading config axis B replicated; per-shard values then carry a
+    # leading B the program vmaps over INSIDE the shard_map
+    spec_b = P(None, tuple(reversed(axes)))
     if carry_state:
         from repro.core.engine.host import StateExecutor
         n = plan.n_leaves
-        sharding = NamedSharding(mesh, spec_in)
-        step = jax.jit(shard_map(
-            program_state, mesh=mesh,
-            in_specs=(spec_in, spec_in, spec_in, spec_in, spec_in,
-                      spec_in, P()),
-            out_specs=spec_in))
+        sharding = NamedSharding(mesh, spec_b if batched else spec_in)
+
+        if batched:
+            if accelerated:
+                def program_state_b(Xs, ys, state, kys, part, steps, lm,
+                                    acceleration):
+                    return jax.vmap(
+                        lambda st, ky, sp, l: program_state(
+                            Xs, ys, st, ky, part, sp, l, acceleration)
+                    )(state, kys, steps, lm)
+            else:
+                def program_state_b(Xs, ys, state, kys, part, steps, lm):
+                    return jax.vmap(
+                        lambda st, ky, sp, l: program_state(
+                            Xs, ys, st, ky, part, sp, l)
+                    )(state, kys, steps, lm)
+            state_specs = (spec_in, spec_in, spec_b, spec_b, spec_in,
+                           spec_b, P()) + ((P(),) if accelerated else ())
+            # the chunk carry (arg 2) is DONATED: callers rebind
+            # ``state = step(...)`` every chunk
+            step = jax.jit(shard_map(
+                program_state_b, mesh=mesh, in_specs=state_specs,
+                out_specs=spec_b), donate_argnums=(2,))
+        else:
+            state_specs = (spec_in,) * 6 + (P(),) \
+                + ((P(),) if accelerated else ())
+            step = jax.jit(shard_map(
+                program_state, mesh=mesh, in_specs=state_specs,
+                out_specs=spec_in), donate_argnums=(2,))
 
         def init_state(a0, wr):
             # run-start server tail from replicated-per-leaf (a, w) rows;
@@ -502,31 +650,80 @@ def get_mesh_executor(
             # position-dependent (the geometry lives inside shard_map)
             _, init_tail, _, _ = make_run(
                 jnp.zeros((1, m_b, wr.shape[-1]), wr.dtype),
-                None, None, None, None, None)
-            sA, *tail = init_tail(a0, wr[0])
+                None, None, None, None, None,
+                0.0 if accelerated else None)
+            tail = init_tail(a0, wr[0])
+            sA = tail[0]
             flat = []
-            for t in tail:
-                flat.extend(t) if isinstance(t, tuple) else flat.append(t)
-            return ((a0, wr, sA[:, 0, :][None])
-                    + tuple(x[None] for x in flat))
+            for t in tail[1:]:
+                for x in (t if isinstance(t, tuple) else (t,)):
+                    if x.ndim == 3 and x.shape[1] == 1:
+                        # (L, 1, m_b) alpha-shaped anchor -> (1, L, m_b)
+                        flat.append(x[:, 0, :][None])
+                    else:
+                        flat.append(x[None])
+            return (a0, wr, sA[:, 0, :][None]) + tuple(flat)
 
-        init_prog = jax.jit(shard_map(
-            init_state, mesh=mesh, in_specs=(spec_in, spec_in),
-            out_specs=spec_in))
+        if batched:
+            init_prog = jax.jit(shard_map(
+                lambda a0, wr: jax.vmap(init_state)(a0, wr),
+                mesh=mesh, in_specs=(spec_b, spec_b), out_specs=spec_b))
+        else:
+            init_prog = jax.jit(shard_map(
+                init_state, mesh=mesh, in_specs=(spec_in, spec_in),
+                out_specs=spec_in))
 
         def init(X, alpha, w):
             dt = X.dtype
             d_feat = X.shape[1]
-            a0 = jnp.asarray(alpha, dt).reshape(n, m_b)
-            wr = jnp.broadcast_to(jnp.asarray(w, dt)[None], (n, d_feat))
+            if batched:
+                B = alpha.shape[0]
+                a0 = jnp.asarray(alpha, dt).reshape(B, n, m_b)
+                wr = jnp.broadcast_to(
+                    jnp.asarray(w, dt)[:, None, :], (B, n, d_feat))
+            else:
+                a0 = jnp.asarray(alpha, dt).reshape(n, m_b)
+                wr = jnp.broadcast_to(jnp.asarray(w, dt)[None], (n, d_feat))
             a0 = jax.device_put(a0, sharding)
             wr = jax.device_put(wr, sharding)
             return init_prog(a0, wr)
 
-        def finalize(state):
-            return state[0].reshape(-1), state[1][0]
+        if batched:
+            def finalize(state):
+                return (state[0].reshape(state[0].shape[0], -1),
+                        state[1][:, 0])
+        else:
+            def finalize(state):
+                return state[0].reshape(-1), state[1][0]
 
         fn = StateExecutor(init=init, step=step, finalize=jax.jit(finalize))
+    elif batched:
+        if accelerated:
+            def program_b(Xs, ys, a0, w0, kys, part, steps, lm,
+                          acceleration):
+                return jax.vmap(
+                    lambda a, w, ky, sp, l: program(
+                        Xs, ys, a, w, ky, part, sp, l, acceleration)
+                )(a0, w0, kys, steps, lm)
+        else:
+            def program_b(Xs, ys, a0, w0, kys, part, steps, lm):
+                return jax.vmap(
+                    lambda a, w, ky, sp, l: program(
+                        Xs, ys, a, w, ky, part, sp, l)
+                )(a0, w0, kys, steps, lm)
+        fn = jax.jit(shard_map(
+            program_b, mesh=mesh,
+            in_specs=(spec_in, spec_in, spec_b, P(), spec_b, spec_in,
+                      spec_b, P()) + ((P(),) if accelerated else ()),
+            out_specs=(spec_b, spec_b),
+        ))
+    elif accelerated:
+        fn = jax.jit(shard_map(
+            program, mesh=mesh,
+            in_specs=(spec_in, spec_in, spec_in, P(), spec_in, spec_in,
+                      spec_in, P(), P()),
+            out_specs=(spec_in, spec_in),
+        ))
     else:
         fn = jax.jit(shard_map(
             program, mesh=mesh,

@@ -18,9 +18,16 @@ Two methods ship today:
                         optimizer update per replica, combine = (masked)
                         parameter/opt-state mean over the level's mesh
                         sub-axis.  Executor in ``engine.lm``.
+  ``"sdca_acc"``     -- ROADMAP item 5, the accelerated primal-dual
+                        flavor (Ma et al., arXiv 1711.05305): the same
+                        local step, but every server combine applies
+                        Nesterov-style momentum to BOTH sides of the
+                        primal-dual pair (the coefficient is a runtime
+                        scalar operand; ``acceleration=0`` is
+                        bit-identical to ``"sdca"``).  Same executors,
+                        built with ``accelerated=True``.
 
-ROADMAP items 4 (gossip combine) and 5 (accelerated server momentum) are
-additional Methods on the same IR.
+ROADMAP item 4 (gossip combine) is an additional Method on the same IR.
 """
 from __future__ import annotations
 
@@ -61,6 +68,19 @@ class SDCAMethod(Method):
         return host_mod.executor_cache_stats()
 
 
+class SDCAAccMethod(SDCAMethod):
+    """Accelerated tree-DCA: the ``"sdca"`` executors built with
+    ``accelerated=True`` -- executor signatures gain one trailing runtime
+    ``acceleration`` scalar, carries gain the per-depth momentum anchors.
+    Selected by ``Schedule(acceleration=...)``."""
+
+    name = "sdca_acc"
+
+    def executor(self, *, plan, backend="vmap", mesh=None, **kw) -> Callable:
+        kw["accelerated"] = True
+        return super().executor(plan=plan, backend=backend, mesh=mesh, **kw)
+
+
 class LMTreeSyncMethod(Method):
     """Replica-stacked LM training (mesh backend only: the replica dim is
     sharded over the sync axes, so the combine is a GSPMD all-reduce)."""
@@ -85,6 +105,7 @@ def register_method(method: Method) -> Method:
 
 
 register_method(SDCAMethod())
+register_method(SDCAAccMethod())
 register_method(LMTreeSyncMethod())
 
 

@@ -137,11 +137,13 @@ def ef_residuals(session, state) -> List[Array]:
     plan = session.plan
     if state is None or not plan.has_compression:
         return []
+    # residuals are the TRAILING carry slots on every backend and method
+    # flavor (accelerated programs insert their momentum anchors BEFORE
+    # the residuals), so index from the end rather than hard-coding the
+    # server-tail length of one particular lowering
     if session.backend in ("vmap", "pallas"):
-        return list(state[5])
-    if session._mesh_sync == "reduce_scatter":
-        return list(state[3 + plan.depth:])
-    return list(state[5:])
+        return list(state[-1])              # the trailing residual tuple
+    return list(state[-n_residuals(plan):])
 
 
 def with_ef_residuals(session, state, res: Sequence[np.ndarray]):
@@ -161,13 +163,11 @@ def with_ef_residuals(session, state, res: Sequence[np.ndarray]):
             "changed between save and resume?")
     if session.backend in ("vmap", "pallas"):
         sub = tuple(jnp.asarray(np.asarray(r), jnp.float32) for r in res)
-        return state[:5] + (sub,)
+        return state[:-1] + (sub,)
     from repro.runtime.elastic import remesh_state, replicated
     host = tuple(np.asarray(r, np.float32) for r in res)
     sub = remesh_state(host, replicated(session._spec_sharding, host))
-    if session._mesh_sync == "reduce_scatter":
-        return state[:3 + plan.depth] + sub
-    return state[:5] + sub
+    return state[:-n_res] + sub
 
 
 # ---------------------------------------------------------------------------

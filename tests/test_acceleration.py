@@ -1,0 +1,157 @@
+"""Accelerated server momentum (``Schedule(acceleration=)`` /
+``get_method("sdca_acc")``; Ma et al., arXiv 1711.05305).
+
+The load-bearing claims:
+
+  * ``acceleration=0`` is BIT-identical to the plain ``"sdca"`` method on
+    every backend -- the momentum extrapolation is selected (not scaled)
+    out of the combine, so the zero coefficient leaves no float residue;
+  * the coefficient is a RUNTIME scalar operand: ``run(acceleration=)``
+    overrides the compiled value with zero retraces and matches a session
+    compiled at that value bit for bit;
+  * ``acceleration>0`` buys convergence: fewer rounds to a given duality
+    gap on the paper's star topology;
+  * the eq.-(12) planner picks up the accelerated per-round factor
+    g = 1 - s^(1 - a/2) (``acceleration=0`` recovers eq. (11) exactly);
+  * composition limits are validated loudly (plain sessions reject the
+    run-time override; straggler/checkpoint don't compose).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Problem, Schedule, Session, Topology
+from repro.core import delay
+from repro.core.engine.method import get_method
+from repro.data.synthetic import gaussian_regression
+
+LAM = 0.1
+
+
+def _star(backend):
+    if backend == "mesh":
+        n = len(jax.devices())
+        return Topology.star(n, 96 // n, rounds=5, local_steps=16)
+    return Topology.star(4, 24, rounds=5, local_steps=16)
+
+
+def _problem(topo):
+    X, y = gaussian_regression(m=topo.m_total, d=8)
+    return Problem(X, y, loss="squared", lam=LAM)
+
+
+# ---------------------------------------------------------------------------
+# method registry + planner semantics
+# ---------------------------------------------------------------------------
+def test_sdca_acc_is_a_registered_method():
+    m = get_method("sdca_acc")
+    assert m.name == "sdca_acc"
+    assert get_method("sdca").name == "sdca"
+
+
+def test_per_round_factor_accelerated_semantics():
+    """g = 1 - s^(1 - a/2): a=0 recovers eq. (11) exactly, a>0 shrinks g
+    (faster contraction), a=1 is the square-root rate."""
+    H, C, K, delta = 32, 0.5, 4, 0.05
+    g0 = delay.per_round_factor(H, C, K, delta)
+    assert delay.per_round_factor(H, C, K, delta, acceleration=0.0) == g0
+    s = 1.0 - g0
+    assert delay.per_round_factor(H, C, K, delta, acceleration=1.0) == \
+        pytest.approx(1.0 - s ** 0.5)
+    gs = [delay.per_round_factor(H, C, K, delta, acceleration=a)
+          for a in (0.0, 0.3, 0.6, 1.0)]
+    assert all(b < a for a, b in zip(gs, gs[1:], strict=False)), gs
+    for bad in (-0.1, 1.5):
+        with pytest.raises(ValueError, match="acceleration"):
+            delay.per_round_factor(H, C, K, delta, acceleration=bad)
+
+
+def test_optimal_h_accelerated_bound_no_worse():
+    """Momentum can only improve the planned eq.-(12) log-bound."""
+    kw = dict(C=0.5, K=4, delta=0.05, t_total=50.0, t_lp=0.01,
+              t_delay=0.5, t_cp=0.0, h_max=10**5)
+    _, v_plain = delay.optimal_h(**kw)
+    _, v_acc = delay.optimal_h(acceleration=0.8, **kw)
+    assert v_acc <= v_plain
+
+
+def test_schedule_acceleration_validation():
+    with pytest.raises(ValueError, match="acceleration"):
+        Schedule(acceleration=1.5)
+    with pytest.raises(ValueError, match="acceleration"):
+        Schedule(acceleration=-0.2)
+    assert Schedule(acceleration=0.0).acceleration == 0.0
+    assert Schedule().acceleration is None
+
+
+# ---------------------------------------------------------------------------
+# acceleration=0 bit-identity, runtime override, convergence
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["vmap", "pallas", "mesh"])
+def test_acceleration_zero_bit_identical_to_plain(backend):
+    """The zero coefficient selects the plain combine out of the program
+    (jnp.where, not a multiply), so sdca_acc(0) == sdca bitwise --
+    iterates, history, and RNG chain -- on every backend."""
+    topo = _star(backend)
+    prob = _problem(topo)
+    key = jax.random.PRNGKey(0)
+    plain = Session.compile(prob, topo, backend=backend).run(key=key)
+    acc0 = Session.compile(prob, topo, Schedule(acceleration=0.0),
+                           backend=backend).run(key=key)
+    np.testing.assert_array_equal(np.asarray(acc0.alpha),
+                                  np.asarray(plain.alpha))
+    np.testing.assert_array_equal(np.asarray(acc0.w), np.asarray(plain.w))
+    np.testing.assert_array_equal(np.asarray(acc0.next_key),
+                                  np.asarray(plain.next_key))
+    assert [h["gap"] for h in acc0.history] == \
+        [h["gap"] for h in plain.history]
+
+
+def test_acceleration_is_a_runtime_operand():
+    """run(acceleration=) swaps the coefficient without recompiling and
+    matches a session compiled at that value bit for bit."""
+    topo = _star("vmap")
+    prob = _problem(topo)
+    key = jax.random.PRNGKey(3)
+    sess = Session.compile(prob, topo, Schedule(acceleration=0.7))
+    override = sess.run(key=key, acceleration=0.3)
+    compiled = Session.compile(prob, topo, Schedule(acceleration=0.3)).run(
+        key=key)
+    np.testing.assert_array_equal(np.asarray(override.alpha),
+                                  np.asarray(compiled.alpha))
+    np.testing.assert_array_equal(np.asarray(override.w),
+                                  np.asarray(compiled.w))
+    # the coefficient is NOT an executor cache axis: both values run the
+    # same compiled program
+    with pytest.raises(ValueError, match="acceleration"):
+        sess.run(key=key, acceleration=2.0)
+
+
+def test_acceleration_speeds_convergence():
+    """The point of the flavor: at equal rounds the momentum run reaches a
+    strictly smaller duality gap on the paper's star topology."""
+    topo = Topology.star(8, 32, rounds=40, local_steps=8)
+    X, y = gaussian_regression(m=256, d=24)
+    prob = Problem(X, y, loss="squared", lam=LAM)
+    key = jax.random.PRNGKey(0)
+    plain = Session.compile(prob, topo).run(key=key)
+    acc = Session.compile(prob, topo, Schedule(acceleration=0.6)).run(
+        key=key)
+    assert acc.history[-1]["gap"] < 0.5 * plain.history[-1]["gap"]
+
+
+def test_acceleration_composition_validations(tmp_path):
+    """Loud failures instead of silently-wrong runs: the override needs an
+    accelerated session, and straggler/checkpoint don't compose."""
+    from repro.runtime.fault import CheckpointPolicy
+    from repro.runtime.straggler import StragglerPolicy
+    topo = _star("vmap")
+    prob = _problem(topo)
+    plain = Session.compile(prob, topo)
+    with pytest.raises(ValueError, match="Schedule\\(acceleration"):
+        plain.run(acceleration=0.5)
+    sess = Session.compile(prob, topo, Schedule(acceleration=0.5))
+    with pytest.raises(ValueError, match="straggler"):
+        sess.run(straggler=StragglerPolicy(max_consecutive=1, seed=0))
+    with pytest.raises(ValueError, match="checkpoint"):
+        sess.run(checkpoint=CheckpointPolicy(directory=tmp_path, every=1))

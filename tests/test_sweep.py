@@ -4,8 +4,10 @@ The load-bearing claims:
 
   * every RunSet member is BIT-identical to the corresponding standalone
     ``Session.run`` -- on the batched host paths (vmap / pallas, where a
-    (lambda x seed) grid runs as ONE vmapped chunk program) and on the
-    sequential mesh path alike, histories included;
+    (lambda x seed) grid runs as ONE vmapped chunk program), on the
+    batched mesh path (vmap INSIDE shard_map, both sync lowerings), and
+    through the batched state-carry executors (compressed / accelerated
+    groups) alike, histories included;
   * lambda is a runtime executor input: a lambda grid costs ONE executor
     build (cache stats), and sessions compiled at different lambdas share
     one jit program;
@@ -77,23 +79,29 @@ def test_sweep_members_bit_identical_to_single_runs(backend):
                                       np.asarray(single.next_key))
 
 
-def test_sweep_mesh_backend_members_match():
-    """The mesh path (sequential members over one cached lambda-free
-    device program) is bit-identical to standalone mesh runs."""
+@pytest.mark.parametrize("sync", ["psum", "reduce_scatter"])
+def test_sweep_mesh_backend_members_match(sync):
+    """The mesh path fuses the whole (lambda x seed) grid into ONE
+    batched device program (vmap inside shard_map) and stays bit-identical
+    to standalone mesh runs -- iterates, histories, AND the RNG chain --
+    under both sync lowerings."""
     n = len(jax.devices())
     topo = Topology.star(n, 128 // n, rounds=4, local_steps=24)
     X, y = gaussian_regression(m=128, d=8)
-    sess = Session.compile(Problem(X, y, lam=LAM), topo, backend="mesh")
+    sess = Session.compile(Problem(X, y, lam=LAM), topo, backend="mesh",
+                           mesh_sync=sync)
     rs = sess.sweep(lams=[0.05, 0.4], seeds=[0, 3])
     for pt in rs.points:
         single = Session.compile(
-            Problem(X, y, lam=pt.lam), topo, backend="mesh").run(
-            key=jax.random.PRNGKey(pt.seed))
+            Problem(X, y, lam=pt.lam), topo, backend="mesh",
+            mesh_sync=sync).run(key=jax.random.PRNGKey(pt.seed))
         mem = rs[pt.index]
         np.testing.assert_array_equal(np.asarray(mem.alpha),
                                       np.asarray(single.alpha))
         np.testing.assert_array_equal(np.asarray(mem.w),
                                       np.asarray(single.w))
+        np.testing.assert_array_equal(np.asarray(mem.next_key),
+                                      np.asarray(single.next_key))
         assert [h["gap"] for h in mem.history] == \
             [h["gap"] for h in single.history]
 
@@ -632,3 +640,119 @@ def test_one_shot_sweep_matches_session_sweep():
                                           continuation=True)
     with pytest.raises(ValueError, match="not both"):
         sweep(prob, topo, Sweep(lams=[0.1, 0.2]), mode="zip")
+
+
+# ---------------------------------------------------------------------------
+# fused stateful / accelerated / continuation groups
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["vmap", "mesh"])
+def test_sweep_compressed_members_bit_identical(backend):
+    """Compressed plans fuse too: the per-member EF residuals ride the
+    batched state-carry executor, and every member stays bit-identical
+    to its standalone compressed run (histories and RNG chain included)."""
+    n = len(jax.devices())
+    topo = (Topology.star(n, 128 // n, rounds=4, local_steps=16)
+            if backend == "mesh" else _small_star())
+    X, y = gaussian_regression(m=topo.m_total, d=8)
+    prob = Problem(X, y, loss="squared", lam=LAM)
+    sched = Schedule(compression="topk_0.25")
+    sess = Session.compile(prob, topo, sched, backend=backend)
+    rs = sess.sweep(lams=[0.05, 0.4], seeds=[0, 2])
+    for pt in rs.points:
+        single = Session.compile(
+            Problem(X, y, loss="squared", lam=pt.lam), topo, sched,
+            backend=backend).run(key=jax.random.PRNGKey(pt.seed))
+        mem = rs[pt.index]
+        np.testing.assert_array_equal(np.asarray(mem.alpha),
+                                      np.asarray(single.alpha))
+        np.testing.assert_array_equal(np.asarray(mem.w),
+                                      np.asarray(single.w))
+        np.testing.assert_array_equal(np.asarray(mem.next_key),
+                                      np.asarray(single.next_key))
+        assert [h["gap"] for h in mem.history] == \
+            [h["gap"] for h in single.history]
+
+
+@pytest.mark.parametrize("backend", ["vmap", "mesh"])
+def test_sweep_accelerated_members_bit_identical(backend):
+    """Accelerated (server-momentum) groups fuse through the same batched
+    state carry: members match standalone accelerated runs bit for bit."""
+    n = len(jax.devices())
+    topo = (Topology.star(n, 128 // n, rounds=4, local_steps=16)
+            if backend == "mesh" else _small_star())
+    X, y = gaussian_regression(m=topo.m_total, d=8)
+    prob = Problem(X, y, loss="squared", lam=LAM)
+    sched = Schedule(acceleration=0.5)
+    sess = Session.compile(prob, topo, sched, backend=backend)
+    rs = sess.sweep(lams=[0.05, 0.4], seeds=[0, 2])
+    for pt in rs.points:
+        single = Session.compile(
+            Problem(X, y, loss="squared", lam=pt.lam), topo, sched,
+            backend=backend).run(key=jax.random.PRNGKey(pt.seed))
+        mem = rs[pt.index]
+        np.testing.assert_array_equal(np.asarray(mem.alpha),
+                                      np.asarray(single.alpha))
+        np.testing.assert_array_equal(np.asarray(mem.w),
+                                      np.asarray(single.w))
+        np.testing.assert_array_equal(np.asarray(mem.next_key),
+                                      np.asarray(single.next_key))
+        assert [h["gap"] for h in mem.history] == \
+            [h["gap"] for h in single.history]
+
+
+def test_continuation_with_seed_axis_fuses_per_stage():
+    """A (lambda x seed) continuation grid runs ONE batched program per
+    lambda stage; each seed's chain is an independent warm-started path,
+    bit-identical to running that chain by hand."""
+    from repro.core.dual import w_of_alpha
+    topo = _star()
+    prob = _problem(topo)
+    X = prob.X
+    lams, seeds = [1.0, 0.1], [0, 7]
+    sess = Session.compile(prob, topo)
+    rs = sess.sweep(lams=lams, seeds=seeds, continuation=True,
+                    record_history=False)
+    for seed in seeds:
+        first = sess.run(key=jax.random.PRNGKey(seed), lam=lams[0],
+                         record_history=False)
+        second = sess.run(
+            key=jax.random.PRNGKey(seed), lam=lams[1],
+            warm_start=(first.alpha, w_of_alpha(first.alpha, X, lams[1])),
+            record_history=False)
+        by_pt = {(pt.lam, pt.seed): rs[pt.index] for pt in rs.points}
+        np.testing.assert_array_equal(
+            np.asarray(by_pt[(lams[0], seed)].alpha),
+            np.asarray(first.alpha))
+        np.testing.assert_array_equal(
+            np.asarray(by_pt[(lams[1], seed)].alpha),
+            np.asarray(second.alpha))
+        np.testing.assert_array_equal(
+            np.asarray(by_pt[(lams[1], seed)].w), np.asarray(second.w))
+
+
+def test_sweep_fused_paths_bypass_sequential(monkeypatch):
+    """Mesh, compressed, accelerated, and continuation sweeps all take the
+    batched dispatch -- the per-member sequential fallback is reserved for
+    checkpointed stateful fleets and must not be reached here."""
+    import importlib
+    sweep_mod = importlib.import_module("repro.api.sweep")
+
+    def _boom(*args, **kwargs):                     # pragma: no cover
+        raise AssertionError("sequential fallback must not run")
+
+    monkeypatch.setattr(sweep_mod, "_run_group_sequential", _boom)
+    topo = _small_star()
+    prob = _problem(topo)
+    n = len(jax.devices())
+    mtopo = Topology.star(n, 64 // n, rounds=3, local_steps=8)
+    mX, my = gaussian_regression(m=64, d=8)
+    mprob = Problem(mX, my, loss="squared", lam=LAM)
+
+    Session.compile(mprob, mtopo, backend="mesh").sweep(
+        lams=[0.1, 0.3], record_history=False)
+    Session.compile(prob, topo, Schedule(compression="int8")).sweep(
+        lams=[0.1, 0.3], record_history=False)
+    Session.compile(prob, topo, Schedule(acceleration=0.3)).sweep(
+        lams=[0.1, 0.3], record_history=False)
+    Session.compile(prob, topo).sweep(
+        lams=[0.5, 0.1], continuation=True, record_history=False)
